@@ -1,0 +1,73 @@
+"""Shared benchmark substrate: one small trained model + calibration data.
+
+The paper evaluates PTQ on pretrained Llama checkpoints; offline we train a
+~10M-param llama-block model on the synthetic stream until it clearly learns
+(loss ~ ln(V) -> ~2.5), cache it under experiments/bench_model, and run every
+paper experiment against it. 20% of the eval stream is used for calibration
+(matching the paper's split).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import numpy as np
+
+from repro.configs.llama3_1b import bench_config
+from repro.core.sensitivity import calibrate_sensitivity
+from repro.data.synthetic import SyntheticConfig, SyntheticLM
+from repro.launch.mesh import make_local_mesh
+from repro.models.registry import build_model
+from repro.quant.qops import QuantContext
+from repro.train.optim import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+BENCH_DIR = os.environ.get("REPRO_BENCH_DIR", "experiments/bench_model")
+TRAIN_STEPS = int(os.environ.get("REPRO_BENCH_STEPS", "150"))
+
+
+@functools.cache
+def bench_model():
+    cfg = bench_config()
+    model = build_model(cfg)
+    data = SyntheticLM(SyntheticConfig(vocab_size=cfg.vocab_size, batch=8,
+                                       seq_len=96, seed=5))
+    mesh = make_local_mesh(1, 1)
+    tr = Trainer(model, OptConfig(lr=1e-3, warmup_steps=20,
+                                  total_steps=TRAIN_STEPS),
+                 mesh, TrainerConfig(total_steps=TRAIN_STEPS, ckpt_every=100,
+                                     ckpt_dir=BENCH_DIR, log_every=100))
+    params, _, last_loss = tr.fit(data)
+    return model, params, data, last_loss
+
+
+@functools.cache
+def bench_sensitivity():
+    model, params, data, _ = bench_model()
+    calib = [data.batch_at(10_000 + i) for i in range(3)]
+    sens = calibrate_sensitivity(lambda p, b, c: model.loss(p, b, c),
+                                 params, calib)
+    return sens
+
+
+def eval_metrics(model, params, data, assignment=None, n_batches=4,
+                 start=20_000):
+    """(mean loss, next-token accuracy) on held-out batches."""
+    import jax.numpy as jnp
+    ctx = (QuantContext(mode="mp", mp=assignment) if assignment
+           else QuantContext())
+    losses, accs = [], []
+    fwd = jax.jit(lambda p, t: model.apply(p, t, ctx))
+    lossf = jax.jit(lambda p, b: model.loss(p, b, ctx))
+    for i in range(n_batches):
+        b = data.batch_at(start + i)
+        losses.append(float(lossf(params, b)))
+        logits = fwd(params, b["tokens"])
+        pred = jnp.argmax(logits, axis=-1)
+        accs.append(float(jnp.mean(pred == b["labels"])))
+    return float(np.mean(losses)), float(np.mean(accs))
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")

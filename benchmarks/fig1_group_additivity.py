@@ -1,0 +1,69 @@
+"""Paper Fig. 1: per-group time-gain measurement vs sum of per-layer
+measurements for the attention sub-graph (q,k,v,qk,av = 2^5 configs).
+
+On this host the quantized path is *simulated*, so absolute gains are
+CPU-specific; the claim under test is structural: summing per-layer
+measurements does NOT reproduce the jointly-measured group value, while the
+group measurement is self-consistent. We report the mean absolute
+discrepancy between the two estimators, plus the theoretical-time curve
+(Sec. 2.3.2) for reference.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_model, bench_sensitivity, emit
+from repro.core.pipeline import AMPOptions, build_groups
+from repro.core.timegain import TheoreticalGainModel, WallClockGainModel, enumerate_combos
+from repro.hw.profiles import TPU_V5E
+from repro.quant.qops import QuantContext
+
+import jax
+
+
+def main() -> None:
+    model, params, data, _ = bench_model()
+    sens = bench_sensitivity()
+    op_index = {o.name: o for o in sens.ops}
+    _, groups = build_groups(model, AMPOptions())
+    attn_group = next(g for g in groups if any("qk_matmul" in n for n in g))
+    ops = [op_index[n] for n in attn_group]
+    toks = data.batch_at(0)["tokens"][:4, :64]
+
+    def factory(assignment):
+        ctx = QuantContext(mode="mp", mp=assignment) if assignment else QuantContext()
+        fn = jax.jit(lambda p, t: model.apply(p, t, ctx))
+
+        def run():
+            jax.block_until_ready(fn(params, toks))
+        return run
+
+    gm = WallClockGainModel(run_factory=factory, n_iters=5, n_warmup=2)
+    combos = enumerate_combos(len(ops), ("bf16", "fp8_e4m3"))
+    group_gains = gm.gains(ops, combos)
+
+    # per-layer gains measured independently, then summed per combo
+    per_layer = {}
+    for op in ops:
+        g = gm.gains([op], [("bf16",), ("fp8_e4m3",)])
+        per_layer[op.name] = {"bf16": g[0], "fp8_e4m3": g[1]}
+    summed = np.array([sum(per_layer[o.name][f] for o, f in zip(ops, combo))
+                       for combo in combos])
+
+    tt = TheoreticalGainModel(TPU_V5E).gains(ops, combos)
+
+    disc = np.abs(group_gains - summed)
+    base = gm.base_time()
+    print("config,group_gain_s,sum_of_layers_s,theoretical_s")
+    for combo, g, s, t in zip(combos, group_gains, summed, tt):
+        label = "".join("1" if f != "bf16" else "0" for f in combo)
+        print(f"{label},{g:.6f},{s:.6f},{t:.8f}")
+    emit("fig1.group_vs_sum_mean_abs_discrepancy_us", float(np.mean(disc)) * 1e6,
+         f"base_ttft_us={base*1e6:.1f}")
+    emit("fig1.group_gain_spread_us",
+         float(group_gains.max() - group_gains.min()) * 1e6,
+         f"n_configs={len(combos)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Paper Fig. 3: validation of the two additivity assumptions.
+
+(a) loss-MSE model: theoretical d = sum_l s_l alpha_f (eq. 6/23) vs the
+    measured E[(g_hat - g)^2] for IP-selected configurations across tau.
+(b) time-gain additivity: sum of per-group measured gains vs the end-to-end
+    measured gain of the full MP configuration (wall-clock tier).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import bench_model, bench_sensitivity, emit
+from repro.core.pipeline import AMPOptions, auto_mixed_precision
+from repro.core.timegain import WallClockGainModel
+from repro.quant.qops import QuantContext
+
+
+def main() -> None:
+    model, params, data, _ = bench_model()
+    sens = bench_sensitivity()
+    eval_batches = [data.batch_at(30_000 + i) for i in range(6)]
+    loss_ref = jax.jit(lambda p, b: model.loss(p, b, QuantContext()))
+    refs = [float(loss_ref(params, b)) for b in eval_batches]
+
+    print("tau,predicted_mse,measured_mse,n_quantized")
+    ratios = []
+    for tau in (0.001, 0.002, 0.005, 0.01, 0.02, 0.05):
+        plan = auto_mixed_precision(model, params, None,
+                                    AMPOptions(tau=tau, objective="TT"),
+                                    sens=sens)
+        ctx = QuantContext(mode="mp", mp=plan.assignment)
+        lm = jax.jit(lambda p, b: model.loss(p, b, ctx))
+        errs = [(float(lm(params, b)) - r) ** 2
+                for b, r in zip(eval_batches, refs)]
+        measured = float(np.mean(errs))
+        print(f"{tau},{plan.predicted_loss_mse:.4e},{measured:.4e},"
+              f"{plan.n_quantized}")
+        if measured > 0 and plan.predicted_loss_mse > 0:
+            ratios.append(plan.predicted_loss_mse / measured)
+    emit("fig3a.pred_over_measured_mse_median", 0.0,
+         f"ratio={np.median(ratios):.3f}")
+
+    # (b) additivity of measured time gains across groups
+    plan = auto_mixed_precision(model, params, None,
+                                AMPOptions(tau=0.02, objective="TT"),
+                                sens=sens)
+    toks = data.batch_at(0)["tokens"][:4, :64]
+
+    def factory(assignment):
+        c = QuantContext(mode="mp", mp=assignment) if assignment else QuantContext()
+        fn = jax.jit(lambda p, t: model.apply(p, t, c))
+
+        def run():
+            jax.block_until_ready(fn(params, toks))
+        return run
+
+    gm = WallClockGainModel(run_factory=factory, n_iters=7, n_warmup=2)
+    total = 0.0
+    for group in plan.groups:
+        sub = {n: plan.assignment[n] for n in group if n in plan.assignment}
+        if not sub:
+            continue
+        t = gm._time(sub)
+        total += gm.base_time() - t
+    t_full = gm._time(plan.assignment)
+    measured_full = gm.base_time() - t_full
+    emit("fig3b.sum_group_gains_us", total * 1e6,
+         f"measured_full_us={measured_full*1e6:.1f}")
+
+
+if __name__ == "__main__":
+    main()

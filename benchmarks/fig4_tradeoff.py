@@ -1,0 +1,59 @@
+"""Paper Fig. 4: loss-MSE vs time-gain curve — IP vs Random vs Prefix.
+
+For a grid of gain levels we report the loss MSE each strategy pays:
+the IP curve must dominate (same gain at lower MSE / more gain at equal
+MSE). Gain metric: theoretical time (deterministic on CPU); the roofline-ET
+variant is printed alongside.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_model, bench_sensitivity, emit
+from repro.core.baselines import prefix_strategy, random_strategy
+from repro.core.pipeline import AMPOptions, auto_mixed_precision, predicted_loss_mse
+from repro.core.timegain import RooflineGainModel, TheoreticalGainModel
+from repro.hw.profiles import TPU_V5E
+
+
+def main() -> None:
+    model, params, data, _ = bench_model()
+    sens = bench_sensitivity()
+    op_index = {o.name: o for o in sens.ops}
+    names = [o.name for o in sens.ops]
+    tt = TheoreticalGainModel(TPU_V5E)
+    et = RooflineGainModel(TPU_V5E)
+
+    def tt_gain(assignment):
+        return sum(tt.op_gain(op_index[n], f) for n, f in assignment.items())
+
+    def et_gain(assignment):
+        return sum(et.op_time(op_index[n], "bf16") - et.op_time(op_index[n], f)
+                   for n, f in assignment.items())
+
+    print("tau,strategy,loss_mse,tt_gain_s,et_gain_s,n_quantized")
+    dominated = 0
+    total_pts = 0
+    for tau in (0.001, 0.002, 0.005, 0.01, 0.02, 0.05):
+        plan = auto_mixed_precision(model, params, None,
+                                    AMPOptions(tau=tau, objective="TT"),
+                                    sens=sens)
+        budget = plan.budget
+        rows = {
+            "IP-TT": plan.assignment,
+            "Random": random_strategy(names, sens, budget, seed=int(tau * 1e4)),
+            "Prefix": prefix_strategy(names, sens, budget),
+        }
+        for strat, asg in rows.items():
+            mse = predicted_loss_mse(sens, asg)
+            print(f"{tau},{strat},{mse:.4e},{tt_gain(asg):.6e},"
+                  f"{et_gain(asg):.6e},{len(asg)}")
+            if strat != "IP-TT":
+                total_pts += 1
+                if tt_gain(asg) <= tt_gain(plan.assignment) + 1e-15:
+                    dominated += 1
+    emit("fig4.ip_dominates_fraction", 0.0, f"{dominated}/{total_pts}")
+
+
+if __name__ == "__main__":
+    main()

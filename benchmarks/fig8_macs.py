@@ -1,0 +1,42 @@
+"""Paper Fig. 8 (App. C.2): accuracy difference vs theoretical MAC-based
+time gain, comparing IP-TT / Random / Prefix."""
+from __future__ import annotations
+
+from benchmarks.common import bench_model, bench_sensitivity, emit, eval_metrics
+from repro.core.baselines import prefix_strategy, random_strategy
+from repro.core.pipeline import AMPOptions, auto_mixed_precision
+from repro.core.timegain import TheoreticalGainModel
+from repro.hw.profiles import TPU_V5E
+
+
+def main() -> None:
+    model, params, data, _ = bench_model()
+    sens = bench_sensitivity()
+    names = [o.name for o in sens.ops]
+    op_index = {o.name: o for o in sens.ops}
+    gm = TheoreticalGainModel(TPU_V5E)
+    loss0, acc0 = eval_metrics(model, params, data)
+
+    def gain(asg):
+        return sum(gm.op_gain(op_index[n], f) for n, f in asg.items())
+
+    print("strategy,tau,tt_gain_s,d_acc")
+    best = {}
+    for tau in (0.002, 0.01, 0.05):
+        plan = auto_mixed_precision(model, params, None,
+                                    AMPOptions(tau=tau, objective="TT"),
+                                    sens=sens)
+        budget = plan.budget
+        for strat, asg in (("IP-TT", plan.assignment),
+                           ("Random", random_strategy(names, sens, budget,
+                                                      seed=9)),
+                           ("Prefix", prefix_strategy(names, sens, budget))):
+            _, acc = eval_metrics(model, params, data, assignment=asg,
+                                  n_batches=3)
+            print(f"{strat},{tau},{gain(asg):.6e},{acc - acc0:+.4f}")
+            best.setdefault(strat, []).append(gain(asg))
+    emit("fig8.ip_tt_gain_at_tau0.05", 0.0, f"{max(best['IP-TT']):.4e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Fig. 9 (App. C.3): accuracy difference vs total weight memory
+under IP-M / Random / Prefix (linear layers only, eq. 25)."""
+from __future__ import annotations
+
+from benchmarks.common import bench_model, bench_sensitivity, emit, eval_metrics
+from repro.core.baselines import prefix_strategy, random_strategy
+from repro.core.pipeline import AMPOptions, auto_mixed_precision
+from repro.core.timegain import MemoryGainModel
+
+
+def main() -> None:
+    model, params, data, _ = bench_model()
+    sens = bench_sensitivity()
+    gm = MemoryGainModel()
+    op_index = {o.name: o for o in sens.ops}
+    lin_names = [o.name for o in sens.ops if o.kind == "linear"]
+    total_bytes = sum(o.weight_elems * 2 for o in sens.ops)
+    loss0, acc0 = eval_metrics(model, params, data)
+
+    def mem_after(asg):
+        saved = sum(gm.op_gain(op_index[n], f) for n, f in asg.items())
+        return total_bytes - saved
+
+    print("strategy,tau,model_MB,d_acc")
+    for tau in (0.002, 0.01, 0.05):
+        plan = auto_mixed_precision(model, params, None,
+                                    AMPOptions(tau=tau, objective="M"),
+                                    sens=sens)
+        budget = plan.budget
+        for strat, asg in (("IP-M", plan.assignment),
+                           ("Random", random_strategy(lin_names, sens, budget,
+                                                      seed=4)),
+                           ("Prefix", prefix_strategy(lin_names, sens, budget))):
+            _, acc = eval_metrics(model, params, data, assignment=asg,
+                                  n_batches=3)
+            print(f"{strat},{tau},{mem_after(asg)/1e6:.2f},{acc - acc0:+.4f}")
+    emit("fig9.bf16_model_MB", 0.0, f"{total_bytes/1e6:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Kernel microbenchmarks.
+
+Interpret-mode executes kernel bodies in Python (correctness only), so the
+timing rows measure the XLA lowering of the *same computation* (the
+deployment fallback path) plus the interpret-mode allclose check per shape.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ops, ref
+from repro.kernels.quant_cast import quantize_fp8
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> None:
+    key = jax.random.key(0)
+    print("kernel,shape,us_xla_path,interpret_ok")
+    for (M, K, N) in ((256, 512, 256), (512, 1024, 512)):
+        x = jax.random.normal(key, (M, K), jnp.float32)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (N, K), jnp.float32)
+        xq, sx = quantize_fp8(x, interpret=True)
+        wq, sw = quantize_fp8(w, interpret=True)
+        want = ref.fp8_matmul_ref(xq, wq, sx, sw)
+        from repro.kernels import fp8_matmul
+        got = fp8_matmul(xq, wq, sx, sw, block_m=128, block_n=128,
+                         block_k=256, interpret=True)
+        ok = bool(np.allclose(np.asarray(got, np.float32),
+                              np.asarray(want, np.float32), rtol=2e-2,
+                              atol=2e-2))
+        fn = jax.jit(lambda a, b, s1, s2: ref.fp8_matmul_ref(a, b, s1, s2))
+        us = _time(fn, xq, wq, sx, sw)
+        print(f"fp8_matmul,{M}x{K}x{N},{us:.1f},{ok}")
+        emit(f"kernels.fp8_matmul_{M}x{K}x{N}", us, f"allclose={ok}")
+
+    B, H, T, D = 2, 4, 512, 64
+    q = jax.random.normal(key, (B, H, T, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 2), (B, H, T, D), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 3), (B, H, T, D), jnp.float32)
+    from repro.kernels import mp_flash_attention
+    got = mp_flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                             interpret=True)
+    want = ref.mp_flash_attention_ref(q, k, v, causal=True)
+    ok = bool(np.allclose(np.asarray(got, np.float32),
+                          np.asarray(want, np.float32), rtol=5e-2, atol=5e-3))
+    fn = jax.jit(lambda a, b, c: ref.mp_flash_attention_ref(a, b, c))
+    us = _time(fn, q, k, v)
+    emit(f"kernels.mp_flash_attention_{B}x{H}x{T}x{D}", us, f"allclose={ok}")
+
+
+if __name__ == "__main__":
+    main()

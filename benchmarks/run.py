@@ -1,0 +1,37 @@
+"""Run every paper-table/figure benchmark; prints ``name,us_per_call,derived``
+CSV lines (via common.emit) interleaved with the per-benchmark tables."""
+from __future__ import annotations
+
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig1_group_additivity, fig3_validation,
+                            fig4_tradeoff, fig8_macs, fig9_memory,
+                            kernels_bench, table1_accuracy)
+    benches = [
+        ("fig1_group_additivity", fig1_group_additivity.main),
+        ("fig3_validation", fig3_validation.main),
+        ("fig4_tradeoff", fig4_tradeoff.main),
+        ("table1_accuracy", table1_accuracy.main),
+        ("fig8_macs", fig8_macs.main),
+        ("fig9_memory", fig9_memory.main),
+        ("kernels_bench", kernels_bench.main),
+    ]
+    failures = 0
+    for name, fn in benches:
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+            print(f"[{name}] done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmarks failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Table 1: accuracy / loss deltas across MP strategies.
+
+For each strategy (IP-ET, IP-TT, IP-M, Random, Prefix) at a tau grid we
+report, on held-out synthetic eval data: delta eval loss (ppl proxy) and
+delta next-token accuracy vs the BF16 model — averaged over the tau grid,
+mirroring the paper's averaging over configurations.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_model, bench_sensitivity, emit, eval_metrics
+from repro.core.baselines import prefix_strategy, random_strategy
+from repro.core.pipeline import AMPOptions, auto_mixed_precision
+
+TAUS = (0.002, 0.005, 0.01, 0.02)
+
+
+def main() -> None:
+    model, params, data, _ = bench_model()
+    sens = bench_sensitivity()
+    names = [o.name for o in sens.ops]
+    loss0, acc0 = eval_metrics(model, params, data)
+    print(f"# bf16 reference: loss={loss0:.4f} acc={acc0:.4f}")
+    print("strategy,tau,d_loss,d_acc,n_quantized")
+
+    agg = {}
+    for tau in TAUS:
+        plans = {}
+        for obj in ("ET", "TT", "M"):
+            plans[f"IP-{obj}"] = auto_mixed_precision(
+                model, params, None, AMPOptions(tau=tau, objective=obj),
+                sens=sens).assignment
+        budget = tau ** 2 * sens.loss_sq_mean
+        plans["Random"] = random_strategy(names, sens, budget,
+                                          seed=int(tau * 1e5))
+        plans["Prefix"] = prefix_strategy(names, sens, budget)
+        for strat, asg in plans.items():
+            loss, acc = eval_metrics(model, params, data, assignment=asg)
+            d_loss, d_acc = loss - loss0, acc - acc0
+            print(f"{strat},{tau},{d_loss:+.4f},{d_acc:+.4f},{len(asg)}")
+            agg.setdefault(strat, []).append((d_loss, d_acc))
+
+    print("strategy,avg_d_loss,avg_d_acc")
+    for strat, vals in agg.items():
+        dl = np.mean([v[0] for v in vals])
+        da = np.mean([v[1] for v in vals])
+        print(f"{strat},{dl:+.4f},{da:+.4f}")
+        emit(f"table1.{strat}.avg_d_loss", 0.0, f"{dl:+.5f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Drive the multi-pod dry-run for one (arch x shape) cell and pretty-print
+the memory/cost/roofline evidence.
+
+    PYTHONPATH=src python examples/multipod_dryrun.py --arch qwen2p5_32b \
+        --shape prefill_32k --mesh multi
+"""
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2p5_3b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--mesh", default="single", choices=("single", "multi"))
+    args = ap.parse_args()
+
+    # dryrun must own the import order (forces 512 host devices pre-jax)
+    from repro.launch.dryrun import run_cell
+    rec = run_cell(args.arch, args.shape, args.mesh == "multi")
+    rec.pop("traceback", None)
+    roof = rec.get("roofline", {})
+    roof.pop("meta", None)
+    print(json.dumps(rec, indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Full PTQ pipeline on a trained checkpoint: IP-ET / IP-TT / IP-M vs the
+Random and Prefix baselines — the paper's Table-1 style comparison.
+
+    PYTHONPATH=src python examples/ptq_pipeline.py [--tau 0.01]
+
+Trains (or resumes) the small benchmark model, then for each strategy
+reports the eval-loss delta, the predicted TPU-v5e time gain, and the
+weight-memory gain of the produced MP configuration.
+"""
+import argparse
+
+import numpy as np
+
+from benchmarks.common import bench_model, bench_sensitivity, eval_metrics
+from repro.core.baselines import prefix_strategy, random_strategy
+from repro.core.pipeline import AMPOptions, auto_mixed_precision, predicted_loss_mse
+from repro.core.timegain import MemoryGainModel, RooflineGainModel
+from repro.hw.profiles import TPU_V5E
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tau", type=float, default=0.01)
+    args = ap.parse_args()
+
+    model, params, data, train_loss = bench_model()
+    sens = bench_sensitivity()
+    names = [o.name for o in sens.ops]
+    op_index = {o.name: o for o in sens.ops}
+    et = RooflineGainModel(TPU_V5E)
+    mg = MemoryGainModel()
+
+    loss0, acc0 = eval_metrics(model, params, data)
+    print(f"bf16 reference: eval loss {loss0:.4f}, acc {acc0:.4f}\n")
+
+    plans = {}
+    for obj in ("ET", "TT", "M"):
+        plans[f"IP-{obj}"] = auto_mixed_precision(
+            model, params, None, AMPOptions(tau=args.tau, objective=obj),
+            sens=sens).assignment
+    budget = args.tau ** 2 * sens.loss_sq_mean
+    plans["Random"] = random_strategy(names, sens, budget, seed=1)
+    plans["Prefix"] = prefix_strategy(names, sens, budget)
+
+    print(f"{'strategy':8s} {'d_loss':>9s} {'d_acc':>8s} {'pred_mse':>10s} "
+          f"{'et_gain_us':>11s} {'mem_gain_MB':>11s} {'n_fp8':>5s}")
+    for strat, asg in plans.items():
+        loss, acc = eval_metrics(model, params, data, assignment=asg)
+        etg = sum(et.op_time(op_index[n], "bf16") - et.op_time(op_index[n], f)
+                  for n, f in asg.items())
+        mgb = sum(mg.op_gain(op_index[n], f) for n, f in asg.items())
+        print(f"{strat:8s} {loss-loss0:+9.4f} {acc-acc0:+8.4f} "
+              f"{predicted_loss_mse(sens, asg):10.3e} {etg*1e6:11.2f} "
+              f"{mgb/1e6:11.2f} {len(asg):5d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Serve a model with batched requests under an MP configuration:
+measures TTFT (the paper's metric) and decode throughput, BF16 vs IP-chosen
+FP8 mixed precision.
+
+    PYTHONPATH=src python examples/serve_mp.py [--tau 0.01] [--new-tokens 16]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_model, bench_sensitivity
+from repro.core.pipeline import AMPOptions, auto_mixed_precision
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tau", type=float, default=0.01)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    model, params, data, _ = bench_model()
+    sens = bench_sensitivity()
+    plan = auto_mixed_precision(model, params, None,
+                                AMPOptions(tau=args.tau, objective="ET"),
+                                sens=sens)
+    print(f"MP plan quantizes {plan.n_quantized}/{plan.meta['n_ops']} ops\n")
+
+    prompt = {"tokens": data.batch_at(40_000)["tokens"][:args.batch,
+                                                        :args.prompt_len]}
+    results = {}
+    for tag, mp in (("bf16", None), ("mp-fp8", plan.assignment)):
+        eng = ServeEngine(model, mp=mp, donate=False)
+        # warmup (compile)
+        eng.generate(params, dict(prompt), max_new_tokens=2)
+        out = eng.generate(params, dict(prompt), max_new_tokens=args.new_tokens)
+        results[tag] = out
+        print(f"{tag:8s} TTFT {out.ttft_s*1e3:8.2f} ms   "
+              f"decode {out.tokens_per_s:8.1f} tok/s")
+
+    a, b = results["bf16"].tokens, results["mp-fp8"].tokens
+    agree = float(np.mean(np.asarray(a) == np.asarray(b)))
+    print(f"\ngreedy-token agreement bf16 vs mp: {agree:.2%}")
+    print("(on-host quantization is simulated; wall-clock gains appear on "
+          "accelerators with native FP8 throughput — see DESIGN.md)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""End-to-end training driver: train an LM on the synthetic stream with
+checkpointing, auto-resume and the straggler watchdog.
+
+    PYTHONPATH=src python examples/train_lm.py                 # ~4M, 150 steps
+    PYTHONPATH=src python examples/train_lm.py --preset 100m   # ~100M params
+    PYTHONPATH=src python examples/train_lm.py --arch mamba2_370m --smoke
+
+Interrupt it mid-run and re-launch: it resumes from the last checkpoint and
+reproduces the identical data stream (step-seeded).
+"""
+import argparse
+
+import jax
+
+from repro.configs.llama3_1b import bench_config
+from repro.data.synthetic import SyntheticConfig, SyntheticLM
+from repro.launch.mesh import make_local_mesh
+from repro.models.lm import LMConfig
+from repro.models.registry import build_model, get_model
+from repro.train.optim import OptConfig, select_optimizer
+from repro.train.trainer import Trainer, TrainerConfig
+
+PRESETS = {
+    # ~100M-param llama-style config (the deliverable-scale driver; slow on
+    # this CPU container — the default preset shows the same path in minutes)
+    "100m": dict(name="lm100m", n_layers=12, d_model=768, vocab_size=32000,
+                 n_heads=12, n_kv_heads=4, d_head=64, d_ff=2048,
+                 tie_embeddings=True, flash_min_seq=1 << 30, loss_chunk=256),
+    "bench": None,  # the ~4M benchmark config
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="bench", choices=list(PRESETS))
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=96)
+    ap.add_argument("--ckpt-dir", default="checkpoints/train_lm")
+    args = ap.parse_args()
+
+    if args.arch:
+        model = get_model(args.arch, smoke=args.smoke)
+    elif PRESETS[args.preset] is None:
+        model = build_model(bench_config())
+    else:
+        model = build_model(LMConfig(**PRESETS[args.preset]))
+    print(f"model: {model.cfg.name}  params={model.n_params():,}")
+
+    data = SyntheticLM(SyntheticConfig(vocab_size=model.cfg.vocab_size,
+                                       batch=args.batch, seq_len=args.seq))
+    opt = select_optimizer(model.n_params(),
+                           OptConfig(lr=1e-3, warmup_steps=20,
+                                     total_steps=args.steps))
+    mesh = make_local_mesh(1, 1)
+    tr = Trainer(model, opt, mesh,
+                 TrainerConfig(total_steps=args.steps, ckpt_every=50,
+                               ckpt_dir=args.ckpt_dir, log_every=10,
+                               metrics_path=f"{args.ckpt_dir}/metrics.jsonl"))
+    params, _, last = tr.fit(data)
+    print(f"final loss {last:.4f}; checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Perf hillclimb driver: hypothesis -> change -> re-measure (dry-run tier).
+
+Two kinds of changes:
+* pricing changes (MP format assignments): re-priced analytically via
+  ``terms_under_assignment`` (compute + memory terms); collectives unchanged.
+* structural changes (sharding rules, microbatching, cache dtype): re-lower
+  the cell via ``run_cell`` with overrides and re-derive all three terms.
+
+Usage:
+  PYTHONPATH=src python scripts/hillclimb.py --cell qwen2p5_32b:prefill_32k
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+
+import jax          # noqa: E402
+
+from repro.analysis import report    # noqa: E402
+from repro.analysis.analytic import terms_under_assignment  # noqa: E402
+from repro.configs.shapes import SHAPES  # noqa: E402
+from repro.hw.profiles import TPU_V5E    # noqa: E402
+
+
+def load_cell(arch, shape, mesh="pod16x16"):
+    path = f"experiments/dryrun/{arch}__{shape}__{mesh}.json"
+    return json.load(open(path))
+
+
+def show(tag, terms):
+    dom = max(("compute", "memory", "collective"),
+              key=lambda k: terms[f"t_{k}"])
+    print(f"{tag:44s} C={terms['t_compute']:.3e} M={terms['t_memory']:.3e} "
+          f"X={terms['t_collective']:.3e}  dom={dom}")
+    return terms
+
+
+def price_mp(rec, assignment, label):
+    """Re-price compute/memory under an MP assignment; collectives kept."""
+    base = report.refine(rec)
+    ana = report._analytic(rec["arch"], rec["shape"])
+    kind = SHAPES[rec["shape"]].kind
+    t = terms_under_assignment(ana, kind, rec["roofline"]["chips"], TPU_V5E,
+                               assignment)
+    return show(label, {**base, **t})
+
+
+def relower(arch, shape, overrides, label, mp=None):
+    from repro.launch.dryrun import run_cell
+    rec = run_cell(arch, shape, False, overrides=overrides, mp_assignment=mp)
+    jax.clear_caches()
+    if rec["status"] != "ok":
+        print(label, "FAILED:", rec["reason"][:200])
+        return None, rec
+    return show(label, report.refine(rec)), rec
+
+
+def all_fp8(rec, linear_only=False):
+    ana = report._analytic(rec["arch"], rec["shape"])
+    return {o["name"]: "fp8_e4m3" for o in ana["ops"]
+            if (o["kind"] == "linear" or not linear_only)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True)  # arch:shape
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    rec = load_cell(arch, shape)
+    show("baseline (bf16, paper-faithful shardings)", report.refine(rec))
+    price_mp(rec, all_fp8(rec), "paper IP all-FP8 (priced)")
+
+
+if __name__ == "__main__":
+    main()

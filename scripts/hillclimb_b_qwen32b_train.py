@@ -1,0 +1,37 @@
+# Hillclimb record (EXPERIMENTS.md SPerf) — re-runnable:
+# PYTHONPATH=src python scripts/<this file>
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, jax
+from repro.analysis import report
+from repro.analysis.analytic import terms_under_assignment
+from repro.hw.profiles import TPU_V5E
+from repro.distributed import sharding as shd
+from repro.launch.dryrun import run_cell
+
+ARCH, SHAPE = "qwen2p5_32b", "train_4k"
+rec = json.load(open(f"experiments/dryrun/{ARCH}__{SHAPE}__pod16x16.json"))
+base = report.refine(rec)
+def show(tag, t):
+    dom = max(("compute","memory","collective"), key=lambda k: t[f"t_{k}"])
+    print(f"{tag:56s} C={t['t_compute']:.3f} M={t['t_memory']:.3f} X={t['t_collective']:.3f} dom={dom}")
+show("B0 baseline bf16 FSDP micro4", base)
+
+# B1: fewer microbatches => FSDP regather/AR traffic scales with micro count.
+rec1 = run_cell(ARCH, SHAPE, False, overrides={"n_microbatches": 2})
+if rec1["status"] == "ok":
+    r1 = report.refine(rec1)
+    show("B1 micro4->micro2 re-lowered", r1)
+    print("   mem/dev GB:", rec1["memory_analysis"]["peak_estimate_bytes"]/1e9)
+    json.dump(rec1, open("experiments/perf/B1_qwen32b_train_micro2.json","w"), indent=2)
+jax.clear_caches()
+
+# B2: no-FSDP (ZeRO-1 only): kills embed-contraction ARs + weight gathers;
+# keeps grad AR. Memory risk: params+grads replicated over data.
+rec2 = run_cell(ARCH, SHAPE, False, overrides={"rules": shd.DEFAULT_RULES,
+                                               "n_microbatches": 4})
+if rec2["status"] == "ok":
+    r2 = report.refine(rec2)
+    show("B2 no-FSDP (ZeRO-1) micro4 re-lowered", r2)
+    print("   mem/dev GB:", rec2["memory_analysis"]["peak_estimate_bytes"]/1e9)
+    json.dump(rec2, open("experiments/perf/B2_qwen32b_train_nofsdp.json","w"), indent=2)

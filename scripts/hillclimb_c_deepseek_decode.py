@@ -1,0 +1,37 @@
+# Hillclimb record (EXPERIMENTS.md SPerf) — re-runnable:
+# PYTHONPATH=src python scripts/<this file>
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, jax
+from repro.analysis import report
+from repro.analysis.analytic import analytic_costs, terms_under_assignment
+from repro.hw.profiles import TPU_V5E
+from repro.launch.dryrun import run_cell
+
+ARCH, SHAPE = "deepseek_v3_671b", "decode_32k"
+def show(tag, t):
+    dom = max(("compute","memory","collective"), key=lambda k: t[f"t_{k}"])
+    print(f"{tag:56s} C={t['t_compute']:.4f} M={t['t_memory']:.4f} X={t['t_collective']:.4f} dom={dom}")
+
+rec3 = run_cell(ARCH, SHAPE, False, overrides={"mla_absorb_decode": True})
+if rec3["status"] == "ok":
+    ana1 = analytic_costs(ARCH, SHAPE, overrides={"mla_absorb_decode": True})
+    t = terms_under_assignment(ana1, "decode", rec3["roofline"]["chips"], TPU_V5E)
+    r3 = report.refine(rec3); r3.update(t)
+    show("C3 absorbed-MLA + seq-sharded latent cache", r3)
+    print("   mem/dev GB:", rec3["memory_analysis"]["peak_estimate_bytes"]/1e9)
+    json.dump(rec3, open("experiments/perf/C3_deepseek_decode_absorb_seqshard.json","w"), indent=2)
+    jax.clear_caches()
+    rec4 = run_cell(ARCH, SHAPE, False, overrides={"mla_absorb_decode": True,
+                                                   "param_dtype": "fp8_e4m3"})
+    if rec4["status"] == "ok":
+        fp8_lin = {o["name"]: "fp8_e4m3" for o in ana1["ops"] if o["kind"] == "linear"}
+        t4 = terms_under_assignment(ana1, "decode", 256, TPU_V5E, fp8_lin, fused_quant=True)
+        r4 = report.refine(rec4); r4.update(t4)
+        show("C4 + fp8 weights (IP-M) re-lowered", r4)
+        print("   mem/dev GB:", rec4["memory_analysis"]["peak_estimate_bytes"]/1e9)
+        json.dump(rec4, open("experiments/perf/C4_deepseek_decode_full.json","w"), indent=2)
+    else:
+        print("C4 failed:", rec4["reason"][:150])
+else:
+    print("C3 failed:", rec3["reason"][:300])

@@ -1,0 +1,153 @@
+"""Analytic FLOP/byte accounting from the quantizable-op registry.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE — scanned models
+(layer scans, microbatch scans, flash/loss chunk scans) under-report by the
+trip count, which would make the roofline table nonsense. Instead we trace a
+*counting twin* of the model (unrolled layers, un-chunked loss/MoE, reference
+attention) with ``jax.eval_shape`` — no allocation, exact global shapes — and
+sum MACs/bytes over every registered op. Backward = 2x forward FLOPs
+(standard); optimizer traffic adds 16 bytes/param (p, g, mu, nu rw amortized).
+
+Elementwise/norm traffic is not counted (matmul-centric accounting; noted in
+EXPERIMENTS.md — it underestimates the memory term by ~10-20% for dense
+models, more for SSM).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, ShapeCell, input_specs
+from repro.models.encdec import EncDec
+from repro.models.lm import LM
+from repro.models.registry import build_model, get_config
+from repro.quant.qops import QuantContext
+
+__all__ = ["counting_twin", "analytic_costs"]
+
+_BYTES = 2.0  # bf16 operand/output bytes
+
+
+def counting_twin(arch: str, cell: ShapeCell, overrides=None):
+    """Full-size config reshaped so every op registers exactly once with
+    global shapes."""
+    ov = dict(scan_layers=False, remat=False, flash_min_seq=1 << 30,
+              loss_chunk=cell.seq_len, **(overrides or {}))
+    cfg = get_config(arch)
+    if getattr(cfg, "moe", None) is not None:
+        tokens = cell.global_batch * cell.seq_len
+        ov["moe"] = dataclasses.replace(cfg.moe, token_chunk=max(tokens, 1))
+    fields = {f.name for f in dataclasses.fields(cfg)}
+    ov = {k: v for k, v in ov.items() if k in fields}
+    return build_model(get_config(arch, **ov))
+
+
+def _trace_ops(model, cell: ShapeCell) -> list:
+    registry: list = []
+    ctx = QuantContext(registry=registry)
+    ins = input_specs(model, cell)
+    if cell.kind == "train":
+        jax.eval_shape(lambda p, b: model.loss(p, b, ctx),
+                       model.abstract_params(), ins)
+    elif cell.kind == "prefill":
+        caches = _abstract_caches(model, cell)
+        if isinstance(model, EncDec):
+            jax.eval_shape(lambda p, c, b: model.prefill(
+                p, b["frames"], b["tokens"], c, ctx),
+                model.abstract_params(), caches, ins)
+        else:
+            jax.eval_shape(lambda p, c, b: model.prefill(
+                p, b["tokens"], c, ctx,
+                prefix_embeds=b.get("prefix_embeds")),
+                model.abstract_params(), caches, ins)
+    else:
+        caches = _abstract_caches(model, cell)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        jax.eval_shape(lambda p, c, t, q: model.decode_step(p, t, q, c, ctx),
+                       model.abstract_params(), caches, ins["token"], pos)
+    # dedupe exact duplicates (e.g. whisper k/v projections traced both in
+    # cross-attention and in the decode-cache precompute)
+    seen, out = set(), []
+    for op in registry:
+        key = (op.name, op.lhs_shape, op.rhs_shape)
+        if key not in seen:
+            seen.add(key)
+            out.append(op)
+    return out
+
+
+def _abstract_caches(model, cell: ShapeCell):
+    if isinstance(model, EncDec):
+        specs = model.cache_specs(cell.global_batch, cell.seq_len,
+                                  enc_len=cell.seq_len)
+        flat = {k: jax.ShapeDtypeStruct(s.shape, s.dtype)
+                for k, s in specs.items()}
+        caches = {}
+        for key, v in flat.items():
+            layer, leaf = key.rsplit("/", 1)
+            caches.setdefault(layer, {})[leaf] = v
+        return caches
+    return model.init_cache(cell.global_batch, cell.seq_len, abstract=True)
+
+
+def analytic_costs(arch: str, shape_name: str, overrides=None) -> dict:
+    """Global analytic costs for one cell: flops, bytes, param traffic.
+
+    Also returns a compact per-op table so the perf loop can re-price the
+    terms under an MP assignment without re-tracing.
+    """
+    cell = SHAPES[shape_name]
+    model = counting_twin(arch, cell, overrides)
+    ops = _trace_ops(model, cell)
+    fwd_flops = sum(2.0 * op.macs for op in ops)
+    fwd_bytes = sum(_BYTES * (math.prod(op.lhs_shape)
+                              + math.prod(op.rhs_shape)
+                              + math.prod(op.out_shape)) for op in ops)
+    n_params = sum(math.prod(s.shape) for s in model.param_specs().values())
+    if cell.kind == "train":
+        flops = 3.0 * fwd_flops
+        byts = 3.0 * fwd_bytes + 16.0 * n_params
+    else:
+        flops = fwd_flops
+        byts = fwd_bytes
+    op_table = [
+        {"name": op.name, "kind": op.kind, "macs": op.macs,
+         "lhs": math.prod(op.lhs_shape), "rhs": math.prod(op.rhs_shape),
+         "out": math.prod(op.out_shape)} for op in ops]
+    return {"flops": flops, "bytes": byts, "n_ops": len(ops),
+            "n_params": n_params, "fwd_flops": fwd_flops, "ops": op_table}
+
+
+def terms_under_assignment(ana: dict, cell_kind: str, chips: int, hw,
+                           assignment=None, ref: str = "bf16",
+                           fused_quant: bool = False) -> dict:
+    """Re-price compute/memory roofline terms under an op->format map.
+
+    Quantized ops run at the format's MXU rate; their GEMM operands move at
+    the format's byte width. Activation operands additionally pay a runtime
+    requant pass (read ref + write fmt) UNLESS ``fused_quant`` — the
+    quantize-in-producer-epilogue optimization (kernels/quant_cast fused, or
+    the mp_attention kernel quantizing probs in-register). Collectives are
+    format-independent here (activations cross the wire in bf16).
+    """
+    from repro.quant.formats import get_format
+    assignment = assignment or {}
+    ref_b = get_format(ref).bytes
+    t_c = t_m_bytes = 0.0
+    for op in ana["ops"]:
+        fmt_name = assignment.get(op["name"], ref)
+        fmt = get_format(fmt_name)
+        t_c += 2.0 * op["macs"] / hw.flops(fmt_name)
+        byts = (op["lhs"] + op["rhs"]) * fmt.bytes + op["out"] * ref_b
+        if fmt.is_quantized and not fused_quant:
+            act = op["lhs"] if op["kind"] == "linear" else op["lhs"] + op["rhs"]
+            byts += act * (ref_b + fmt.bytes)  # runtime requant pass
+        t_m_bytes += byts
+    mult = 3.0 if cell_kind == "train" else 1.0
+    t_m_bytes = t_m_bytes * mult + (16.0 * ana["n_params"]
+                                    if cell_kind == "train" else 0.0)
+    return {"t_compute": t_c * mult / chips,
+            "t_memory": t_m_bytes / chips / hw.hbm_bw}

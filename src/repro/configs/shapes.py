@@ -1,0 +1,88 @@
+"""Assigned input-shape cells and their abstract input specs.
+
+Every (arch x shape) cell lowers exactly one step function:
+* ``train_4k``   -> train_step (loss + grads + optimizer update)
+* ``prefill_32k``-> serve_step prefill (TTFT — the paper's measured metric)
+* ``decode_32k`` -> serve_step decode (1 new token, KV cache of seq_len)
+* ``long_500k``  -> serve_step decode at 524288 context — only sub-quadratic
+                    archs (SSM/hybrid); full-attention archs skip (DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.encdec import EncDec
+from repro.models.lm import LM
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+# archs with a sub-quadratic token-mixing path (may run long_500k)
+SUBQUADRATIC = {"hymba_1p5b", "mamba2_370m"}
+
+# decoder prompt length used for enc-dec prefill cells (encoder gets seq_len)
+ENCDEC_DEC_PROMPT = 128
+# image-token prefix length for the VLM stub
+VLM_PREFIX_TOKENS = 576
+
+
+def cell_supported(arch: str, shape_name: str) -> tuple:
+    """(supported, reason)."""
+    if shape_name == "long_500k" and arch not in SUBQUADRATIC:
+        return False, "full-attention arch: 524k-token decode is quadratic-KV"
+    return True, ""
+
+
+def _tok(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(model, cell: ShapeCell) -> dict:
+    """Abstract inputs for the cell's step function (no allocation)."""
+    B, S = cell.global_batch, cell.seq_len
+    cfg = model.cfg
+    if isinstance(model, EncDec):
+        if cell.kind == "train":
+            return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   jnp.bfloat16),
+                    "tokens": _tok((B, S)), "labels": _tok((B, S))}
+        if cell.kind == "prefill":
+            return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   jnp.bfloat16),
+                    "tokens": _tok((B, ENCDEC_DEC_PROMPT))}
+        return {"token": _tok((B, 1)), "pos": _tok(())}
+
+    assert isinstance(model, LM)
+    if cfg.prefix_embed:
+        P = VLM_PREFIX_TOKENS
+        if cell.kind == "train":
+            return {"tokens": _tok((B, S - P)), "labels": _tok((B, S - P)),
+                    "prefix_embeds": jax.ShapeDtypeStruct((B, P, cfg.d_model),
+                                                          jnp.bfloat16)}
+        if cell.kind == "prefill":
+            return {"tokens": _tok((B, S - P)),
+                    "prefix_embeds": jax.ShapeDtypeStruct((B, P, cfg.d_model),
+                                                          jnp.bfloat16)}
+        return {"token": _tok((B, 1)), "pos": _tok(())}
+
+    if cell.kind == "train":
+        return {"tokens": _tok((B, S)), "labels": _tok((B, S))}
+    if cell.kind == "prefill":
+        return {"tokens": _tok((B, S))}
+    return {"token": _tok((B, 1)), "pos": _tok(())}

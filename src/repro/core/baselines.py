@@ -1,0 +1,54 @@
+"""Baseline MP strategies from the paper's evaluation (Sec. 3.1).
+
+* Random — arbitrarily picks layers to quantize while the predicted loss MSE
+  stays under the budget (scattered patterns, Fig. 2 bottom).
+* Prefix — quantizes layers in sequential (topological) order until the
+  budget is reached (Fig. 2 middle).
+
+Both respect the same tau^2 E[g^2] constraint as the IP strategies.
+"""
+from __future__ import annotations
+
+import random as _random
+from typing import Optional, Sequence
+
+from repro.core.sensitivity import SensitivityResult
+from repro.quant.formats import get_format
+
+__all__ = ["random_strategy", "prefix_strategy"]
+
+
+def _d(sens: SensitivityResult, name: str, fmt: str, ref: str) -> float:
+    if fmt == ref:
+        return 0.0
+    return sens.sensitivity.get(name, 0.0) * get_format(fmt).alpha
+
+
+def random_strategy(op_names: Sequence[str], sens: SensitivityResult,
+                    budget: float, fmt: str = "fp8_e4m3", ref: str = "bf16",
+                    seed: int = 0) -> dict:
+    rng = _random.Random(seed)
+    order = list(op_names)
+    rng.shuffle(order)
+    assignment = {}
+    used = 0.0
+    for name in order:
+        d = _d(sens, name, fmt, ref)
+        if used + d <= budget:
+            assignment[name] = fmt
+            used += d
+    return assignment
+
+
+def prefix_strategy(op_names: Sequence[str], sens: SensitivityResult,
+                    budget: float, fmt: str = "fp8_e4m3",
+                    ref: str = "bf16") -> dict:
+    assignment = {}
+    used = 0.0
+    for name in op_names:  # topological order as provided
+        d = _d(sens, name, fmt, ref)
+        if used + d > budget:
+            break
+        assignment[name] = fmt
+        used += d
+    return assignment

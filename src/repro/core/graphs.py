@@ -1,0 +1,269 @@
+"""Computation-DAG builders for the model zoo.
+
+Node names of quantizable ops match the ``qops`` op names exactly (and hence
+the param paths), so the partition output indexes straight into sensitivity
+results and MP assignments. Non-quantizable vertices (norms, softmax,
+elementwise merges, residual adds) are included because they shape the
+single-entry/single-exit structure.
+
+Residual adds are recorded as *residual edges* so the partitioner can drop
+them (paper Fig. 6 note). The builders mirror the *serving* (prefill)
+computation: MTP blocks and training-only ops are excluded.
+"""
+from __future__ import annotations
+
+from repro.core.partition import GraphSpec
+from repro.models.encdec import EncDec, EncDecConfig
+from repro.models.lm import LM, LMConfig
+
+__all__ = ["build_graph"]
+
+
+def _attn_subgraph(g: GraphSpec, s: str, entry: str, swiglu_like: bool) -> str:
+    """Standard attention: returns exit node name."""
+    norm = g.add(f"{s}/attn_norm")
+    g.edge(entry, norm)
+    for proj in ("q_proj", "k_proj", "v_proj"):
+        g.add(f"{s}/attn/{proj}", quantizable=True)
+        g.edge(norm, f"{s}/attn/{proj}")
+    qk = g.add(f"{s}/attn/qk_matmul", quantizable=True)
+    g.edge(f"{s}/attn/q_proj", qk)
+    g.edge(f"{s}/attn/k_proj", qk)
+    sm = g.add(f"{s}/attn/softmax")
+    g.edge(qk, sm)
+    av = g.add(f"{s}/attn/av_matmul", quantizable=True)
+    g.edge(sm, av)
+    g.edge(f"{s}/attn/v_proj", av)
+    o = g.add(f"{s}/attn/o_proj", quantizable=True)
+    g.edge(av, o)
+    return o
+
+
+def _mla_subgraph(g: GraphSpec, s: str, entry: str) -> str:
+    norm = g.add(f"{s}/attn_norm")
+    g.edge(entry, norm)
+    g.chain(norm, g.add(f"{s}/attn/q_a_proj", True), g.add(f"{s}/attn/q_norm"),
+            g.add(f"{s}/attn/q_b_proj", True))
+    g.chain(norm, g.add(f"{s}/attn/kv_a_proj", True), g.add(f"{s}/attn/kv_norm"),
+            g.add(f"{s}/attn/kv_b_proj", True))
+    qk = g.add(f"{s}/attn/qk_matmul", True)
+    g.edge(f"{s}/attn/q_b_proj", qk)
+    g.edge(f"{s}/attn/kv_b_proj", qk)
+    sm = g.add(f"{s}/attn/softmax")
+    g.edge(qk, sm)
+    av = g.add(f"{s}/attn/av_matmul", True)
+    g.edge(sm, av)
+    g.edge(f"{s}/attn/kv_b_proj", av)
+    o = g.add(f"{s}/attn/o_proj", True)
+    g.edge(av, o)
+    return o
+
+
+def _mamba_subgraph(g: GraphSpec, s: str, entry: str) -> str:
+    norm = g.add(f"{s}/attn_norm")  # shared input norm naming from LM._block
+    g.edge(entry, norm)
+    return _mamba_shared_norm(g, s, norm)
+
+
+def _mamba_shared_norm(g: GraphSpec, s: str, norm: str) -> str:
+    """Mamba path when the input norm already exists (hybrid blocks)."""
+    inp = g.add(f"{s}/mamba/in_proj", True)
+    g.edge(norm, inp)
+    conv = g.add(f"{s}/mamba/conv")
+    g.edge(inp, conv)
+    cb = g.add(f"{s}/mamba/cb_matmul", True)
+    g.edge(conv, cb)
+    ax = g.add(f"{s}/mamba/att_x_matmul", True)
+    g.edge(cb, ax)
+    g.edge(conv, ax)
+    bx = g.add(f"{s}/mamba/bx_matmul", True)
+    g.edge(conv, bx)
+    cs = g.add(f"{s}/mamba/c_state_matmul", True)
+    g.edge(bx, cs)
+    g.edge(conv, cs)
+    merge = g.add(f"{s}/mamba/merge")
+    g.edge(ax, merge)
+    g.edge(cs, merge)
+    gate = g.add(f"{s}/mamba/gate_norm")
+    g.edge(merge, gate)
+    out = g.add(f"{s}/mamba/out_proj", True)
+    g.edge(gate, out)
+    return out
+
+
+def _mlp_subgraph(g: GraphSpec, s: str, entry: str, activation: str,
+                  scope: str = "mlp") -> str:
+    norm = g.add(f"{s}/mlp_norm")
+    g.edge(entry, norm)
+    if activation == "swiglu":
+        gate = g.add(f"{s}/{scope}/gate_proj", True)
+        up = g.add(f"{s}/{scope}/up_proj", True)
+        g.edge(norm, gate)
+        g.edge(norm, up)
+        mul = g.add(f"{s}/{scope}/glu_mul")
+        g.edge(gate, mul)
+        g.edge(up, mul)
+        pre_down = mul
+    else:
+        up = g.add(f"{s}/{scope}/up_proj", True)
+        g.edge(norm, up)
+        act = g.add(f"{s}/{scope}/act")
+        g.edge(up, act)
+        pre_down = act
+    down = g.add(f"{s}/{scope}/down_proj", True)
+    g.edge(pre_down, down)
+    return down
+
+
+def _moe_subgraph(g: GraphSpec, s: str, entry: str, activation: str,
+                  shared: bool) -> str:
+    norm = g.add(f"{s}/mlp_norm")
+    g.edge(entry, norm)
+    router = g.add(f"{s}/moe/router", True)
+    g.edge(norm, router)
+    disp = g.add(f"{s}/moe/dispatch")
+    g.edge(router, disp)
+    gate = g.add(f"{s}/moe/experts/gate_proj", True)
+    up = g.add(f"{s}/moe/experts/up_proj", True)
+    g.edge(disp, gate)
+    g.edge(disp, up)
+    mul = g.add(f"{s}/moe/glu_mul")
+    g.edge(gate, mul)
+    g.edge(up, mul)
+    down = g.add(f"{s}/moe/experts/down_proj", True)
+    g.edge(mul, down)
+    comb = g.add(f"{s}/moe/combine")
+    g.edge(down, comb)
+    exit_node = comb
+    if shared:
+        sh = _mlp_subgraph(g, f"{s}/moe", norm, activation, scope="shared")
+        # shared path merges with routed output
+        merge = g.add(f"{s}/moe/shared_merge")
+        g.edge(comb, merge)
+        g.edge(sh, merge)
+        exit_node = merge
+    return exit_node
+
+
+def build_lm_graph(cfg: LMConfig) -> GraphSpec:
+    g = GraphSpec()
+    prev = g.add("embed")
+    scopes = ([(f"segments/{s}", sig) for s, (sig, _) in enumerate(cfg.segments())]
+              if cfg.scan_layers else
+              [(f"layers/{i}", cfg.layer_signature(i)) for i in range(cfg.n_layers)])
+    for s, (block, is_moe) in scopes:
+        block_in = prev
+        if block == "attn":
+            mix_out = _attn_subgraph(g, s, prev, cfg.activation == "swiglu")
+        elif block == "mla":
+            mix_out = _mla_subgraph(g, s, prev)
+        elif block == "mamba":
+            mix_out = _mamba_subgraph(g, s, prev)
+        elif block == "hybrid":
+            norm = g.add(f"{s}/attn_norm")
+            g.edge(prev, norm)
+            # attention path (reuse the attn nodes but from the shared norm)
+            for proj in ("q_proj", "k_proj", "v_proj"):
+                g.add(f"{s}/attn/{proj}", True)
+                g.edge(norm, f"{s}/attn/{proj}")
+            qk = g.add(f"{s}/attn/qk_matmul", True)
+            g.edge(f"{s}/attn/q_proj", qk)
+            g.edge(f"{s}/attn/k_proj", qk)
+            sm = g.add(f"{s}/attn/softmax")
+            g.edge(qk, sm)
+            av = g.add(f"{s}/attn/av_matmul", True)
+            g.edge(sm, av)
+            g.edge(f"{s}/attn/v_proj", av)
+            o = g.add(f"{s}/attn/o_proj", True)
+            g.edge(av, o)
+            m_out = _mamba_shared_norm(g, s, norm)
+            mix_out = g.add(f"{s}/hybrid_merge")
+            g.edge(o, mix_out)
+            g.edge(m_out, mix_out)
+        else:
+            raise ValueError(block)
+        add1 = g.add(f"{s}/residual_1")
+        g.edge(mix_out, add1)
+        g.edge(block_in, add1, residual=True)
+        if is_moe:
+            ffn_out = _moe_subgraph(g, s, add1, cfg.activation,
+                                    cfg.moe.n_shared_experts > 0)
+        elif cfg.d_ff > 0:
+            ffn_out = _mlp_subgraph(g, s, add1, cfg.activation)
+        else:
+            prev = add1
+            continue
+        add2 = g.add(f"{s}/residual_2")
+        g.edge(ffn_out, add2)
+        g.edge(add1, add2, residual=True)
+        prev = add2
+    fn = g.add("final_norm")
+    g.edge(prev, fn)
+    head = g.add("lm_head", True)
+    g.edge(fn, head)
+    return g
+
+
+def build_encdec_graph(cfg: EncDecConfig) -> GraphSpec:
+    g = GraphSpec()
+    prev = g.add("frames")
+    for i in range(cfg.n_enc_layers):
+        s = f"enc/{i}"
+        block_in = prev
+        o = _attn_subgraph(g, s, prev, False)
+        add1 = g.add(f"{s}/residual_1")
+        g.edge(o, add1)
+        g.edge(block_in, add1, residual=True)
+        m = _mlp_subgraph(g, s, add1, cfg.activation)
+        add2 = g.add(f"{s}/residual_2")
+        g.edge(m, add2)
+        g.edge(add1, add2, residual=True)
+        prev = add2
+    enc_out = g.add("enc_final_norm")
+    g.edge(prev, enc_out)
+    prev = g.add("dec_embed")
+    g.edge(enc_out, prev)  # decoder consumes encoder output (sequentializes)
+    for i in range(cfg.n_dec_layers):
+        s = f"dec/{i}"
+        block_in = prev
+        o = _attn_subgraph(g, s, prev, False)
+        add1 = g.add(f"{s}/residual_1")
+        g.edge(o, add1)
+        g.edge(block_in, add1, residual=True)
+        # cross-attention (k/v from encoder; q from decoder stream)
+        cn = g.add(f"{s}/cross_norm")
+        g.edge(add1, cn)
+        for proj in ("q_proj", "k_proj", "v_proj"):
+            g.add(f"{s}/cross/{proj}", True)
+            g.edge(cn, f"{s}/cross/{proj}")
+        qk = g.add(f"{s}/cross/qk_matmul", True)
+        g.edge(f"{s}/cross/q_proj", qk)
+        g.edge(f"{s}/cross/k_proj", qk)
+        smx = g.add(f"{s}/cross/softmax")
+        g.edge(qk, smx)
+        av = g.add(f"{s}/cross/av_matmul", True)
+        g.edge(smx, av)
+        g.edge(f"{s}/cross/v_proj", av)
+        o2 = g.add(f"{s}/cross/o_proj", True)
+        g.edge(av, o2)
+        add_c = g.add(f"{s}/residual_cross")
+        g.edge(o2, add_c)
+        g.edge(add1, add_c, residual=True)
+        m = _mlp_subgraph(g, s, add_c, cfg.activation)
+        add2 = g.add(f"{s}/residual_2")
+        g.edge(m, add2)
+        g.edge(add_c, add2, residual=True)
+        prev = add2
+    fn = g.add("dec_final_norm")
+    g.edge(prev, fn)
+    head = g.add("lm_head", True)
+    g.edge(fn, head)
+    return g
+
+
+def build_graph(model) -> GraphSpec:
+    if isinstance(model, EncDec):
+        return build_encdec_graph(model.cfg)
+    if isinstance(model, LM):
+        return build_lm_graph(model.cfg)
+    raise TypeError(type(model))

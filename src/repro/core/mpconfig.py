@@ -1,0 +1,44 @@
+"""Mixed-precision plan: the pipeline's output artifact."""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+__all__ = ["MPPlan"]
+
+
+@dataclasses.dataclass
+class MPPlan:
+    assignment: dict                 # op name -> format name (bf16 omitted ok)
+    groups: list                     # list[list[op name]]
+    objective: str                   # ET | TT | M
+    tau: float
+    budget: float                    # tau^2 * E[g^2]
+    predicted_loss_mse: float
+    predicted_gain: float
+    ip_gap: float = 0.0
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def format_for(self, op_name: str) -> str:
+        return self.assignment.get(op_name, "bf16")
+
+    @property
+    def n_quantized(self) -> int:
+        return sum(1 for f in self.assignment.values() if f != "bf16")
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "MPPlan":
+        return cls(**json.loads(s))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path: str) -> "MPPlan":
+        with open(path) as f:
+            return cls.from_json(f.read())

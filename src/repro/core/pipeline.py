@@ -1,0 +1,130 @@
+"""End-to-end automatic MP pipeline (paper Algorithm 1).
+
+1. partition the model graph into sequential sub-graphs (Alg. 2),
+2. sensitivity calibration: fwd+bwd over the calibration set (Sec. 2.2),
+3. per-group gain evaluation for all F^{L_j} combos (Sec. 2.3),
+4. IP (eq. 5) with the loss-MSE budget tau^2 E[g^2].
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Optional, Sequence
+
+import numpy as np
+
+from repro.core import graphs as G
+from repro.core.ip_solver import MCKPGroup, solve_mckp
+from repro.core.mpconfig import MPPlan
+from repro.core.partition import partition_sequential
+from repro.core.sensitivity import SensitivityResult, calibrate_sensitivity, collect_ops
+from repro.core.timegain import (MemoryGainModel, RooflineGainModel,
+                                 TheoreticalGainModel, enumerate_combos)
+from repro.hw.profiles import TPU_V5E, HWProfile
+from repro.quant.formats import get_format
+
+__all__ = ["AMPOptions", "auto_mixed_precision", "predicted_loss_mse",
+           "build_groups"]
+
+
+@dataclasses.dataclass
+class AMPOptions:
+    tau: float = 0.005                    # normalized-RMSE threshold
+    formats: tuple = ("bf16", "fp8_e4m3")
+    ref_format: str = "bf16"
+    objective: str = "ET"                 # ET | TT | M
+    max_group_size: int = 8               # cap F^{L_j} enumeration
+    drop_residual: bool = True            # paper-faithful
+    ip_method: str = "auto"
+    ip_bins: int = 8192
+    pareto_prune: bool = True             # lossless beyond-paper speedup
+    hw: HWProfile = TPU_V5E
+
+
+def predicted_loss_mse(sens: SensitivityResult, assignment: dict,
+                       ref: str = "bf16") -> float:
+    """Eq. (6)/(23): additive per-layer loss MSE, d=0 at the reference fmt."""
+    total = 0.0
+    for name, fmt in assignment.items():
+        if fmt == ref:
+            continue
+        total += sens.sensitivity.get(name, 0.0) * get_format(fmt).alpha
+    return total
+
+
+def build_groups(model, opts: AMPOptions, quantizable: Optional[set] = None):
+    """Partition and return (graph, ordered groups of quantizable op names)."""
+    graph = G.build_graph(model)
+    groups = partition_sequential(graph, drop_residual=opts.drop_residual,
+                                  max_group_size=opts.max_group_size)
+    if quantizable is not None:
+        groups = [[n for n in g if n in quantizable] for g in groups]
+        groups = [g for g in groups if g]
+    return graph, groups
+
+
+def auto_mixed_precision(model, params, calib_batches: Iterable,
+                         opts: AMPOptions, gain_model=None,
+                         sens: Optional[SensitivityResult] = None,
+                         loss_fn: Optional[Callable] = None) -> MPPlan:
+    loss_fn = loss_fn or (lambda p, b, ctx: model.loss(p, b, ctx))
+
+    # ---- Alg.1 line 2: sensitivity calibration ----
+    if sens is None:
+        sens = calibrate_sensitivity(loss_fn, params, calib_batches)
+    op_index = {op.name: op for op in sens.ops}
+
+    # ---- objective-specific op set (IP-M quantizes linear layers only) ----
+    if opts.objective == "M":
+        quantizable = {n for n, op in op_index.items() if op.kind == "linear"}
+    else:
+        quantizable = set(op_index)
+
+    # ---- Alg.1 line 1: partition ----
+    graph, groups = build_groups(model, opts, quantizable)
+    if opts.objective == "M":
+        # memory is additive per layer: trivial per-layer groups (Sec. 2.3.3)
+        groups = [[n] for g in groups for n in g]
+
+    # ---- Alg.1 line 3: per-group gains for all combos ----
+    if gain_model is None:
+        gain_model = {"ET": RooflineGainModel(opts.hw),
+                      "TT": TheoreticalGainModel(opts.hw),
+                      "M": MemoryGainModel()}[opts.objective]
+
+    mckp_groups = []
+    for gi, group in enumerate(groups):
+        ops = [op_index[n] for n in group]
+        combos = enumerate_combos(len(ops), opts.formats)
+        c = gain_model.gains(ops, combos)
+        d = np.array([
+            sum(0.0 if f == opts.ref_format else
+                sens.sensitivity.get(op.name, 0.0) * get_format(f).alpha
+                for op, f in zip(ops, combo))
+            for combo in combos])
+        mckp_groups.append(MCKPGroup(name=f"group_{gi}", labels=combos,
+                                     c=c, d=d))
+
+    # ---- Alg.1 line 4: IP ----
+    budget = opts.tau ** 2 * sens.loss_sq_mean
+    res = solve_mckp(mckp_groups, budget, method=opts.ip_method,
+                     bins=opts.ip_bins)
+
+    assignment = {}
+    for group, combo in zip(groups, res.labels):
+        for name, fmt in zip(group, combo):
+            if fmt != opts.ref_format:
+                assignment[name] = fmt
+
+    return MPPlan(
+        assignment=assignment,
+        groups=groups,
+        objective=opts.objective,
+        tau=opts.tau,
+        budget=float(budget),
+        predicted_loss_mse=float(res.d_total),
+        predicted_gain=float(res.c_total),
+        ip_gap=float(res.gap),
+        meta={"n_ops": len(op_index), "n_groups": len(groups),
+              "loss_sq_mean": sens.loss_sq_mean,
+              "ip_method": res.method},
+    )

@@ -1,0 +1,140 @@
+"""Per-layer sensitivity calibration (paper Sec. 2.2, eqs. 17-22).
+
+For every quantizable op ``l`` with extended input ``z_l`` (activations and
+weights of a linear layer, or both operands of a BGEMM), the sensitivity is
+
+    s_l = (1/R) sum_r || z_l^r (.) dg/dz_l^r ||^2                    (19, 21)
+
+and the loss-MSE contribution of executing that op in format ``f`` is
+
+    d_{l,f} = s_l * alpha_f,   alpha_f = 2^(-2 m_f)/12               (20, 22)
+
+Implementation: every quantizable op perturbs its operands with zero-valued
+*probe* arrays ``(z + p)``; ``jax.grad`` w.r.t. the probe pytree returns the
+elementwise ``dg/dz`` at each use site, and a forward capture provides ``z``.
+``s_l`` is then accumulated over calibration batches. The only calibration
+memory overhead is one activation-sized probe per op (no optimizer state),
+matching the paper's claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.formats import get_format
+from repro.quant.qops import OpInfo, QuantContext
+
+__all__ = ["SensitivityResult", "collect_ops", "calibrate_sensitivity"]
+
+
+@dataclasses.dataclass
+class SensitivityResult:
+    """Calibrated statistics over R calibration samples."""
+
+    sensitivity: dict          # op name -> s_l (float)
+    loss_sq_mean: float        # E[g^2]
+    loss_mean: float           # E[g]
+    n_batches: int
+    ops: list                  # list[OpInfo] (from registry tracing)
+
+    def loss_mse(self, assignment: dict, default: str = "bf16") -> float:
+        """Predicted loss MSE of an MP assignment (eq. 23): sum_l s_l alpha_f."""
+        total = 0.0
+        for name, s in self.sensitivity.items():
+            fmt = get_format(assignment.get(name, default))
+            total += s * fmt.alpha
+        return total
+
+    def d_layer(self, name: str, fmt_name: str) -> float:
+        """d_{l,f} = s_l * alpha_f (eq. 22)."""
+        return self.sensitivity[name] * get_format(fmt_name).alpha
+
+
+def collect_ops(loss_fn: Callable, params, batch) -> list:
+    """Trace the model once (abstractly) and return every quantizable OpInfo.
+
+    ``loss_fn(params, batch, ctx)`` must route all quantizable matmuls
+    through ``repro.quant.qops``.
+    """
+    registry: list = []
+    ctx = QuantContext(mode="plain", registry=registry)
+    jax.eval_shape(lambda p, b: loss_fn(p, b, ctx), params, batch)
+    # deduplicate call sites hit multiple times (e.g. loss chunks)
+    seen, out = set(), []
+    for op in registry:
+        if op.name not in seen:
+            seen.add(op.name)
+            out.append(op)
+    return out
+
+
+def _zero_probes(loss_fn, params, batch, ops: Iterable[OpInfo]) -> dict:
+    """Zero probe arrays shaped like each op's operands for this batch."""
+    shapes = {}
+    registry: list = []
+    ctx = QuantContext(mode="plain", registry=registry)
+    jax.eval_shape(lambda p, b: loss_fn(p, b, ctx), params, batch)
+    for op in registry:
+        if op.name not in shapes:
+            shapes[op.name] = (op.lhs_shape, op.rhs_shape)
+    names = {op.name for op in ops}
+    return {name: (jnp.zeros(lhs, jnp.float32), jnp.zeros(rhs, jnp.float32))
+            for name, (lhs, rhs) in shapes.items() if name in names}
+
+
+def calibrate_sensitivity(loss_fn: Callable, params, batches: Iterable,
+                          ops: Optional[list] = None,
+                          op_chunk: Optional[int] = None) -> SensitivityResult:
+    """Run forward+backward over calibration batches; returns s_l per op.
+
+    ``op_chunk``: process ops in groups of this size (bounds probe-gradient
+    memory for big models at the cost of repeated backward passes).
+    """
+    first = True
+    sens: dict = {}
+    loss_sum = 0.0
+    loss_sq_sum = 0.0
+    n = 0
+
+    def probed_loss(probes, p, b):
+        ctx = QuantContext(mode="probe", probes=probes, captures={})
+        loss = loss_fn(p, b, ctx)
+        return loss, ctx.captures
+
+    grad_fn = jax.jit(jax.value_and_grad(probed_loss, has_aux=True))
+
+    for batch in batches:
+        if first:
+            if ops is None:
+                ops = collect_ops(loss_fn, params, batch)
+            first = False
+        groups = [ops]
+        if op_chunk is not None:
+            groups = [ops[i:i + op_chunk] for i in range(0, len(ops), op_chunk)]
+        loss_val = None
+        for group in groups:
+            probes = _zero_probes(loss_fn, params, batch, group)
+            (loss_val, captures), grads = grad_fn(probes, params, batch)
+            for name in probes:
+                z_lhs, z_rhs = captures[name]
+                g_lhs, g_rhs = grads[name]
+                s = (jnp.sum(jnp.square(z_lhs.astype(jnp.float32)
+                                        * g_lhs.astype(jnp.float32)))
+                     + jnp.sum(jnp.square(z_rhs.astype(jnp.float32)
+                                          * g_rhs.astype(jnp.float32))))
+                sens[name] = sens.get(name, 0.0) + float(s)
+        loss_sum += float(loss_val)
+        loss_sq_sum += float(loss_val) ** 2
+        n += 1
+
+    assert n > 0, "no calibration batches"
+    return SensitivityResult(
+        sensitivity={k: v / n for k, v in sens.items()},
+        loss_sq_mean=loss_sq_sum / n,
+        loss_mean=loss_sum / n,
+        n_batches=n,
+        ops=list(ops),
+    )

@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticConfig, SyntheticLM
+
+__all__ = ["SyntheticConfig", "SyntheticLM"]

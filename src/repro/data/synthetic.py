@@ -1,0 +1,84 @@
+"""Deterministic synthetic LM data.
+
+Stream properties:
+* **step-seeded**: ``batch_at(step)`` derives every batch from
+  ``fold_in(root_key, step)`` — a restarted job regenerates the identical
+  stream with zero iterator state to checkpoint (the fault-tolerance story
+  for the data pipeline), and any host can materialize its own shard.
+* **learnable structure** so a few hundred steps show a real loss drop:
+  Zipf-distributed unigrams + Markov bigram chains + induction segments
+  (a random motif repeated later in the sequence) — a small transformer
+  quickly learns the bigram + copy structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SyntheticConfig", "SyntheticLM"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticConfig:
+    vocab_size: int
+    batch: int
+    seq_len: int
+    seed: int = 0
+    motif_len: int = 16
+    zipf_a: float = 1.2
+    n_bigram_states: int = 64
+
+
+class SyntheticLM:
+    def __init__(self, cfg: SyntheticConfig):
+        self.cfg = cfg
+        self.root = jax.random.key(cfg.seed)
+        V = cfg.vocab_size
+        # fixed random bigram table: state -> preferred successors
+        k1, k2 = jax.random.split(jax.random.key(cfg.seed + 1))
+        self.bigram_next = jax.random.randint(
+            k1, (min(cfg.n_bigram_states, V),), 0, V)
+        # Zipf weights over the vocab
+        ranks = jnp.arange(1, V + 1, dtype=jnp.float32)
+        self.zipf_logits = -cfg.zipf_a * jnp.log(ranks)
+
+    def batch_at(self, step: int) -> dict:
+        cfg = self.cfg
+        key = jax.random.fold_in(self.root, step)
+        k_tok, k_pos, k_motif, k_mix = jax.random.split(key, 4)
+        B, T, V = cfg.batch, cfg.seq_len + 1, cfg.vocab_size
+
+        toks = jax.random.categorical(
+            k_tok, jnp.broadcast_to(self.zipf_logits, (B, T, V)))
+
+        # bigram chains: with p=0.5, next token = table[prev % states]
+        def chain(carry, x):
+            prev = carry
+            tok, gate = x
+            nxt = jnp.where(gate,
+                            self.bigram_next[prev % self.bigram_next.shape[0]],
+                            tok)
+            return nxt, nxt
+        gates = jax.random.bernoulli(k_mix, 0.5, (B, T))
+        _, toks = jax.lax.scan(
+            chain, toks[:, 0], (toks.swapaxes(0, 1), gates.swapaxes(0, 1)))
+        toks = toks.swapaxes(0, 1)
+
+        # induction motif: copy a motif to a later position in each row
+        M = min(cfg.motif_len, T // 4)
+        src = jax.random.randint(k_pos, (B,), 0, T // 2 - M)
+        dst = jax.random.randint(k_motif, (B,), T // 2, T - M)
+        idx = jnp.arange(T)[None, :]
+        in_dst = (idx >= dst[:, None]) & (idx < (dst + M)[:, None])
+        src_idx = jnp.clip(idx - dst[:, None] + src[:, None], 0, T - 1)
+        motif = jnp.take_along_axis(toks, src_idx, axis=1)
+        toks = jnp.where(in_dst, motif, toks).astype(jnp.int32)
+
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def batches(self, start_step: int, n: int):
+        for s in range(start_step, start_step + n):
+            yield self.batch_at(s)

@@ -1,0 +1,149 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every ParamSpec carries logical axis names; rules map them to (tuples of)
+mesh axes. Assignment is *divisibility-checked*: if a dim is not divisible by
+the mesh-axis product (e.g. hymba's 25 attention heads on a 16-way model
+axis, whisper's 51865 vocab), the dim falls back to replication instead of
+failing — robustness the multi-pod dry-run relies on. Each mesh axis is used
+at most once per param.
+
+DP  = batch over (pod, data)      TP = ffn/heads/vocab over model
+EP  = experts over model          SP = sequence over model (opt-in, long ctx)
+ZeRO-1 = optimizer state additionally sharded over data (largest free dim).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.nn.spec import ParamSpec
+
+__all__ = ["DEFAULT_RULES", "partition_spec", "param_shardings",
+           "zero_partition_spec", "batch_pspec", "named"]
+
+# logical axis -> candidate mesh axes (tuple = shard jointly over all)
+DEFAULT_RULES = {
+    "vocab": ("model",),
+    "ffn": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": ("model",),   # fallback when kv_heads % model != 0
+    "kv_seq": ("model",),     # MLA latent cache: sequence-sharded
+    "kv_lora": ("model",),
+    "experts": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "embed": (),            # replicated (activations are batch-sharded)
+    "layers": (),           # stacked-layer leading dim: never sharded
+    "act_batch": ("pod", "data"),
+    None: (),
+}
+
+# FSDP / ZeRO-3: additionally shard the replicated 'embed' dim of every
+# weight over 'data' (and 'pod' when present: /512 at two pods); XLA
+# all-gathers at use. Enabled when TP-only parameter shards exceed the HBM
+# comfort budget.
+FSDP_RULES = dict(DEFAULT_RULES, embed=("data", "pod"))
+
+
+def _axes_in_mesh(mesh: Mesh, axes: tuple) -> tuple:
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def _mesh_size(mesh: Mesh, axes: tuple) -> int:
+    return math.prod(mesh.shape[a] for a in axes) if axes else 1
+
+
+def partition_spec(spec: ParamSpec, mesh: Mesh,
+                   rules: Optional[dict] = None) -> P:
+    rules = rules or DEFAULT_RULES
+    parts = []
+    used: set = set()
+    for dim, ax in zip(spec.shape, spec.logical_axes):
+        cands = _axes_in_mesh(mesh, rules.get(ax, ()))
+        cands = tuple(a for a in cands if a not in used)
+        assigned = None
+        # try the full tuple first, then progressively shorter prefixes
+        for k in range(len(cands), 0, -1):
+            sub = cands[:k]
+            if dim % _mesh_size(mesh, sub) == 0:
+                assigned = sub if len(sub) > 1 else sub[0]
+                used.update(sub)
+                break
+        parts.append(assigned)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def zero_partition_spec(spec: ParamSpec, mesh: Mesh,
+                        rules: Optional[dict] = None) -> P:
+    """Param pspec + ZeRO-1: shard one replicated dim over 'data' if possible."""
+    base = partition_spec(spec, mesh, rules)
+    parts = list(base) + [None] * (len(spec.shape) - len(base))
+    if "data" not in mesh.axis_names:
+        return base
+    flat_used = set()
+    for p in parts:
+        for a in (p if isinstance(p, tuple) else (p,)):
+            if a:
+                flat_used.add(a)
+    if "data" in flat_used:
+        return base
+    # choose the largest divisible unassigned dim (skip stacked 'layers' dim 0
+    # only if unsized); prefer later dims (contiguous shards)
+    best = None
+    for i, (dim, p) in enumerate(zip(spec.shape, parts)):
+        if p is None and dim % mesh.shape["data"] == 0 and dim > 1:
+            if best is None or dim >= spec.shape[best]:
+                best = i
+    if best is not None:
+        parts[best] = "data"
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_shardings(specs: dict, mesh: Mesh, rules: Optional[dict] = None,
+                    zero: bool = False) -> dict:
+    fn = zero_partition_spec if zero else partition_spec
+    return {path: NamedSharding(mesh, fn(s, mesh, rules))
+            for path, s in specs.items()}
+
+
+def shard_hint(x, *spec) -> jax.Array:
+    """Best-effort ``with_sharding_constraint``: no-op outside a mesh context
+    or when the named axes don't exist. Lets mesh-agnostic model code pin
+    activation shardings (e.g. the per-head dim of MLA's expanded K/V).
+    """
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty:
+            from jax._src.mesh import thread_resources
+            mesh = thread_resources.env.physical_mesh  # `with mesh:` context
+            if mesh is None or mesh.empty:
+                return x
+        axes = set(mesh.axis_names)
+        parts = []
+        for p in spec:
+            cands = tuple(a for a in (p if isinstance(p, tuple) else (p,))
+                          if a in axes)
+            parts.append(cands if len(cands) > 1 else
+                         (cands[0] if cands else None))
+        return jax.lax.with_sharding_constraint(x, P(*parts))
+    except Exception:
+        return x
+
+
+def batch_pspec(mesh: Mesh, extra_dims: int = 1) -> P:
+    """Batch-dim sharding over (pod, data); remaining dims replicated."""
+    dp = _axes_in_mesh(mesh, ("pod", "data"))
+    lead = dp if len(dp) > 1 else (dp[0] if dp else None)
+    return P(lead, *([None] * extra_dims))
+
+
+def named(mesh: Mesh, pspec: P) -> NamedSharding:
+    return NamedSharding(mesh, pspec)

@@ -1,0 +1,3 @@
+from repro.hw.profiles import PROFILES, TPU_V5E, HWProfile, get_profile
+
+__all__ = ["PROFILES", "TPU_V5E", "HWProfile", "get_profile"]

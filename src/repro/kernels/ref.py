@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fp8_matmul_ref", "amax_ref", "scale_cast_ref",
+           "mp_flash_attention_ref"]
+
+
+def fp8_matmul_ref(xq: jax.Array, wq: jax.Array, sx_inv, sw_inv,
+                   out_dtype=jnp.bfloat16) -> jax.Array:
+    y = jnp.einsum("mk,nk->mn", xq.astype(jnp.float32), wq.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    return (y * sx_inv * sw_inv).astype(out_dtype)
+
+
+def amax_ref(x: jax.Array) -> jax.Array:
+    return jnp.max(jnp.abs(x.astype(jnp.float32)))
+
+
+def scale_cast_ref(x: jax.Array, scale, dtype=jnp.float8_e4m3fn) -> jax.Array:
+    return (x.astype(jnp.float32) * scale).astype(dtype)
+
+
+def mp_flash_attention_ref(q, k, v, sq=1.0, sk=1.0, sv=1.0, *,
+                           causal=True, quant_probs=False,
+                           out_dtype=jnp.bfloat16):
+    """Materialized-softmax oracle with identical quantization semantics."""
+    B, H, T, D = q.shape
+    S = k.shape[2]
+    qf = q.astype(jnp.float32) * sq
+    kf = k.astype(jnp.float32) * sk
+    vf = v.astype(jnp.float32) * sv
+    s = jnp.einsum("bhtd,bhsd->bhts", qf, kf) / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((T, S), bool), k=S - T)
+        s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    if quant_probs:
+        p = p.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+    o = jnp.einsum("bhts,bhsd->bhtd", p, vf) / jnp.maximum(l, 1e-30)
+    return o.astype(out_dtype)

@@ -1,0 +1,295 @@
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+# ---------------------------------------------------------------------------
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+# the production sharding and record memory/cost/roofline evidence.
+# The two lines above MUST precede any jax-importing module (device count is
+# locked at first backend init).
+# ---------------------------------------------------------------------------
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.analysis import model_stats, roofline  # noqa: E402
+from repro.configs.shapes import SHAPES, cell_supported, input_specs  # noqa: E402
+from repro.distributed import sharding as shd  # noqa: E402
+from repro.launch import steps  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.registry import ARCH_IDS, build_model, get_config  # noqa: E402
+from repro.nn.spec import tree_from_flat  # noqa: E402
+from repro.train import optim  # noqa: E402
+
+ASSIGNED = [a for a in ARCH_IDS if a not in ("llama3_1b", "llama3_8b")]
+
+# dry-run model options per cell kind (see DESIGN.md: scan segments keep the
+# 61-layer HLO O(1); remat bounds train activation memory)
+DRYRUN_OVERRIDES = dict(scan_layers=True, remat=True)
+
+# per-arch gradient-accumulation depth for train_4k (memory-fit driven;
+# see EXPERIMENTS.md section Dry-run)
+DRYRUN_MICRO = {"starcoder2_15b": 8, "deepseek_v3_671b": 8}
+
+
+def _build(arch: str, kind: str, overrides: dict):
+    ov = dict(overrides)
+    if arch == "whisper_base":
+        ov = {k: v for k, v in ov.items() if k in ("flash_min_seq",)}
+        cfg = get_config(arch, **ov)
+    else:
+        if kind != "train":
+            ov["remat"] = False
+        cfg = get_config(arch, **ov)
+    return build_model(cfg)
+
+
+def _abstract(specs: dict, shardings: dict) -> dict:
+    flat = {p: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=shardings[p])
+            for p, s in specs.items()}
+    return tree_from_flat(flat)
+
+
+def _shard_inputs(mesh, ins: dict) -> dict:
+    out = {}
+    for k, v in ins.items():
+        if v.shape and v.shape[0] > 1:
+            ps = shd.batch_pspec(mesh, extra_dims=len(v.shape) - 1)
+            # divisibility fallback
+            dp = ps[0]
+            size = 1
+            for a in (dp if isinstance(dp, tuple) else (dp,)):
+                if a:
+                    size *= mesh.shape[a]
+            if v.shape[0] % size != 0:
+                ps = P(*([None] * len(v.shape)))
+        else:
+            ps = P(*([None] * len(v.shape)))
+        out[k] = jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                      sharding=NamedSharding(mesh, ps))
+    return out
+
+
+def _cache_abstract(model, mesh, cell, rules=None):
+    from repro.models.encdec import EncDec
+    if isinstance(model, EncDec):
+        specs = model.cache_specs(cell.global_batch, cell.seq_len,
+                                  enc_len=cell.seq_len)
+        flat = {}
+        for k, s in specs.items():
+            ps = shd.partition_spec(s, mesh, rules)
+            flat[k] = jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, ps))
+        caches = {}
+        for key, v in flat.items():
+            layer, leaf = key.rsplit("/", 1)
+            caches.setdefault(layer, {})[leaf] = v
+        return caches
+    specs = model.cache_specs(cell.global_batch, cell.seq_len)
+    flat = {}
+    for k, s in specs.items():
+        ps = shd.partition_spec(s, mesh, rules)
+        flat[k] = jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                       sharding=NamedSharding(mesh, ps))
+    tree = model._cache_tree(flat)
+    out = {}
+    for lk, subs in tree.items():
+        if set(subs) == {"attn"}:
+            out[lk] = subs["attn"]
+        elif set(subs) == {"mamba"}:
+            out[lk] = subs["mamba"]
+        else:
+            out[lk] = subs
+    return out
+
+
+# per-device parameter-shard budget above which FSDP (ZeRO-3) kicks in
+FSDP_THRESHOLD_BYTES = 3e9
+# decode cells of models whose bf16 KV cache would not leave room on v5e
+KV_FP8_THRESHOLD_BYTES = 4e9
+
+
+def _estimate_shard_bytes(specs: dict, shardings: dict, mesh) -> float:
+    import math as _m
+    total = 0.0
+    for p, s in specs.items():
+        n = _m.prod(s.shape) * jnp.dtype(s.dtype).itemsize
+        ps = shardings[p].spec
+        denom = 1
+        for part in ps:
+            for a in (part if isinstance(part, tuple) else (part,)):
+                if a:
+                    denom *= mesh.shape[a]
+        total += n / denom
+    return total
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides=None, mp_assignment=None) -> dict:
+    cell = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "status": "ok", "reason": ""}
+    ok, reason = cell_supported(arch, shape_name)
+    if not ok:
+        rec.update(status="skip", reason=reason)
+        return rec
+
+    t0 = time.time()
+    overrides = dict(overrides or {})
+    n_micro = overrides.pop("n_microbatches", DRYRUN_MICRO.get(arch, 4))
+    rules_override = overrides.pop("rules", None)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = _build(arch, cell.kind, dict(DRYRUN_OVERRIDES, **overrides))
+    specs = model.param_specs()
+    rules = rules_override or shd.DEFAULT_RULES
+    p_sh = shd.param_shardings(specs, mesh, rules=rules)
+    if rules_override is None and \
+            _estimate_shard_bytes(specs, p_sh, mesh) > FSDP_THRESHOLD_BYTES:
+        rules = shd.FSDP_RULES
+        p_sh = shd.param_shardings(specs, mesh, rules=rules)
+        rec["fsdp"] = True
+    # fp8 KV cache when the bf16 cache would crowd out v5e HBM (decode cells)
+    if cell.kind == "decode" and hasattr(model.cfg, "kv_cache_dtype") \
+            and "kv_cache_dtype" not in overrides:
+        c_specs = model.cache_specs(cell.global_batch, cell.seq_len)
+        c_sh = {k: shd.named(mesh, shd.partition_spec(s, mesh, rules))
+                for k, s in c_specs.items()}
+        if _estimate_shard_bytes(c_specs, c_sh, mesh) > KV_FP8_THRESHOLD_BYTES:
+            model = _build(arch, cell.kind,
+                           dict(DRYRUN_OVERRIDES, **overrides,
+                                kv_cache_dtype="fp8_e4m3"))
+            rec["kv_cache_dtype"] = "fp8_e4m3"
+    params_abs = _abstract(specs, p_sh)
+    ins = _shard_inputs(mesh, input_specs(model, cell))
+
+    with mesh:
+        if cell.kind == "train":
+            opt_cfg = optim.select_optimizer(model_stats.param_stats(model)["total"])
+            s_specs = optim.state_specs(specs, opt_cfg)
+            s_sh = shd.param_shardings(s_specs, mesh, rules=rules, zero=True)
+            opt_abs = _abstract(s_specs, s_sh)
+            step = steps.make_train_step(model, opt_cfg, mp=mp_assignment,
+                                         n_microbatches=n_micro)
+            rec["n_microbatches"] = n_micro
+            out_sh = (jax.tree.map(lambda x: x.sharding, params_abs),
+                      jax.tree.map(lambda x: x.sharding, opt_abs), None)
+            fn = jax.jit(step, donate_argnums=(0, 1), out_shardings=out_sh)
+            lowered = fn.lower(params_abs, opt_abs, ins)
+            rec["optimizer"] = opt_cfg.name
+        elif cell.kind == "prefill":
+            caches = _cache_abstract(model, mesh, cell, rules)
+            step = steps.make_prefill_step(model, mp=mp_assignment)
+            out_sh = (None, jax.tree.map(lambda x: x.sharding, caches))
+            fn = jax.jit(step, donate_argnums=(1,), out_shardings=out_sh)
+            lowered = fn.lower(params_abs, caches, ins)
+        else:
+            caches = _cache_abstract(model, mesh, cell, rules)
+            step = steps.make_decode_step(model, mp=mp_assignment)
+            out_sh = (None, jax.tree.map(lambda x: x.sharding, caches))
+            fn = jax.jit(step, donate_argnums=(1,), out_shardings=out_sh)
+            pos = jax.ShapeDtypeStruct((), jnp.int32,
+                                       sharding=NamedSharding(mesh, P()))
+            lowered = fn.lower(params_abs, caches, ins["token"], pos)
+        rec["lower_s"] = round(time.time() - t0, 2)
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    mem = compiled.memory_analysis()
+    mem_stats = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_stats[attr] = int(v)
+    # live bytes per device (args are aliased/donated where possible)
+    arg = mem_stats.get("argument_size_in_bytes", 0)
+    tmp = mem_stats.get("temp_size_in_bytes", 0)
+    out_b = mem_stats.get("output_size_in_bytes", 0)
+    alias = mem_stats.get("alias_size_in_bytes", 0)
+    mem_stats["peak_estimate_bytes"] = arg + tmp + max(out_b - alias, 0)
+    rec["memory_analysis"] = mem_stats
+
+    cost = compiled.cost_analysis() or {}
+    cost_small = {k: float(v) for k, v in cost.items()
+                  if isinstance(v, (int, float)) and k in
+                  ("flops", "bytes accessed", "optimal_seconds",
+                   "utilization operand 0 {}", "bytes accessed output {}")}
+    rec["cost_analysis"] = cost_small
+
+    hlo = compiled.as_text()
+    chips = mesh.devices.size
+    mf = model_stats.model_flops(model, cell)
+    rep = roofline.analyze(arch=arch, shape=shape_name, mesh_name=mesh_name,
+                           chips=chips, cost=cost, hlo_text=hlo,
+                           model_flops=mf, memory_stats=mem_stats)
+    rec["roofline"] = rep.to_dict()
+    coll = rec["roofline"]["meta"]["collectives"]
+    rec["collective_split"] = {"toplevel": coll.get("toplevel", 0.0),
+                               "inloop": coll.get("inloop", 0.0)}
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=("single", "multi", "both"))
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                path = os.path.join(args.out, f"{arch}__{shape}__{mesh_name}.json")
+                if os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") in ("ok", "skip"):
+                            print(f"[cached] {path}")
+                            continue
+                print(f"[dryrun] {arch} x {shape} x {mesh_name} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mp)
+                except Exception as e:  # record, keep sweeping
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "reason": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2)
+                jax.clear_caches()
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" bottleneck={r['bottleneck']}"
+                             f" t=({r['t_compute']:.3e},{r['t_memory']:.3e},"
+                             f"{r['t_collective']:.3e})s"
+                             f" mem/dev={rec['memory_analysis'].get('peak_estimate_bytes',0)/1e9:.2f}GB"
+                             f" compile={rec.get('compile_s')}s")
+                print(f"  -> {status}{extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no JAX device state. Single pod = 256 chips
+(16x16 data x model); multi-pod adds a leading 2-way ``pod`` axis (512).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = 1
+    for s in shape:
+        need *= s
+    devs = jax.devices()
+    assert len(devs) >= need, (
+        f"need {need} devices (set XLA_FLAGS=--xla_force_host_platform_"
+        f"device_count=512 before importing jax); have {len(devs)}")
+    return jax.make_mesh(shape, axes, devices=devs[:need])
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over the locally available devices (tests / CPU runs)."""
+    n = len(jax.devices())
+    assert data * model <= n, f"need {data * model} devices, have {n}"
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[:data * model])

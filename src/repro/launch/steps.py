@@ -1,0 +1,99 @@
+"""Step-function builders shared by the trainer, the serving engine and the
+multi-pod dry-run. All steps take/return pure pytrees so they jit/lower
+cleanly with explicit shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qops import QuantContext
+from repro.train import optim
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "make_eval_step"]
+
+
+def _split_micro(batch: dict, n_micro: int) -> dict:
+    # NOTE: no sharding constraint here — a wsc on scan xs makes partial-eval
+    # stack an f32 copy of the layer-scan carry (see models/lm.py note). The
+    # batch-dim constraint inside the model (`_backbone` entry) keeps each
+    # microbatch data-sharded.
+    def r(x):
+        assert x.shape[0] % n_micro == 0, (x.shape, n_micro)
+        return x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(model, opt_cfg: optim.OptConfig,
+                    n_microbatches: int = 1, mp: Optional[dict] = None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    ctx = QuantContext(mode="mp", mp=mp) if mp else QuantContext()
+
+    def loss_fn(p, b):
+        return model.loss(p, b, ctx)
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches > 1:
+            micro = _split_micro(batch, n_microbatches)
+
+            def acc(carry, mb):
+                loss_sum, g_sum = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_sum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_sum, g)
+                return (loss_sum + loss, g_sum), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc, (jnp.zeros((), jnp.float32), g0), micro)
+            loss = loss / n_microbatches
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_state, metrics = optim.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model, mp: Optional[dict] = None):
+    ctx = QuantContext(mode="mp", mp=mp) if mp else QuantContext()
+
+    def eval_step(params, batch):
+        return model.loss(params, batch, ctx)
+
+    return eval_step
+
+
+def make_prefill_step(model, mp: Optional[dict] = None):
+    """(params, caches, batch) -> (last-token logits, caches)."""
+    ctx = QuantContext(mode="mp", mp=mp) if mp else QuantContext()
+
+    from repro.models.encdec import EncDec
+
+    if isinstance(model, EncDec):
+        def prefill_step(params, caches, batch):
+            return model.prefill(params, batch["frames"], batch["tokens"],
+                                 caches, ctx)
+    else:
+        def prefill_step(params, caches, batch):
+            return model.prefill(params, batch["tokens"], caches, ctx,
+                                 prefix_embeds=batch.get("prefix_embeds"))
+    return prefill_step
+
+
+def make_decode_step(model, mp: Optional[dict] = None):
+    """(params, caches, token, pos) -> (logits, caches)."""
+    ctx = QuantContext(mode="mp", mp=mp) if mp else QuantContext()
+
+    def decode_step(params, caches, token, pos):
+        return model.decode_step(params, token, pos, caches, ctx)
+
+    return decode_step

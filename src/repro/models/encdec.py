@@ -1,0 +1,237 @@
+"""Encoder-decoder transformer (Whisper-style backbone).
+
+Per the assignment spec the audio frontend is a STUB: ``input_specs()``
+provides precomputed frame embeddings (B, T_enc, d_model) — the conv
+mel-spectrogram stem is out of scope. Positions are sinusoidal computed on
+the fly (shape-flexible up to the 32k cells; deviation from Whisper's learned
+decoder positions is noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+from repro.nn.spec import ParamSpec, abstract_params, init_params, param_count
+from repro.quant.qops import QuantContext
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    n_enc_layers: int
+    n_dec_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+    activation: str = "gelu"
+    norm: str = "layernorm"
+    loss_chunk: int = 1024
+    flash_min_seq: int = 4096
+    flash_block: int = 1024
+    scan_layers: bool = False  # enc-dec stacks are small; unrolled only
+    remat: bool = False
+    dtype: str = "bfloat16"
+
+    @property
+    def n_layers(self) -> int:  # uniform API with LMConfig
+        return self.n_enc_layers + self.n_dec_layers
+
+    @property
+    def enc_attn(self) -> L.AttnConfig:
+        return L.AttnConfig(self.d_model, self.n_heads, self.n_kv_heads,
+                            self.d_head, causal=False, rope_theta=None,
+                            flash_min_seq=self.flash_min_seq,
+                            flash_block=self.flash_block)
+
+    @property
+    def dec_attn(self) -> L.AttnConfig:
+        return L.AttnConfig(self.d_model, self.n_heads, self.n_kv_heads,
+                            self.d_head, causal=True, rope_theta=10000.0,
+                            flash_min_seq=self.flash_min_seq,
+                            flash_block=self.flash_block)
+
+
+def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class EncDec:
+    def __init__(self, cfg: EncDecConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ---------------- specs ----------------
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        specs: dict = {
+            "embed/w": ParamSpec((cfg.vocab_size, cfg.d_model),
+                                 ("vocab", "embed"), init="normal"),
+        }
+        specs.update(L.norm_specs("enc_final_norm", cfg.d_model, cfg.norm))
+        specs.update(L.norm_specs("dec_final_norm", cfg.d_model, cfg.norm))
+        for i in range(cfg.n_enc_layers):
+            pre = f"enc/{i}"
+            specs.update(L.norm_specs(f"{pre}/attn_norm", cfg.d_model, cfg.norm))
+            specs.update(L.attn_specs(f"{pre}/attn", cfg.enc_attn))
+            specs.update(L.norm_specs(f"{pre}/mlp_norm", cfg.d_model, cfg.norm))
+            specs.update(L.mlp_specs(f"{pre}/mlp", cfg.d_model, cfg.d_ff,
+                                     cfg.activation))
+        for i in range(cfg.n_dec_layers):
+            pre = f"dec/{i}"
+            specs.update(L.norm_specs(f"{pre}/attn_norm", cfg.d_model, cfg.norm))
+            specs.update(L.attn_specs(f"{pre}/attn", cfg.dec_attn))
+            specs.update(L.norm_specs(f"{pre}/cross_norm", cfg.d_model, cfg.norm))
+            specs.update(L.attn_specs(f"{pre}/cross", cfg.enc_attn))
+            specs.update(L.norm_specs(f"{pre}/mlp_norm", cfg.d_model, cfg.norm))
+            specs.update(L.mlp_specs(f"{pre}/mlp", cfg.d_model, cfg.d_ff,
+                                     cfg.activation))
+        return specs
+
+    def init(self, key):
+        return init_params(key, self.param_specs())
+
+    def n_params(self) -> int:
+        return param_count(self.param_specs())
+
+    def abstract_params(self, shardings: Optional[dict] = None) -> dict:
+        return abstract_params(self.param_specs(), shardings)
+
+    # ---------------- encoder ----------------
+    def encode(self, params: dict, frames: jax.Array, ctx: QuantContext):
+        cfg = self.cfg
+        B, T, _ = frames.shape
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+        h = frames.astype(self.dtype) + _sinusoid(positions, cfg.d_model).astype(self.dtype)
+        for i in range(cfg.n_enc_layers):
+            def body(p, h_):
+                hn = L.apply_norm(p["attn_norm"], h_, cfg.norm)
+                y, _ = L.attention(p["attn"], ctx, f"enc/{i}/attn",
+                                   cfg.enc_attn, hn, positions)
+                h_ = h_ + y
+                hn = L.apply_norm(p["mlp_norm"], h_, cfg.norm)
+                return h_ + L.apply_mlp(p["mlp"], ctx, f"enc/{i}/mlp", hn,
+                                        cfg.activation)
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            h = body(params["enc"][str(i)], h)
+        return L.apply_norm(params["enc_final_norm"], h, cfg.norm)
+
+    # ---------------- decoder ----------------
+    def _decoder(self, params: dict, ctx: QuantContext, tokens: jax.Array,
+                 enc_out: Optional[jax.Array], *, caches: Optional[dict] = None,
+                 cache_pos=None):
+        cfg = self.cfg
+        B, T = tokens.shape
+        if cache_pos is None:
+            positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+        else:
+            positions = jnp.broadcast_to(cache_pos[None, None], (B, T)).astype(jnp.int32)
+        h = jnp.take(params["embed"]["w"], tokens, axis=0).astype(self.dtype)
+        h = h + _sinusoid(positions, cfg.d_model).astype(self.dtype)
+        new_caches = {} if caches is not None else None
+        for i in range(cfg.n_dec_layers):
+            self_c = None if caches is None else caches[f"dec/{i}/self"]
+            cross_c = None if caches is None else caches[f"dec/{i}/cross"]
+
+            def body(p, h_, self_c_, cross_c_):
+                hn = L.apply_norm(p["attn_norm"], h_, cfg.norm)
+                y, self_new = L.attention(p["attn"], ctx, f"dec/{i}/attn",
+                                          cfg.dec_attn, hn, positions,
+                                          cache=self_c_, cache_pos=cache_pos)
+                h_ = h_ + y
+                hn = L.apply_norm(p["cross_norm"], h_, cfg.norm)
+                if enc_out is not None:
+                    y, _ = L.attention(p["cross"], ctx, f"dec/{i}/cross",
+                                       cfg.enc_attn, hn, positions,
+                                       kv_x=enc_out, cross=True)
+                    if new_caches is not None:
+                        cross_c_ = L.cross_kv(p["cross"], ctx,
+                                              f"dec/{i}/cross", cfg.enc_attn,
+                                              enc_out)
+                else:
+                    y, _ = L.attention(p["cross"], ctx, f"dec/{i}/cross",
+                                       cfg.enc_attn, hn, positions,
+                                       cache=cross_c_, cross=True)
+                h_ = h_ + y
+                hn = L.apply_norm(p["mlp_norm"], h_, cfg.norm)
+                h_ = h_ + L.apply_mlp(p["mlp"], ctx, f"dec/{i}/mlp", hn,
+                                      cfg.activation)
+                return h_, self_new, cross_c_
+
+            if cfg.remat and caches is None:
+                body = jax.checkpoint(body)
+            h, self_new, cross_new = body(params["dec"][str(i)], h, self_c,
+                                          cross_c)
+            if new_caches is not None:
+                new_caches[f"dec/{i}/self"] = self_new
+                new_caches[f"dec/{i}/cross"] = cross_new
+        h = L.apply_norm(params["dec_final_norm"], h, cfg.norm)
+        return h, new_caches
+
+    def _head(self, params: dict, ctx: QuantContext, h: jax.Array):
+        from repro.quant import qops
+        return qops.linear(ctx, "lm_head", h, params["embed"]["w"])
+
+    # ---------------- public API ----------------
+    def apply(self, params, batch, ctx: QuantContext):
+        enc_out = self.encode(params, batch["frames"], ctx)
+        h, _ = self._decoder(params, ctx, batch["tokens"], enc_out)
+        return self._head(params, ctx, h)
+
+    def loss(self, params: dict, batch: dict, ctx: QuantContext) -> jax.Array:
+        enc_out = self.encode(params, batch["frames"], ctx)
+        h, _ = self._decoder(params, ctx, batch["tokens"], enc_out)
+        from repro.nn.losses import chunked_ce_loss
+        return chunked_ce_loss(lambda hi: self._head(params, ctx, hi), h,
+                               batch["labels"], batch.get("weights"),
+                               self.cfg.loss_chunk,
+                               no_scan=(ctx.mode == "probe"))
+
+    def cache_specs(self, batch: int, max_len: int, enc_len: int) -> dict:
+        cfg = self.cfg
+        specs = {}
+        for i in range(cfg.n_dec_layers):
+            for k, ps in L.kv_cache_spec(cfg.dec_attn, batch, max_len,
+                                         self.dtype).items():
+                specs[f"dec/{i}/self/{k}"] = ps
+            for k in ("k", "v"):
+                specs[f"dec/{i}/cross/{k}"] = ParamSpec(
+                    (batch, enc_len, cfg.n_kv_heads, cfg.d_head),
+                    ("act_batch", None, "heads", None), self.dtype, "zeros")
+        return specs
+
+    def init_cache(self, batch: int, max_len: int, enc_len: int) -> dict:
+        flat = {}
+        for k, s in self.cache_specs(batch, max_len, enc_len).items():
+            if k.endswith("/pos"):
+                flat[k] = jnp.full(s.shape, -1, jnp.int32)
+            else:
+                flat[k] = jnp.zeros(s.shape, s.dtype)
+        caches = {}
+        for key, v in flat.items():
+            layer, leaf = key.rsplit("/", 1)
+            caches.setdefault(layer, {})[leaf] = v
+        return caches
+
+    def prefill(self, params: dict, frames: jax.Array, tokens: jax.Array,
+                caches: dict, ctx: QuantContext):
+        enc_out = self.encode(params, frames, ctx)
+        h, caches = self._decoder(params, ctx, tokens, enc_out, caches=caches)
+        return self._head(params, ctx, h[:, -1:]), caches
+
+    def decode_step(self, params: dict, token: jax.Array, pos: jax.Array,
+                    caches: dict, ctx: QuantContext):
+        h, caches = self._decoder(params, ctx, token, None, caches=caches,
+                                  cache_pos=pos)
+        return self._head(params, ctx, h), caches

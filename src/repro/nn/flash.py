@@ -1,0 +1,149 @@
+"""Blocked (flash-style) attention in pure JAX.
+
+Used for long sequences (prefill_32k / train_4k) where materializing the
+(T x T) score matrix would blow HBM. Numerically equivalent to the reference
+path (running max / running denominator), O(T * block) memory.
+
+MP integration: the paper quantizes ``qk_matmul`` and ``av_matmul``. Here Q/K
+are quantized once up front (identical numerics to quantizing per block with
+per-tensor scales) and the block-local probabilities are quantized inside the
+loop for ``av_matmul``. Probe/capture calibration uses the reference path —
+calibration batches are short (see DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import qtensor
+from repro.quant.formats import get_format
+from repro.quant.qops import OpInfo, QuantContext
+
+__all__ = ["flash_attention"]
+
+
+def _register(ctx: QuantContext, scope: str, q, k, v):
+    if ctx.registry is None:
+        return
+    B, T, H, D = q.shape
+    S = k.shape[1]
+    ctx.registry.append(OpInfo(
+        name=f"{scope}/qk_matmul", kind="bgemm", spec="BTHD,BSHD->BHTS",
+        lhs_shape=(B, T, H, D), rhs_shape=tuple(k.shape),
+        out_shape=(B, H, T, S), macs=B * H * T * S * D, weight_elems=0))
+    ctx.registry.append(OpInfo(
+        name=f"{scope}/av_matmul", kind="bgemm", spec="BHTS,BSHD->BTHD",
+        lhs_shape=(B, H, T, S), rhs_shape=tuple(v.shape),
+        out_shape=(B, T, H, D), macs=B * H * T * S * v.shape[-1],
+        weight_elems=0))
+
+
+def _mp_fmt(ctx: QuantContext, name: str) -> Optional[str]:
+    if ctx.mode != "mp":
+        return None
+    f = ctx.format_for(name)
+    return f if get_format(f).is_quantized else None
+
+
+def flash_attention(ctx: QuantContext, scope: str, q: jax.Array, k: jax.Array,
+                    v: jax.Array, positions: jax.Array, *, causal: bool,
+                    window: Optional[int], block: int = 1024) -> jax.Array:
+    """q: (B,T,H,Dk), k: (B,S,Hkv,Dk), v: (B,S,Hkv,Dv) -> (B,T,H,Dv).
+
+    Assumes self-attention with q/k positions equal to ``positions`` and
+    T == S (prefill / training). GQA handled by head-group reshape.
+    """
+    B, T, H, Dk = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // Hkv
+    _register(ctx, scope, q, k, v)
+
+    qk_fmt = _mp_fmt(ctx, f"{scope}/qk_matmul")
+    av_fmt = _mp_fmt(ctx, f"{scope}/av_matmul")
+    if qk_fmt is not None:
+        q = qtensor.fake_quant(q, qk_fmt)
+        k = qtensor.fake_quant(k, qk_fmt)
+    if av_fmt is not None:
+        v = qtensor.fake_quant(v, av_fmt)
+
+    nq = -(-T // block)
+    nk = -(-S // block)
+    pad_q = nq * block - T
+    pad_k = nk * block - S
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        positions = jnp.pad(positions, ((0, 0), (0, pad_q)),
+                            constant_values=jnp.iinfo(jnp.int32).max)
+    if causal or window is not None:
+        assert S <= positions.shape[1], "masked flash requires kv positions"
+        kpos = positions[:, :S]
+    else:  # unmasked (cross-attention): positions unused
+        kpos = jnp.zeros((B, S), jnp.int32)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, ((0, 0), (0, pad_k)),
+                       constant_values=jnp.iinfo(jnp.int32).min)
+
+    scale = 1.0 / math.sqrt(Dk)
+    # (B, nq, blk, Hkv, G, Dk)
+    qb = q.reshape(B, nq, block, Hkv, G, Dk)
+    kb = k.reshape(B, nk, block, Hkv, Dk)
+    vb = v.reshape(B, nk, block, Hkv, Dv)
+    qpb = positions.reshape(B, nq, block)
+    kpb = kpos.reshape(B, nk, block)
+
+    def q_block(qi):
+        qq = qb[:, qi]            # (B, blk, Hkv, G, Dk)
+        qp = qpb[:, qi]           # (B, blk)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kk = kb[:, kj]
+            vv = vb[:, kj]
+            kp = kpb[:, kj]
+            s = jnp.einsum("BTKGD,BSKD->BKGTS", qq, kk,
+                           preferred_element_type=jnp.float32) * scale
+            allow = jnp.ones((B, block, block), bool)
+            if causal:
+                allow &= kp[:, None, :] <= qp[:, :, None]
+            if window is not None:
+                allow &= kp[:, None, :] > (qp[:, :, None] - window)
+            s = jnp.where(allow[:, None, None, :, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            corr = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pq = p.astype(vv.dtype)
+            if av_fmt is not None:
+                pq = qtensor.fake_quant(pq, av_fmt)
+            pv = jnp.einsum("BKGTS,BSKD->BKGTD", pq, vv,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, block), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, block, Dv), jnp.float32)
+        # causal: only blocks kj <= qi contribute; scan all for static shape,
+        # masking handles correctness (XLA still does the work — acceptable
+        # for clarity; the Pallas kernel path skips masked blocks).
+        # checkpoint: block scores/probs are recomputed in the backward pass
+        # instead of being stashed as scan residuals (O(T^2) -> O(T) memory).
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step), (m0, l0, a0),
+                                      jnp.arange(nk))
+        l = jnp.maximum(l, 1e-20)
+        out = acc / l[..., None]
+        return out  # (B, Hkv, G, blk, Dv)
+
+    outs = jax.lax.map(q_block, jnp.arange(nq))  # (nq, B, Hkv, G, blk, Dv)
+    outs = jnp.moveaxis(outs, 0, 1)              # (B, nq, Hkv, G, blk, Dv)
+    outs = jnp.transpose(outs, (0, 1, 4, 2, 3, 5)).reshape(
+        B, nq * block, Hkv * G, Dv)
+    return outs[:, :T].astype(v.dtype)

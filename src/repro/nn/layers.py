@@ -1,0 +1,507 @@
+"""Functional NN layers (norms, rope, MLP, attention) with spec builders.
+
+Conventions:
+* params are nested dicts; spec builders return flat ``path -> ParamSpec``.
+* every quantizable matmul goes through ``repro.quant.qops`` with an op name
+  equal to its param-path prefix (e.g. ``layers/3/attn/q_proj``), so the MP
+  pipeline, the partitioner and the param tree share one namespace.
+* weights are stored (out_features, in_features) following eq. (8) of the
+  paper: ``y = x @ w^T + b``.
+
+KV cache: a unified ring buffer ``{"k": (B,W,Hkv,D), "v": ..., "pos": (B,W)}``
+where ``pos`` holds the absolute position stored in each slot (-1 = empty).
+``W = min(max_len, window)`` — sliding-window archs get O(window) decode
+memory (what makes hymba ``long_500k`` deployable); full-attention archs use
+W = max_len where the ring write degenerates to an append.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.spec import ParamSpec
+from repro.quant import qops
+from repro.quant.qops import QuantContext
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_specs(prefix: str, dim: int, kind: str = "rmsnorm") -> dict:
+    specs = {f"{prefix}/scale": ParamSpec((dim,), ("embed",), jnp.float32, "ones")}
+    if kind == "layernorm":
+        specs[f"{prefix}/bias"] = ParamSpec((dim,), ("embed",), jnp.float32, "zeros")
+    return specs
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str = "rmsnorm",
+               eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        raise ValueError(kind)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_table(positions: jax.Array, d_head: int, theta: float) -> tuple:
+    """positions: (..., T) int32 -> (sin, cos) of shape (..., T, d_head//2)."""
+    half = d_head // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (B, T, H, D); sin/cos: (B, T, D//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :].astype(jnp.float32)
+    c = cos[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu2":  # squared ReLU (Nemotron-4 / Primer)
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+def mlp_specs(prefix: str, d_model: int, d_ff: int, activation: str,
+              bias: bool = False) -> dict:
+    specs = {}
+    if activation == "swiglu":
+        specs[f"{prefix}/gate_proj/w"] = ParamSpec((d_ff, d_model), ("ffn", "embed"),
+                                                   init="scaled_normal")
+    specs[f"{prefix}/up_proj/w"] = ParamSpec((d_ff, d_model), ("ffn", "embed"),
+                                             init="scaled_normal")
+    specs[f"{prefix}/down_proj/w"] = ParamSpec((d_model, d_ff), ("embed", "ffn"),
+                                               init="scaled_normal")
+    if bias:
+        specs[f"{prefix}/up_proj/b"] = ParamSpec((d_ff,), ("ffn",), init="zeros")
+        specs[f"{prefix}/down_proj/b"] = ParamSpec((d_model,), ("embed",), init="zeros")
+    return specs
+
+
+def apply_mlp(p: dict, ctx: QuantContext, scope: str, x: jax.Array,
+              activation: str) -> jax.Array:
+    if activation == "swiglu":
+        g = qops.linear(ctx, f"{scope}/gate_proj", x, p["gate_proj"]["w"])
+        u = qops.linear(ctx, f"{scope}/up_proj", x, p["up_proj"]["w"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        u = qops.linear(ctx, f"{scope}/up_proj", x, p["up_proj"]["w"],
+                        p["up_proj"].get("b"))
+        h = _act(activation, u.astype(jnp.float32)).astype(x.dtype)
+    return qops.linear(ctx, f"{scope}/down_proj", h, p["down_proj"]["w"],
+                       p["down_proj"].get("b"))
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional bias / sliding window / cross-attention)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    qkv_bias: bool = False
+    causal: bool = True
+    rope_theta: Optional[float] = 10000.0   # None => NoPE (e.g. cross-attn)
+    window: Optional[int] = None            # sliding-window size
+    flash_min_seq: int = 4096               # blocked attention above this q_len
+    flash_block: int = 1024
+
+
+def attn_specs(prefix: str, cfg: AttnConfig) -> dict:
+    dm, H, Hkv, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    specs = {
+        f"{prefix}/q_proj/w": ParamSpec((H * D, dm), ("heads", "embed"),
+                                        init="scaled_normal"),
+        f"{prefix}/k_proj/w": ParamSpec((Hkv * D, dm), ("heads", "embed"),
+                                        init="scaled_normal"),
+        f"{prefix}/v_proj/w": ParamSpec((Hkv * D, dm), ("heads", "embed"),
+                                        init="scaled_normal"),
+        f"{prefix}/o_proj/w": ParamSpec((dm, H * D), ("embed", "heads"),
+                                        init="scaled_normal"),
+    }
+    if cfg.qkv_bias:
+        for n, width in (("q_proj", H * D), ("k_proj", Hkv * D), ("v_proj", Hkv * D)):
+            specs[f"{prefix}/{n}/b"] = ParamSpec((width,), ("heads",), init="zeros")
+    return specs
+
+
+def kv_cache_spec(cfg: AttnConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> dict:
+    W = max_len if cfg.window is None else min(max_len, cfg.window)
+    # kv_heads shard over 'model' when divisible; otherwise head_dim picks up
+    # the model axis (contraction-dim sharding -> small score all-reduce)
+    return {
+        "k": ParamSpec((batch, W, cfg.n_kv_heads, cfg.d_head),
+                       ("act_batch", None, "kv_heads", "head_dim"), dtype,
+                       "zeros"),
+        "v": ParamSpec((batch, W, cfg.n_kv_heads, cfg.d_head),
+                       ("act_batch", None, "kv_heads", "head_dim"), dtype,
+                       "zeros"),
+        "pos": ParamSpec((batch, W), ("act_batch", None), jnp.int32, "zeros"),
+    }
+
+
+def _split_heads(x: jax.Array, n: int, d: int) -> jax.Array:
+    return x.reshape(*x.shape[:-1], n, d)
+
+
+def _cache_write(cache: dict, tensors: dict, positions: jax.Array,
+                 cache_pos: Optional[jax.Array]) -> dict:
+    """Write T new entries into the ring buffer. positions: (B, T)."""
+    first = next(iter(tensors.values()))
+    B, T = first.shape[0], first.shape[1]
+    W = cache["pos"].shape[1]
+    new = dict(cache)
+    if cache_pos is None and T <= W:
+        # prefill, fits: contiguous write at slot 0
+        for name, t in tensors.items():
+            new[name] = jax.lax.dynamic_update_slice_in_dim(
+                cache[name], t.astype(cache[name].dtype), 0, axis=1)
+        pos_fill = jnp.full((B, W), -1, jnp.int32)
+        new["pos"] = jax.lax.dynamic_update_slice_in_dim(
+            pos_fill, positions.astype(jnp.int32), 0, axis=1)
+    elif cache_pos is None:
+        # prefill longer than the window: keep the last W entries
+        idx = (positions[0, T - W:] % W).astype(jnp.int32)
+        for name, t in tensors.items():
+            new[name] = cache[name].at[:, idx].set(
+                t[:, T - W:].astype(cache[name].dtype))
+        new["pos"] = cache["pos"].at[:, idx].set(positions[:, T - W:])
+    else:
+        # decode: single-slot ring write
+        slot = (cache_pos % W).astype(jnp.int32)
+        for name, t in tensors.items():
+            new[name] = jax.lax.dynamic_update_slice_in_dim(
+                cache[name], t.astype(cache[name].dtype), slot, axis=1)
+        new["pos"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], positions.astype(jnp.int32), slot, axis=1)
+    return new
+
+
+def _mask_from_pos(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+                   window, valid: Optional[jax.Array]) -> jax.Array:
+    """(B, Tq, Tk) boolean mask. window may be None, int, or traced scalar."""
+    m = k_pos[:, None, :] >= 0
+    if causal:
+        m &= k_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        m &= k_pos[:, None, :] > (q_pos[:, :, None] - window)
+    if valid is not None:
+        m &= valid[:, None, :]
+    return m
+
+
+def attention(p: dict, ctx: QuantContext, scope: str, cfg: AttnConfig,
+              x: jax.Array, positions: jax.Array, *,
+              kv_x: Optional[jax.Array] = None,
+              kv_positions: Optional[jax.Array] = None,
+              kv_valid: Optional[jax.Array] = None,
+              cache: Optional[dict] = None,
+              cache_pos: Optional[jax.Array] = None,
+              window: Union[None, int, jax.Array] = "cfg",
+              cross: bool = False):
+    """Returns (y, new_cache).
+
+    * self-attention:  default. K/V come from ``x`` and are written into
+      ``cache`` when given (prefill: cache_pos None; decode: scalar pos).
+    * cross-attention: ``cross=True``; K/V from ``kv_x`` (encoder output) or
+      from a pre-computed ``cache`` {"k","v"}; bidirectional, no RoPE.
+    * ``window``: "cfg" -> use cfg.window; else override (may be traced).
+    """
+    B, T, _ = x.shape
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    if isinstance(window, str) and window == "cfg":
+        window = cfg.window
+
+    q = qops.linear(ctx, f"{scope}/q_proj", x, p["q_proj"]["w"],
+                    p["q_proj"].get("b"))
+    q = _split_heads(q, H, D)
+
+    new_cache = cache
+    causal = cfg.causal
+    if cross:
+        causal = False
+        if kv_x is not None:
+            k = _split_heads(qops.linear(ctx, f"{scope}/k_proj", kv_x,
+                                         p["k_proj"]["w"], p["k_proj"].get("b")),
+                             Hkv, D)
+            v = _split_heads(qops.linear(ctx, f"{scope}/v_proj", kv_x,
+                                         p["v_proj"]["w"], p["v_proj"].get("b")),
+                             Hkv, D)
+        else:  # pre-computed encoder K/V (decode)
+            k, v = cache["k"], cache["v"]
+        S = k.shape[1]
+        kp = kv_positions if kv_positions is not None else jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        mask = _mask_from_pos(jnp.maximum(positions, 0), kp, False, None, kv_valid)
+    else:
+        # ---- self-attention ----
+        k = _split_heads(qops.linear(ctx, f"{scope}/k_proj", x,
+                                     p["k_proj"]["w"], p["k_proj"].get("b")), Hkv, D)
+        v = _split_heads(qops.linear(ctx, f"{scope}/v_proj", x,
+                                     p["v_proj"]["w"], p["v_proj"].get("b")), Hkv, D)
+        if cfg.rope_theta is not None:
+            sin, cos = rope_table(positions, D, cfg.rope_theta)
+            q = apply_rope(q, sin, cos)
+            k = apply_rope(k, sin, cos)
+        if cache is not None:
+            new_cache = _cache_write(cache, {"k": k, "v": v}, positions, cache_pos)
+            if cache_pos is not None:
+                # decode: attend over the ring buffer (upcast fp8 caches)
+                k = new_cache["k"].astype(x.dtype)
+                v = new_cache["v"].astype(x.dtype)
+                kp = new_cache["pos"]
+            else:
+                # prefill from an empty cache: attend locally (flash-capable)
+                kp = positions
+        else:
+            kp = positions
+        mask = _mask_from_pos(positions, kp, causal, window, None)
+
+    # flash for self-attention prefill/training, and for unmasked
+    # cross-attention (encoder-decoder at long frame counts)
+    use_flash = (cache_pos is None and T >= cfg.flash_min_seq
+                 and ctx.mode != "probe"
+                 and ((not cross and T == k.shape[1])
+                      or (cross and kv_x is not None and kv_valid is None)))
+    if use_flash:
+        from repro.nn.flash import flash_attention
+        y = flash_attention(ctx, scope, q, k, v, positions,
+                            causal=causal and not cross,
+                            window=window if not cross else None,
+                            block=cfg.flash_block)
+    else:
+        y = _reference_attention(ctx, scope, q, k, v, mask)
+
+    y = y.reshape(B, T, H * D)
+    y = qops.linear(ctx, f"{scope}/o_proj", y, p["o_proj"]["w"])
+    return y, new_cache
+
+
+def cross_kv(p: dict, ctx: QuantContext, scope: str, cfg: AttnConfig,
+             enc_out: jax.Array) -> dict:
+    """Pre-compute encoder K/V for decode-time cross-attention."""
+    Hkv, D = cfg.n_kv_heads, cfg.d_head
+    k = _split_heads(qops.linear(ctx, f"{scope}/k_proj", enc_out,
+                                 p["k_proj"]["w"], p["k_proj"].get("b")), Hkv, D)
+    v = _split_heads(qops.linear(ctx, f"{scope}/v_proj", enc_out,
+                                 p["v_proj"]["w"], p["v_proj"].get("b")), Hkv, D)
+    return {"k": k, "v": v}
+
+
+def _reference_attention(ctx, scope, q, k, v, mask):
+    """Materialized-scores attention; the calibration/probe path."""
+    B, T, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    Dv = v.shape[-1]
+    qg = q.reshape(B, T, Hkv, G, D)
+    # L_BGEMM op #1: qk_matmul
+    scores = qops.bgemm(ctx, f"{scope}/qk_matmul", "BTKGD,BSKD->BKGTS", qg, k)
+    scores = scores.astype(jnp.float32) / math.sqrt(D)
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(mask[:, None, None, :, :], scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    # L_BGEMM op #2: av_matmul
+    y = qops.bgemm(ctx, f"{scope}/av_matmul", "BKGTS,BSKD->BTKGD", probs, v)
+    return y.reshape(B, T, H, Dv)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+    flash_min_seq: int = 4096
+    flash_block: int = 1024
+    # decode-time weight absorption (DeepSeek's own serving optimization):
+    # score/attend directly in the latent space instead of re-expanding
+    # per-head K/V over the whole cache every step. Off by default =
+    # paper-faithful baseline; enabled as a §Perf iteration.
+    absorb_decode: bool = False
+
+
+def mla_specs(prefix: str, cfg: MLAConfig) -> dict:
+    dm, H = cfg.d_model, cfg.n_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        f"{prefix}/q_a_proj/w": ParamSpec((r_q, dm), (None, "embed"),
+                                          init="scaled_normal"),
+        f"{prefix}/q_norm/scale": ParamSpec((r_q,), (None,), jnp.float32, "ones"),
+        f"{prefix}/q_b_proj/w": ParamSpec((H * (dn + dr), r_q), ("heads", None),
+                                          init="scaled_normal"),
+        f"{prefix}/kv_a_proj/w": ParamSpec((r_kv + dr, dm), (None, "embed"),
+                                           init="scaled_normal"),
+        f"{prefix}/kv_norm/scale": ParamSpec((r_kv,), (None,), jnp.float32, "ones"),
+        f"{prefix}/kv_b_proj/w": ParamSpec((H * (dn + dv), r_kv), ("heads", None),
+                                           init="scaled_normal"),
+        f"{prefix}/o_proj/w": ParamSpec((dm, H * dv), ("embed", "heads"),
+                                        init="scaled_normal"),
+    }
+
+
+def mla_cache_spec(cfg: MLAConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> dict:
+    # sequence-sharded latent cache: scores/context contract tiny per-shard
+    # partials (the right decode sharding for MQA-like shared-KV caches);
+    # kv_lora picks up 'model' only when kv_seq can't (tiny max_len)
+    return {
+        "ckv": ParamSpec((batch, max_len, cfg.kv_lora_rank),
+                         ("act_batch", "kv_seq", "kv_lora"), dtype, "zeros"),
+        "kr": ParamSpec((batch, max_len, cfg.qk_rope_dim),
+                        ("act_batch", "kv_seq", None), dtype, "zeros"),
+        "pos": ParamSpec((batch, max_len), ("act_batch", "kv_seq"), jnp.int32,
+                         "zeros"),
+    }
+
+
+def mla_attention(p: dict, ctx: QuantContext, scope: str, cfg: MLAConfig,
+                  x: jax.Array, positions: jax.Array, *,
+                  cache: Optional[dict] = None,
+                  cache_pos: Optional[jax.Array] = None):
+    """MLA; latent KV cache {"ckv","kr","pos"}; returns (y, new_cache)."""
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    qa = qops.linear(ctx, f"{scope}/q_a_proj", x, p["q_a_proj"]["w"])
+    qa = apply_norm(p["q_norm"], qa)
+    q = qops.linear(ctx, f"{scope}/q_b_proj", qa, p["q_b_proj"]["w"])
+    q = q.reshape(B, T, H, dn + dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+
+    kva = qops.linear(ctx, f"{scope}/kv_a_proj", x, p["kv_a_proj"]["w"])
+    ckv, kr = kva[..., :cfg.kv_lora_rank], kva[..., cfg.kv_lora_rank:]
+    ckv = apply_norm(p["kv_norm"], ckv)
+
+    sin, cos = rope_table(positions, dr, cfg.rope_theta)
+    qr = apply_rope(qr, sin, cos)
+    kr = apply_rope(kr[:, :, None, :], sin, cos)[:, :, 0, :]
+
+    new_cache = cache
+    if cache is not None:
+        new_cache = _cache_write(cache, {"ckv": ckv, "kr": kr}, positions,
+                                 cache_pos)
+        if cache_pos is not None:
+            ckv = new_cache["ckv"].astype(x.dtype)
+            kr = new_cache["kr"].astype(x.dtype)
+            kp = new_cache["pos"]
+            if cfg.absorb_decode:
+                return _mla_decode_absorbed(p, ctx, scope, cfg, qn, qr, ckv,
+                                            kr, positions, kp, new_cache)
+        else:
+            kp = positions  # prefill from empty cache: attend locally
+    else:
+        kp = positions
+
+    # Expand latents to per-head K (nope part) and V. The expanded tensors
+    # are the big ones at 32k prefill — pin their head dim to 'model'.
+    from repro.distributed.sharding import shard_hint
+    kvb = qops.linear(ctx, f"{scope}/kv_b_proj", ckv, p["kv_b_proj"]["w"])
+    S = ckv.shape[1]
+    kvb = kvb.reshape(B, S, H, dn + dv)
+    kvb = shard_hint(kvb, ("pod", "data"), None, "model", None)
+    kn, v = kvb[..., :dn], kvb[..., dn:]
+
+    mask = _mask_from_pos(positions, kp, True, None, None)
+
+    qf = jnp.concatenate([qn, qr], axis=-1)
+    qf = shard_hint(qf, ("pod", "data"), None, "model", None)
+    kf = jnp.concatenate([kn, jnp.broadcast_to(kr[:, :, None, :], (B, S, H, dr))],
+                         axis=-1)
+    kf = shard_hint(kf, ("pod", "data"), None, "model", None)
+    use_flash = (cache_pos is None and T >= cfg.flash_min_seq and T == S)
+    if use_flash:
+        from repro.nn.flash import flash_attention
+        y = flash_attention(ctx, scope, qf, kf, v, positions, causal=True,
+                            window=None, block=cfg.flash_block)
+    else:
+        y = _reference_attention(ctx, scope, qf, kf, v, mask)
+    y = y.reshape(B, T, H * dv)
+    y = qops.linear(ctx, f"{scope}/o_proj", y, p["o_proj"]["w"])
+    return y, new_cache
+
+
+def _mla_decode_absorbed(p, ctx, scope, cfg: MLAConfig, qn, qr, ckv, kr,
+                         positions, kp, new_cache):
+    """Latent-space MLA decode: absorb W_UK into q and W_UV into the output.
+
+    Per token: scores = (qn W_uk) . ckv + qr . kr, attention over the latent
+    cache directly — O(S * (r_kv + d_rope)) per head instead of re-expanding
+    (S, H, dn+dv) K/V from the latent every step.
+    """
+    import math as _math
+    B, T, H, dn = qn.shape
+    r = cfg.kv_lora_rank
+    dv = cfg.v_head_dim
+    # f32 operand casts: some bf16 batched-dot layouts are unimplemented on
+    # the CPU backend; on TPU XLA folds the converts into the MXU op
+    wkv = p["kv_b_proj"]["w"].reshape(H, dn + dv, r).astype(jnp.float32)
+    w_uk, w_uv = wkv[:, :dn, :], wkv[:, dn:, :]
+    # q' = qn @ W_uk  (per head) — the "absorb" GEMM
+    q_lat = qops.qeinsum(ctx, f"{scope}/q_absorb", "BTHh,Hhr->BTHr",
+                         qn.astype(jnp.float32), w_uk, kind="linear")
+    # latent scores + rope scores (the quantizable qk_matmul analogue)
+    s_lat = qops.bgemm(ctx, f"{scope}/qk_matmul", "BTHr,BSr->BHTS", q_lat, ckv)
+    s_rope = jnp.einsum("BTHd,BSd->BHTS", qr.astype(jnp.float32),
+                        kr.astype(jnp.float32))
+    scale = 1.0 / _math.sqrt(dn + cfg.qk_rope_dim)
+    s = (s_lat.astype(jnp.float32) + s_rope) * scale
+    mask = _mask_from_pos(positions, kp, True, None, None)
+    s = jnp.where(mask[:, None, :, :], s, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(s, axis=-1)
+    # context in latent space, then expand through W_uv (av_matmul analogue)
+    ctx_lat = qops.bgemm(ctx, f"{scope}/av_matmul", "BHTS,BSr->BTHr", probs,
+                         ckv.astype(jnp.float32))
+    y = qops.qeinsum(ctx, f"{scope}/v_absorb", "BTHr,Hvr->BTHv", ctx_lat,
+                     w_uv, kind="linear")
+    y = y.reshape(B, T, H * dv).astype(qn.dtype)
+    y = qops.linear(ctx, f"{scope}/o_proj", y, p["o_proj"]["w"])
+    return y, new_cache

@@ -1,0 +1,52 @@
+"""Chunked cross-entropy: the (tokens x vocab) logits tensor never
+materializes. Each sequence chunk computes head-matmul + CE inside a
+``jax.checkpoint`` so the backward pass recomputes chunk logits instead of
+stashing them as scan residuals (the difference between ~0.3GB and ~13GB per
+device at 50k-256k vocabularies).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_ce_loss"]
+
+
+def chunked_ce_loss(head_fn: Callable, h: jax.Array, labels: jax.Array,
+                    weights: Optional[jax.Array], chunk: int,
+                    no_scan: bool = False) -> jax.Array:
+    """head_fn(h_chunk) -> logits. h: (B, T, D); labels/weights: (B, T)."""
+    B, T, _ = h.shape
+    C = T if no_scan else min(chunk, T)
+    n_chunks = -(-T // C)
+    padT = n_chunks * C - T
+    if weights is None:
+        weights = jnp.ones((B, T), jnp.float32)
+    if padT:
+        h = jnp.pad(h, ((0, 0), (0, padT), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, padT)))
+        weights = jnp.pad(weights, ((0, 0), (0, padT)))
+
+    hc = h.reshape(B, n_chunks, C, -1).swapaxes(0, 1)
+    lc = labels.reshape(B, n_chunks, C).swapaxes(0, 1)
+    wc = weights.reshape(B, n_chunks, C).swapaxes(0, 1)
+
+    def chunk_loss(carry, xs):
+        h_i, l_i, w_i = xs
+        logits = head_fn(h_i).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l_i[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * w_i
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(w_i)), None
+
+    # probe mode must not remat: capture collections cannot cross the
+    # checkpoint trace boundary
+    body = chunk_loss if no_scan else jax.checkpoint(chunk_loss)
+    zero = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    if n_chunks == 1:
+        (total, denom), _ = body(zero, (hc[0], lc[0], wc[0]))
+    else:
+        (total, denom), _ = jax.lax.scan(body, zero, (hc, lc, wc))
+    return total / jnp.maximum(denom, 1.0)

@@ -1,0 +1,228 @@
+"""Mamba-2 (SSD, state-space duality) block — chunked matmul formulation.
+
+The chunked SSD algorithm (Dao & Gu, arXiv:2405.21060) recasts the selective
+state-space recurrence as block matmuls (MXU-friendly): intra-chunk quadratic
+attention-like products + an inter-chunk state recurrence (tiny scan). The
+heavy matmuls are routed through ``qops.bgemm`` so the paper's MP machinery
+covers them (arch-adaptation: mamba has no attention BGEMMs; these are its
+equivalents).
+
+Decode is the classic O(1) state update — this is what makes ``long_500k``
+runnable for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import apply_norm
+from repro.nn.spec import ParamSpec
+from repro.quant import qops
+from repro.quant.qops import QuantContext
+
+__all__ = ["SSMConfig", "mamba_specs", "apply_mamba", "mamba_cache_spec",
+           "apply_mamba_decode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_inner: int
+    d_state: int
+    head_dim: int = 64
+    n_groups: int = 1
+    d_conv: int = 4
+    chunk: int = 256
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def mamba_specs(prefix: str, cfg: SSMConfig) -> dict:
+    dm, di, N, G, H = (cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_groups,
+                       cfg.n_heads)
+    d_in_proj = 2 * di + 2 * G * N + H  # z, x, B, C, dt
+    return {
+        f"{prefix}/in_proj/w": ParamSpec((d_in_proj, dm), ("ssm_inner", "embed"),
+                                         init="scaled_normal"),
+        f"{prefix}/conv/w": ParamSpec((cfg.d_conv, cfg.conv_dim),
+                                      (None, "ssm_inner"), init="scaled_normal"),
+        f"{prefix}/conv/b": ParamSpec((cfg.conv_dim,), ("ssm_inner",), init="zeros"),
+        f"{prefix}/A_log": ParamSpec((H,), ("ssm_heads",), jnp.float32, "zeros"),
+        f"{prefix}/D": ParamSpec((H,), ("ssm_heads",), jnp.float32, "ones"),
+        f"{prefix}/dt_bias": ParamSpec((H,), ("ssm_heads",), jnp.float32, "zeros"),
+        f"{prefix}/norm/scale": ParamSpec((di,), ("ssm_inner",), jnp.float32, "ones"),
+        f"{prefix}/out_proj/w": ParamSpec((dm, di), ("embed", "ssm_inner"),
+                                          init="scaled_normal"),
+    }
+
+
+def _split_proj(cfg: SSMConfig, zxbcdt: jax.Array):
+    di, G, N, H = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + cfg.conv_dim], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. xbc: (B,T,Cc); w: (k,Cc)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _ssd_chunked(ctx: QuantContext, scope: str, cfg: SSMConfig,
+                 x: jax.Array, dt: jax.Array, B_: jax.Array, C_: jax.Array,
+                 A: jax.Array, init_state: Optional[jax.Array] = None):
+    """x:(B,T,H,P) dt:(B,T,H) B_/C_:(B,T,G,N). Returns (y, final_state)."""
+    Bb, T, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    Q = min(cfg.chunk, T)
+    nc = -(-T // Q)
+    padT = nc * Q - T
+    if padT:
+        x = jnp.pad(x, ((0, 0), (0, padT), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, padT), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, padT), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, padT), (0, 0), (0, 0)))
+
+    rep = H // G
+    Bh = jnp.repeat(B_, rep, axis=2)  # (B,T,H,N)
+    Ch = jnp.repeat(C_, rep, axis=2)
+
+    xc = x.reshape(Bb, nc, Q, H, P)
+    dtc = dt.reshape(Bb, nc, Q, H)
+    Bc = Bh.reshape(Bb, nc, Q, H, N)
+    Cc = Ch.reshape(Bb, nc, Q, H, N)
+
+    dA = dtc * A  # (B,nc,Q,H) ; A negative
+    cum = jnp.cumsum(dA, axis=2)
+    # intra-chunk decay matrix L (B,nc,H,Q,Q), lower-triangular
+    cq = jnp.moveaxis(cum, 3, 2)  # (B,nc,H,Q)
+    L = jnp.exp(cq[..., :, None] - cq[..., None, :])
+    L = jnp.where(jnp.tril(jnp.ones((Q, Q), bool)), L, 0.0)
+
+    # scores = C_q . B_k  (quantizable: the SSD analogue of qk_matmul)
+    scores = qops.bgemm(ctx, f"{scope}/cb_matmul", "bcqhn,bckhn->bchqk",
+                        Cc, Bc)
+    att = scores.astype(jnp.float32) * L * jnp.moveaxis(dtc, 3, 2)[..., None, :]
+    att = att.astype(x.dtype)
+    y_diag = qops.bgemm(ctx, f"{scope}/att_x_matmul", "bchqk,bckhp->bcqhp",
+                        att, xc)
+
+    # chunk states: sum_k B_k dt_k decay_k x_k  -> (B,nc,H,P,N)
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,Q,H)
+    Bx = (Bc * (decay_states * dtc)[..., None]).astype(x.dtype)
+    states = qops.bgemm(ctx, f"{scope}/bx_matmul", "bckhn,bckhp->bchpn",
+                        Bx, xc)
+
+    # inter-chunk recurrence (tiny scan over chunks)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B,nc,H)
+    s0 = (jnp.zeros((Bb, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        dcy, st = inp
+        s_new = s * dcy[:, :, None, None] + st.astype(jnp.float32)
+        return s_new, s
+
+    (final_state, prev_states) = jax.lax.scan(
+        step, s0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # (B,nc,H,P,N)
+
+    # off-diagonal contribution: C_q . state, scaled by in-chunk decay
+    Cdec = (Cc * jnp.exp(cum)[..., None]).astype(x.dtype)
+    y_off = qops.bgemm(ctx, f"{scope}/c_state_matmul", "bcqhn,bchpn->bcqhp",
+                       Cdec, prev_states.astype(x.dtype))
+
+    y = (y_diag.astype(jnp.float32) + y_off.astype(jnp.float32))
+    y = y.reshape(Bb, nc * Q, H, P)[:, :T]
+    return y.astype(x.dtype), final_state
+
+
+def apply_mamba(p: dict, ctx: QuantContext, scope: str, cfg: SSMConfig,
+                x: jax.Array, cache: Optional[dict] = None):
+    """Full-sequence SSD. Returns (y, new_cache)."""
+    B, T, _ = x.shape
+    H, P, G, N = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
+    zxbcdt = qops.linear(ctx, f"{scope}/in_proj", x, p["in_proj"]["w"])
+    z, xbc_raw, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc_raw, p["conv"]["w"], p["conv"]["b"])
+    xs, B_, C_ = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + G * N], axis=-1)
+    xs = xs.reshape(B, T, H, P)
+    B_ = B_.reshape(B, T, G, N)
+    C_ = C_.reshape(B, T, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, state = _ssd_chunked(ctx, scope, cfg, xs, dt, B_, C_, A)
+    y = y + xs * p["D"][:, None].astype(x.dtype)
+    y = y.reshape(B, T, cfg.d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = apply_norm(p["norm"], y)
+    out = qops.linear(ctx, f"{scope}/out_proj", y, p["out_proj"]["w"])
+
+    new_cache = None
+    if cache is not None:
+        # store the last (d_conv-1) pre-conv features + final SSM state
+        tail = xbc_raw[:, -(cfg.d_conv - 1):, :]
+        padt = cfg.d_conv - 1 - tail.shape[1]
+        if padt > 0:
+            tail = jnp.pad(tail, ((0, 0), (padt, 0), (0, 0)))
+        new_cache = dict(cache, conv=tail.astype(cache["conv"].dtype),
+                         state=state.astype(cache["state"].dtype))
+    return out, new_cache
+
+
+def mamba_cache_spec(cfg: SSMConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "conv": ParamSpec((batch, cfg.d_conv - 1, cfg.conv_dim),
+                          ("act_batch", None, "ssm_inner"), dtype, "zeros"),
+        "state": ParamSpec((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                           ("act_batch", "ssm_heads", None, None), jnp.float32,
+                           "zeros"),
+    }
+
+
+def apply_mamba_decode(p: dict, ctx: QuantContext, scope: str, cfg: SSMConfig,
+                       x: jax.Array, cache: dict):
+    """Single-token recurrent update. x: (B, 1, C). Returns (y, new_cache)."""
+    B = x.shape[0]
+    H, P, G, N = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
+    zxbcdt = qops.linear(ctx, f"{scope}/in_proj", x, p["in_proj"]["w"])
+    z, xbc, dt = _split_proj(cfg, zxbcdt)          # (B,1,*)
+    conv_hist = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)
+    w, b = p["conv"]["w"], p["conv"]["b"]
+    k = w.shape[0]
+    conv_out = sum(conv_hist[:, -k + i, :] * w[i] for i in range(k)) + b
+    xbc1 = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)  # (B,Cc)
+    xs, B_, C_ = jnp.split(xbc1, [cfg.d_inner, cfg.d_inner + G * N], axis=-1)
+    xs = xs.reshape(B, H, P)
+    B_ = jnp.repeat(B_.reshape(B, G, N), H // G, axis=1)
+    C_ = jnp.repeat(C_.reshape(B, G, N), H // G, axis=1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                               # (B,H)
+
+    state = cache["state"].astype(jnp.float32)
+    dBx = jnp.einsum("bhp,bhn->bhpn", (dt[..., None] * xs.astype(jnp.float32)),
+                     B_.astype(jnp.float32))
+    state = state * dA[:, :, None, None] + dBx
+    y = qops.bgemm(ctx, f"{scope}/c_state_matmul", "bhn,bhpn->bhp",
+                   C_.astype(jnp.float32), state)
+    y = y + xs.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(B, 1, cfg.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = apply_norm(p["norm"], y)
+    out = qops.linear(ctx, f"{scope}/out_proj", y, p["out_proj"]["w"])
+    new_cache = dict(cache, conv=conv_hist[:, 1:].astype(cache["conv"].dtype),
+                     state=state.astype(cache["state"].dtype))
+    return out, new_cache

@@ -1,0 +1,119 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-based one-hot dispatch,
+optional shared experts (DeepSeek-V3 / Moonlight style).
+
+TPU-friendly implementation: token chunks are processed with a ``lax.scan``
+so the (tokens x experts x capacity) dispatch tensor stays VMEM-sized
+regardless of global batch. Expert weights carry an ``experts`` logical axis
+(sharded over the ``model`` mesh axis = expert parallelism; XLA inserts the
+all-to-all around the grouped GEMMs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import mlp_specs, apply_mlp
+from repro.nn.spec import ParamSpec
+from repro.quant import qops
+from repro.quant.qops import QuantContext
+
+__all__ = ["MoEConfig", "moe_specs", "apply_moe"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert_ff: int
+    n_shared_experts: int = 0
+    d_shared_ff: int = 0
+    capacity_factor: float = 1.25
+    token_chunk: int = 1024       # scan chunk (memory knob)
+    router_dtype: str = "float32"
+    aux_loss_weight: float = 0.001
+
+
+def moe_specs(prefix: str, d_model: int, cfg: MoEConfig,
+              activation: str = "swiglu") -> dict:
+    E, dff = cfg.n_experts, cfg.d_expert_ff
+    specs = {
+        f"{prefix}/router/w": ParamSpec((E, d_model), ("experts", "embed"),
+                                        jnp.float32, "scaled_normal"),
+        f"{prefix}/experts/gate_proj/w": ParamSpec(
+            (E, dff, d_model), ("experts", "ffn", "embed"), init="scaled_normal"),
+        f"{prefix}/experts/up_proj/w": ParamSpec(
+            (E, dff, d_model), ("experts", "ffn", "embed"), init="scaled_normal"),
+        f"{prefix}/experts/down_proj/w": ParamSpec(
+            (E, d_model, dff), ("experts", "embed", "ffn"), init="scaled_normal"),
+    }
+    if cfg.n_shared_experts:
+        specs.update(mlp_specs(f"{prefix}/shared", d_model,
+                               cfg.d_shared_ff * cfg.n_shared_experts, activation))
+    return specs
+
+
+def apply_moe(p: dict, ctx: QuantContext, scope: str, x: jax.Array,
+              cfg: MoEConfig, activation: str = "swiglu"):
+    """x: (B, T, C) -> (y, aux_loss)."""
+    B, T, C = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    xt = x.reshape(B * T, C)
+    N = B * T
+
+    chunk = min(cfg.token_chunk, N)
+    if ctx.mode == "probe":
+        chunk = N  # probe/capture collections cannot cross a scan boundary
+    n_chunks = -(-N // chunk)
+    pad = n_chunks * chunk - N
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    cap = max(1, int(chunk * K / E * cfg.capacity_factor))
+    # MXU-friendly capacity
+    cap = -(-cap // 8) * 8
+
+    xc = xt.reshape(n_chunks, chunk, C)
+
+    def one_chunk(carry, xi):
+        logits = qops.linear(ctx, f"{scope}/router", xi.astype(jnp.float32),
+                             p["router"]["w"])
+        probs = jax.nn.softmax(logits, axis=-1)           # (t, E)
+        topv, topi = jax.lax.top_k(probs, K)              # (t, K)
+        topv = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
+        onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)      # (t, K, E)
+        # position of each (token, k) within its expert queue
+        pos = jnp.cumsum(onehot.reshape(-1, E), axis=0).reshape(chunk, K, E)
+        pos = (pos - 1.0) * onehot                         # 0-based, 0 elsewhere
+        keep = (pos < cap) & (onehot > 0)
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+        # dispatch (t, E, cap)
+        disp = jnp.einsum("tke,tkec->tec", onehot * keep, pos_oh)
+        comb = jnp.einsum("tk,tke,tkec->tec", topv, onehot * keep, pos_oh)
+        xe = jnp.einsum("tec,tC->eCc", disp, xi.astype(jnp.float32))
+        xe = jnp.transpose(xe, (0, 2, 1)).astype(x.dtype)  # (E, cap, C)
+        g = qops.linear(ctx, f"{scope}/experts/gate_proj", xe,
+                        p["experts"]["gate_proj"]["w"])
+        u = qops.linear(ctx, f"{scope}/experts/up_proj", xe,
+                        p["experts"]["up_proj"]["w"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        ye = qops.linear(ctx, f"{scope}/experts/down_proj", h,
+                         p["experts"]["down_proj"]["w"])   # (E, cap, C)
+        yi = jnp.einsum("tec,ecC->tC", comb, ye.astype(jnp.float32))
+        # load-balance aux (Switch): E * sum_e f_e * P_e
+        f_e = jnp.mean(jnp.sum(onehot, 1), axis=0)
+        p_e = jnp.mean(probs, axis=0)
+        aux = E * jnp.sum(f_e * p_e)
+        return carry + aux, yi.astype(x.dtype)
+
+    if n_chunks == 1:
+        aux_total, ys = one_chunk(jnp.zeros((), jnp.float32), xc[0])
+        ys = ys[None]
+    else:
+        aux_total, ys = jax.lax.scan(one_chunk, jnp.zeros((), jnp.float32), xc)
+    y = ys.reshape(n_chunks * chunk, C)[:N].reshape(B, T, C)
+
+    if cfg.n_shared_experts:
+        y = y + apply_mlp(p["shared"], ctx, f"{scope}/shared", x, activation)
+    return y, cfg.aux_loss_weight * aux_total / n_chunks

@@ -1,0 +1,99 @@
+"""Specs-first parameter system.
+
+Every model exposes ``param_specs(cfg) -> dict[path -> ParamSpec]`` (a flat
+dict keyed by '/'-separated paths). From the specs we derive, without any
+allocation:
+
+* abstract parameters (``jax.ShapeDtypeStruct``) for ``.lower()`` dry-runs,
+* ``NamedSharding`` trees via the logical-axis rules in
+  ``repro.distributed.sharding``,
+* real initialized parameters (for smoke tests / training).
+
+Keeping specs separate from values keeps the multi-pod dry-run cheap: the
+production mesh only ever sees shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ParamSpec", "init_params", "abstract_params", "tree_from_flat",
+           "flatten_paths", "param_count", "param_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    logical_axes: tuple          # one logical axis name (or None) per dim
+    dtype: jnp.dtype = jnp.bfloat16
+    init: str = "normal"         # normal | zeros | ones | scaled_normal
+    init_scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), (
+            f"shape {self.shape} vs axes {self.logical_axes}")
+
+
+def _init_one(key, spec: ParamSpec):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    scale = spec.init_scale
+    if spec.init == "scaled_normal":  # 1/sqrt(fan_in) init
+        fan_in = spec.shape[-1] if len(spec.shape) > 1 else spec.shape[0]
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(spec.dtype)
+
+
+def tree_from_flat(flat: dict) -> dict:
+    """'a/b/c' flat dict -> nested dicts."""
+    tree: dict = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+def flatten_paths(tree: dict, prefix: str = "") -> dict:
+    flat = {}
+    for k, v in tree.items():
+        path = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            flat.update(flatten_paths(v, path))
+        else:
+            flat[path] = v
+    return flat
+
+
+def init_params(key: jax.Array, specs: dict) -> dict:
+    """specs: flat path->ParamSpec. Returns nested param pytree."""
+    paths = sorted(specs)
+    keys = jax.random.split(key, max(len(paths), 1))
+    flat = {p: _init_one(k, specs[p]) for p, k in zip(paths, keys)}
+    return tree_from_flat(flat)
+
+
+def abstract_params(specs: dict, shardings: Optional[dict] = None) -> dict:
+    """ShapeDtypeStruct pytree (optionally with shardings attached)."""
+    flat = {}
+    for p, spec in specs.items():
+        sh = None if shardings is None else shardings.get(p)
+        flat[p] = jax.ShapeDtypeStruct(spec.shape, spec.dtype, sharding=sh)
+    return tree_from_flat(flat)
+
+
+def param_count(specs: dict) -> int:
+    return sum(math.prod(s.shape) for s in specs.values())
+
+
+def param_bytes(specs: dict) -> int:
+    return sum(math.prod(s.shape) * jnp.dtype(s.dtype).itemsize
+               for s in specs.values())

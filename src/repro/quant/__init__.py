@@ -1,0 +1,9 @@
+from repro.quant.formats import FORMATS, PAPER_FORMATS, Format, alpha, get_format
+from repro.quant.qops import OpInfo, QuantContext, bgemm, linear, qeinsum
+from repro.quant.qtensor import QTensor, compute_scale, dequantize, fake_quant, quantize
+
+__all__ = [
+    "FORMATS", "PAPER_FORMATS", "Format", "alpha", "get_format",
+    "OpInfo", "QuantContext", "bgemm", "linear", "qeinsum",
+    "QTensor", "compute_scale", "dequantize", "fake_quant", "quantize",
+]

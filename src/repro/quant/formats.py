@@ -1,0 +1,94 @@
+"""Numerical format registry.
+
+The paper models quantization noise of a floating-point format with ``m_f``
+mantissa bits as relative uniform noise (eq. 15)::
+
+    z~ ~ |z| * 2^{-m_f} * U[-1/2, 1/2]
+
+whose per-element variance is ``|z|^2 * alpha_f`` with (eq. 16)::
+
+    alpha_f = 2^{-2 m_f} / 12
+
+The registry below carries, for every supported format: the mantissa width,
+the JAX storage dtype (or None when the format is emulated), byte width, and
+relative MAC throughput vs BF16 on the active hardware profile (used by the
+theoretical time-gain metric, Sec. 2.3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+__all__ = [
+    "Format",
+    "FORMATS",
+    "get_format",
+    "alpha",
+    "BF16",
+    "FP8_E4M3",
+    "FP8_E5M2",
+    "FP16",
+    "FP4_E2M1",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Format:
+    """A floating-point numerical format usable for MP execution."""
+
+    name: str
+    mantissa_bits: int
+    exponent_bits: int
+    bytes: float  # storage bytes per element
+    dtype: Optional[jnp.dtype]  # None => emulated (fake-quant only)
+    # Max representable magnitude (for scale computation). None => no scaling
+    # needed (the format is wide enough to hold bf16-ranged data directly).
+    max_value: Optional[float]
+
+    @property
+    def alpha(self) -> float:
+        """Per-element relative quantization-noise variance (eq. 16)."""
+        return 2.0 ** (-2 * self.mantissa_bits) / 12.0
+
+    @property
+    def is_quantized(self) -> bool:
+        return self.name != "bf16"
+
+    def __str__(self) -> str:  # pragma: no cover - debugging nicety
+        return self.name
+
+
+BF16 = Format("bf16", mantissa_bits=8, exponent_bits=8, bytes=2, dtype=jnp.bfloat16,
+              max_value=None)
+# FP8-E4M3 per OCP / Gaudi2 / H100: max 448 (e4m3fn).
+FP8_E4M3 = Format("fp8_e4m3", mantissa_bits=3, exponent_bits=4, bytes=1,
+                  dtype=jnp.float8_e4m3fn, max_value=448.0)
+FP8_E5M2 = Format("fp8_e5m2", mantissa_bits=2, exponent_bits=5, bytes=1,
+                  dtype=jnp.float8_e5m2, max_value=57344.0)
+FP16 = Format("fp16", mantissa_bits=10, exponent_bits=5, bytes=2, dtype=jnp.float16,
+              max_value=65504.0)
+# FP4-E2M1 (MXFP4 element type) — emulated fake-quant; max 6.0.
+FP4_E2M1 = Format("fp4_e2m1", mantissa_bits=1, exponent_bits=2, bytes=0.5, dtype=None,
+                  max_value=6.0)
+
+FORMATS: dict[str, Format] = {
+    f.name: f for f in (BF16, FP8_E4M3, FP8_E5M2, FP16, FP4_E2M1)
+}
+
+# The paper's experiment setting: F=2, {BF16, FP8-E4M3}.
+PAPER_FORMATS = ("bf16", "fp8_e4m3")
+
+
+def get_format(name: str) -> Format:
+    try:
+        return FORMATS[name]
+    except KeyError as e:
+        raise KeyError(
+            f"unknown format {name!r}; known: {sorted(FORMATS)}") from e
+
+
+def alpha(name: str) -> float:
+    """alpha_f = 2^{-2 m_f} / 12 for a registered format name."""
+    return get_format(name).alpha

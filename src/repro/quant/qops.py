@@ -1,0 +1,176 @@
+"""Quantizable op entry points.
+
+Every linear operation the paper can quantize — standard linear layers
+(``L_lin``) and batched GEMMs inside attention (``L_BGEMM``) — is funneled
+through :func:`qeinsum`. A :class:`QuantContext` selects the execution mode:
+
+* ``plain``   — high-precision (BF16) execution.
+* ``mp``      — execute under a mixed-precision assignment: operands of op
+                ``name`` are (fake- or real-) quantized to the assigned format.
+* ``probe``   — sensitivity calibration (Sec. 2.2): operands receive additive
+                zero probes ``z + p`` and the unperturbed operands are captured
+                so the caller can evaluate ``s_l = ||z (.) dg/dz||^2`` (eq. 19).
+
+When ``ctx.registry`` is a list, every op also records an :class:`OpInfo`
+(shapes, MACs, weight element count) — used by the partitioner and the
+performance metrics. Tracing a model under ``jax.eval_shape`` with a registry
+thus yields the full quantizable-op inventory without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import qtensor
+from repro.quant.formats import get_format
+
+__all__ = ["QuantContext", "OpInfo", "qeinsum", "linear", "bgemm"]
+
+KIND_LINEAR = "linear"   # rhs is a weight tensor (persistent)
+KIND_BGEMM = "bgemm"     # both operands are activations
+
+
+@dataclasses.dataclass(frozen=True)
+class OpInfo:
+    """Static description of one quantizable op occurrence."""
+
+    name: str
+    kind: str                 # linear | bgemm
+    spec: str                 # einsum spec
+    lhs_shape: tuple
+    rhs_shape: tuple
+    out_shape: tuple
+    macs: int                 # multiply-accumulates for one evaluation
+    weight_elems: int         # persistent parameter elements (0 for bgemm)
+
+
+@dataclasses.dataclass
+class QuantContext:
+    """Carries the execution mode through a model's apply function.
+
+    Only array-valued fields (``probes``) participate in tracing; the mode and
+    the MP assignment are static (bake them into the jitted closure).
+    """
+
+    mode: str = "plain"                       # plain | mp | probe
+    mp: Optional[dict] = None                 # op name -> format name
+    impl: str = "simulate"                    # simulate | native | pallas
+    probes: Optional[dict] = None             # op name -> (p_lhs, p_rhs)
+    captures: Optional[dict] = None           # out: op name -> (lhs, rhs)
+    registry: Optional[list] = None           # out: list[OpInfo]
+    scales: Optional[dict] = None             # op name -> (s_lhs, s_rhs) calibrated
+    default_format: str = "bf16"
+
+    def format_for(self, name: str) -> str:
+        if self.mp is None:
+            return self.default_format
+        return self.mp.get(name, self.default_format)
+
+
+def _einsum_macs(spec: str, lhs_shape, rhs_shape) -> int:
+    """MAC count of an einsum: product of all distinct dimension sizes."""
+    ins, out = spec.split("->")
+    a, b = ins.split(",")
+    dims: dict[str, int] = {}
+    for labels, shape in ((a, lhs_shape), (b, rhs_shape)):
+        for ch, s in zip(labels, shape):
+            dims[ch] = int(s)
+    return int(math.prod(dims.values()))
+
+
+def _maybe_register(ctx: QuantContext, name: str, kind: str, spec: str,
+                    lhs, rhs, out) -> None:
+    if ctx.registry is None:
+        return
+    weight_elems = int(math.prod(rhs.shape)) if kind == KIND_LINEAR else 0
+    ctx.registry.append(OpInfo(
+        name=name, kind=kind, spec=spec,
+        lhs_shape=tuple(lhs.shape), rhs_shape=tuple(rhs.shape),
+        out_shape=tuple(out.shape),
+        macs=_einsum_macs(spec, lhs.shape, rhs.shape),
+        weight_elems=weight_elems,
+    ))
+
+
+def _quantize_operand(x: jax.Array, fmt_name: str, impl: str,
+                      scale: Optional[jax.Array]) -> jax.Array:
+    """Return the operand as it would be consumed by the MP matmul."""
+    fmt = get_format(fmt_name)
+    if not fmt.is_quantized:
+        return x
+    if impl == "native" and fmt.dtype is not None:
+        q = qtensor.quantize(x, fmt_name, scale=scale)
+        # Native path: dequantize scales are folded into the output; for
+        # simplicity (and exactness of the noise model) we dequantize to the
+        # compute dtype here — XLA fuses the rescale into the dot epilogue.
+        return q.dequantize(x.dtype)
+    return qtensor.fake_quant(x, fmt_name, scale=scale)
+
+
+def qeinsum(ctx: QuantContext, name: str, spec: str, lhs: jax.Array,
+            rhs: jax.Array, kind: str = KIND_LINEAR,
+            accum_dtype=jnp.float32) -> jax.Array:
+    """Quantizable einsum — the single entry point for L_lin and L_BGEMM."""
+    out_dtype = lhs.dtype
+
+    if ctx.mode == "probe":
+        if ctx.probes is not None and name in ctx.probes:
+            p_lhs, p_rhs = ctx.probes[name]
+            if ctx.captures is not None:
+                ctx.captures[name] = (lhs, rhs)
+            lhs = lhs + p_lhs.astype(lhs.dtype)
+            rhs = rhs + p_rhs.astype(rhs.dtype)
+    elif ctx.mode == "mp":
+        fmt_name = ctx.format_for(name)
+        if get_format(fmt_name).is_quantized:
+            s_lhs = s_rhs = None
+            if ctx.scales is not None and name in ctx.scales:
+                s_lhs, s_rhs = ctx.scales[name]
+            if ctx.impl == "pallas" and kind == KIND_LINEAR and lhs.ndim == 2:
+                from repro.kernels import ops as kops  # lazy: optional dep
+                return kops.fp8_linear(lhs, rhs, spec=spec, fmt_name=fmt_name,
+                                       out_dtype=out_dtype)
+            lhs = _quantize_operand(lhs, fmt_name, ctx.impl, s_lhs)
+            rhs = _quantize_operand(rhs, fmt_name, ctx.impl, s_rhs)
+
+    out = jnp.einsum(spec, lhs, rhs, preferred_element_type=accum_dtype)
+    out = out.astype(out_dtype)
+    _maybe_register(ctx, name, kind, spec, lhs, rhs, out)
+    return out
+
+
+def linear(ctx: QuantContext, name: str, x: jax.Array, w: jax.Array,
+           b: Optional[jax.Array] = None) -> jax.Array:
+    """Standard linear layer y = x @ w^T (+ b); w: (K, C) per eq. (8).
+
+    ``x`` may have arbitrary leading batch dims; the last dim contracts.
+    ``w`` may carry leading batch/expert dims (grouped/expert GEMM), which
+    must align with the leading dims of ``x``.
+    """
+    if w.dtype != x.dtype and jnp.dtype(w.dtype).itemsize == 1:
+        w = w.astype(x.dtype)  # fp8-stored weights: dequant at use
+    if w.ndim == 2:
+        xl = "BC" if x.ndim == 2 else "BSC" if x.ndim == 3 else None
+        if xl is None:  # flatten exotic ranks
+            lead = x.shape[:-1]
+            y = linear(ctx, name, x.reshape(-1, x.shape[-1]), w, b)
+            return y.reshape(*lead, w.shape[0])
+        spec = f"{xl},KC->{xl[:-1]}K"
+    elif w.ndim == 3 and x.ndim == 3:
+        spec = "ENC,EKC->ENK"  # expert-grouped GEMM
+    else:
+        raise ValueError(f"unsupported linear ranks x={x.shape} w={w.shape}")
+    y = qeinsum(ctx, name, spec, x, w, kind=KIND_LINEAR)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def bgemm(ctx: QuantContext, name: str, spec: str, a: jax.Array,
+          b: jax.Array) -> jax.Array:
+    """Batched GEMM between two activations (qk_matmul / av_matmul / SSD)."""
+    return qeinsum(ctx, name, spec, a, b, kind=KIND_BGEMM)

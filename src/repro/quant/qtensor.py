@@ -1,0 +1,136 @@
+"""Scaled casting between BF16 and low-precision formats.
+
+Two execution paths:
+
+* ``cast_real``   — actually stores the tensor in the target dtype (fp8/fp16)
+                    with a per-tensor (or per-channel) scale. This is what a
+                    TPU deployment executes (MXU consumes fp8 operands).
+* ``fake_quant``  — quantize-dequantize in the source dtype. Numerically it
+                    produces the same values as cast_real followed by dequant
+                    and is used on CPU for calibration/benchmarks and for
+                    emulated formats (fp4).
+
+Scales follow the amax convention used by Intel Neural Compressor / TE:
+``scale = max_value / amax`` so that ``x * scale`` fits the representable
+range; dequantization multiplies by ``1/scale``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.formats import Format, get_format
+
+__all__ = ["QTensor", "compute_scale", "quantize", "dequantize", "fake_quant"]
+
+
+@dataclasses.dataclass
+class QTensor:
+    """A quantized tensor: low-precision payload + dequant scale.
+
+    ``data * scale_inv`` reconstructs (an approximation of) the original.
+    Registered as a pytree so it can flow through jit.
+    """
+
+    data: jax.Array
+    scale_inv: jax.Array  # scalar or per-channel, broadcastable to data
+    fmt_name: str
+
+    @property
+    def fmt(self) -> Format:
+        return get_format(self.fmt_name)
+
+    def dequantize(self, dtype=jnp.bfloat16) -> jax.Array:
+        return (self.data.astype(jnp.float32) * self.scale_inv).astype(dtype)
+
+
+def _qtensor_flatten(q):
+    return (q.data, q.scale_inv), q.fmt_name
+
+
+def _qtensor_unflatten(fmt_name, children):
+    return QTensor(children[0], children[1], fmt_name)
+
+
+jax.tree_util.register_pytree_node(QTensor, _qtensor_flatten, _qtensor_unflatten)
+
+
+def compute_scale(x: jax.Array, fmt: Format, axis: Optional[tuple] = None,
+                  margin: float = 1.0) -> jax.Array:
+    """amax-based scale: ``scale = fmt.max_value / amax``.
+
+    axis=None -> per-tensor scalar scale; otherwise reduce over ``axis`` for
+    per-channel scales. ``margin`` (<=1) backs off from the format max.
+    """
+    if fmt.max_value is None:
+        shape = () if axis is None else tuple(
+            1 if a in _norm_axes(axis, x.ndim) else s
+            for a, s in enumerate(x.shape))
+        return jnp.ones(shape, jnp.float32)
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=axis is not None)
+    amax = jnp.maximum(amax, 1e-12)
+    return (fmt.max_value * margin) / amax
+
+
+def _norm_axes(axis, ndim):
+    if axis is None:
+        return ()
+    if isinstance(axis, int):
+        axis = (axis,)
+    return tuple(a % ndim for a in axis)
+
+
+def quantize(x: jax.Array, fmt_name: str, axis: Optional[tuple] = None,
+             scale: Optional[jax.Array] = None) -> QTensor:
+    """Cast ``x`` into the target format with amax scaling (real storage)."""
+    fmt = get_format(fmt_name)
+    if scale is None:
+        scale = compute_scale(x, fmt, axis)
+    xf = x.astype(jnp.float32) * scale
+    if fmt.dtype is not None:
+        data = xf.astype(fmt.dtype)
+    else:  # emulated format: store the rounded values in bf16
+        data = _round_to_format(xf, fmt).astype(jnp.bfloat16)
+    return QTensor(data=data, scale_inv=(1.0 / scale).astype(jnp.float32),
+                   fmt_name=fmt_name)
+
+
+def dequantize(q: QTensor, dtype=jnp.bfloat16) -> jax.Array:
+    return q.dequantize(dtype)
+
+
+def fake_quant(x: jax.Array, fmt_name: str, axis: Optional[tuple] = None,
+               scale: Optional[jax.Array] = None) -> jax.Array:
+    """Quantize-dequantize; output has the dtype of ``x``.
+
+    For ``bf16`` this is the identity (inputs are already bf16).
+    """
+    fmt = get_format(fmt_name)
+    if fmt.name == "bf16":
+        return x
+    q = quantize(x, fmt_name, axis=axis, scale=scale)
+    return q.dequantize(x.dtype)
+
+
+def _round_to_format(xf: jax.Array, fmt: Format) -> jax.Array:
+    """Round fp32 values to an emulated mini-float grid (RTNE, saturating).
+
+    Handles formats without a native JAX dtype (e.g. fp4_e2m1).
+    """
+    m = fmt.mantissa_bits
+    # Exponent range of an IEEE-like minifloat with bias 2^(e-1)-1.
+    bias = 2 ** (fmt.exponent_bits - 1) - 1
+    emin = 1 - bias  # minimum normal exponent
+    absx = jnp.abs(xf)
+    sign = jnp.sign(xf)
+    # Clamp to max, flush below half the smallest subnormal to zero.
+    absx = jnp.minimum(absx, fmt.max_value)
+    exp = jnp.floor(jnp.log2(jnp.maximum(absx, 1e-38)))
+    exp = jnp.maximum(exp, emin)  # subnormal region shares emin spacing
+    step = jnp.exp2(exp - m)
+    rounded = jnp.round(absx / step) * step
+    rounded = jnp.where(absx == 0.0, 0.0, rounded)
+    return sign * jnp.minimum(rounded, fmt.max_value)

@@ -1,0 +1,94 @@
+"""Serving engine: batched prefill + decode under an MP assignment.
+
+TTFT (the paper's measured quantity) = wall time of the compiled prefill
+step. ``generate`` runs greedy decode over the KV/SSM caches. The engine
+accepts an op->format assignment produced by the AMP pipeline and builds the
+quantized step functions from it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models.encdec import EncDec
+
+__all__ = ["ServeEngine"]
+
+
+@dataclasses.dataclass
+class GenResult:
+    tokens: jax.Array
+    ttft_s: float
+    decode_s: float
+    tokens_per_s: float
+
+
+class ServeEngine:
+    def __init__(self, model, mp: Optional[dict] = None, mesh=None,
+                 donate: bool = True):
+        self.model = model
+        self.mp = mp or {}
+        self.mesh = mesh
+        d = (1,) if donate else ()
+        self.prefill_step = jax.jit(make_prefill_step(model, mp=self.mp),
+                                    donate_argnums=d)
+        self.decode_step = jax.jit(make_decode_step(model, mp=self.mp),
+                                   donate_argnums=d)
+
+    # ------------------------------------------------------------------
+    def init_caches(self, batch: int, max_len: int, enc_len: int = 0):
+        if isinstance(self.model, EncDec):
+            return self.model.init_cache(batch, max_len, enc_len)
+        return self.model.init_cache(batch, max_len)
+
+    def ttft(self, batch: dict, max_len: int, n_iters: int = 5,
+             n_warmup: int = 2) -> float:
+        """Median prefill wall time (the paper averages 5 iterations)."""
+        B = batch["tokens"].shape[0]
+        enc_len = batch["frames"].shape[1] if "frames" in batch else 0
+        times = []
+        for i in range(n_warmup + n_iters):
+            caches = self.init_caches(B, max_len, enc_len)
+            t0 = time.perf_counter()
+            logits, caches = self.prefill_step(self.model_params, caches, batch)
+            jax.block_until_ready(logits)
+            if i >= n_warmup:
+                times.append(time.perf_counter() - t0)
+        times.sort()
+        return times[len(times) // 2]
+
+    # ------------------------------------------------------------------
+    def generate(self, params, batch: dict, max_new_tokens: int,
+                 max_len: Optional[int] = None) -> GenResult:
+        self.model_params = params
+        tokens = batch["tokens"]
+        B, T0 = tokens.shape
+        enc_len = batch["frames"].shape[1] if "frames" in batch else 0
+        prefix = 0
+        if batch.get("prefix_embeds") is not None:
+            prefix = batch["prefix_embeds"].shape[1]
+        max_len = max_len or (T0 + prefix + max_new_tokens)
+        caches = self.init_caches(B, max_len, enc_len)
+
+        t0 = time.perf_counter()
+        logits, caches = self.prefill_step(params, caches, batch)
+        jax.block_until_ready(logits)
+        ttft = time.perf_counter() - t0
+
+        out = [jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)]
+        t1 = time.perf_counter()
+        pos = T0 + prefix
+        for i in range(max_new_tokens - 1):
+            logits, caches = self.decode_step(
+                params, caches, out[-1][:, None], jnp.array(pos + i, jnp.int32))
+            out.append(jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32))
+        jax.block_until_ready(out[-1])
+        dt = time.perf_counter() - t1
+        toks = jnp.stack(out, axis=1)
+        return GenResult(tokens=toks, ttft_s=ttft, decode_s=dt,
+                         tokens_per_s=B * max_new_tokens / max(dt, 1e-9))

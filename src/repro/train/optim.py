@@ -1,0 +1,189 @@
+"""Optimizers with spec-aware (ZeRO-shardable) state.
+
+AdamW for standard scales; Adafactor (factored second moment, no first
+moment) for >=100B-param configs where full Adam state cannot fit v5e HBM —
+the selection rule lives in ``select_optimizer``. State layouts are derived
+from the model's ParamSpecs so the launcher can assign ZeRO-1 shardings to
+the moments without materializing them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.spec import ParamSpec
+
+__all__ = ["OptConfig", "select_optimizer", "init_state", "state_specs",
+           "apply_updates", "lr_at"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    # adafactor
+    decay_offset: float = 1e-30
+
+
+def select_optimizer(n_params: int, base: Optional[OptConfig] = None) -> OptConfig:
+    base = base or OptConfig()
+    if n_params >= 100e9 and base.name == "adamw":
+        return dataclasses.replace(base, name="adafactor")
+    return base
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def state_specs(param_specs: dict, cfg: OptConfig) -> dict:
+    """Flat path->ParamSpec dict of optimizer-state tensors."""
+    out: dict = {"step": ParamSpec((), (), jnp.int32, "zeros")}
+    for path, ps in param_specs.items():
+        if cfg.name == "adamw":
+            out[f"mu/{path}"] = ParamSpec(ps.shape, ps.logical_axes,
+                                          jnp.float32, "zeros")
+            out[f"nu/{path}"] = ParamSpec(ps.shape, ps.logical_axes,
+                                          jnp.float32, "zeros")
+        else:  # adafactor: row/col second-moment factors
+            if _factored(ps.shape):
+                out[f"vr/{path}"] = ParamSpec(ps.shape[:-1],
+                                              ps.logical_axes[:-1],
+                                              jnp.float32, "zeros")
+                out[f"vc/{path}"] = ParamSpec(ps.shape[:-2] + ps.shape[-1:],
+                                              ps.logical_axes[:-2]
+                                              + ps.logical_axes[-1:],
+                                              jnp.float32, "zeros")
+            else:
+                out[f"v/{path}"] = ParamSpec(ps.shape, ps.logical_axes,
+                                             jnp.float32, "zeros")
+    return out
+
+
+def init_state(param_specs: dict, cfg: OptConfig) -> dict:
+    from repro.nn.spec import tree_from_flat
+    flat = {}
+    for path, ps in state_specs(param_specs, cfg).items():
+        flat[path] = jnp.zeros(ps.shape, ps.dtype)
+    return tree_from_flat(flat)
+
+
+# ---------------------------------------------------------------------------
+# update
+# ---------------------------------------------------------------------------
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+# leaves larger than this get their update lax.map'ed over the leading
+# (stacked-layers) dim, bounding fp32 optimizer temporaries to one slice
+_CHUNKED_UPDATE_BYTES = 256 * 1024 * 1024
+
+
+def _update_one(cfg: OptConfig, step, lr, scale, p, g, st: dict) -> tuple:
+    """Elementwise optimizer math for one param (or one stacked slice).
+
+    Returns (new_p, new_state_parts).
+    """
+    g = g.astype(jnp.float32) * scale
+    pf = p.astype(jnp.float32)
+    out_s = {}
+    if cfg.name == "adamw":
+        mu = cfg.b1 * st["mu"] + (1 - cfg.b1) * g
+        nu = cfg.b2 * st["nu"] + (1 - cfg.b2) * jnp.square(g)
+        t = step.astype(jnp.float32)
+        mu_hat = mu / (1 - cfg.b1 ** t)
+        nu_hat = nu / (1 - cfg.b2 ** t)
+        upd = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        out_s["mu"] = mu
+        out_s["nu"] = nu
+    else:  # adafactor (no first moment)
+        b2 = 1.0 - (step.astype(jnp.float32) ** -0.8)
+        g2 = jnp.square(g) + cfg.decay_offset
+        if "vr" in st:
+            vr = b2 * st["vr"] + (1 - b2) * jnp.mean(g2, axis=-1)
+            vc = b2 * st["vc"] + (1 - b2) * jnp.mean(g2, axis=-2)
+            out_s["vr"] = vr
+            out_s["vc"] = vc
+            rmean = jnp.mean(vr, axis=-1, keepdims=True)
+            vhat = (vr / jnp.maximum(rmean, 1e-30))[..., None] \
+                * vc[..., None, :]
+        else:
+            v = b2 * st["v"] + (1 - b2) * g2
+            out_s["v"] = v
+            vhat = v
+        upd = g * jax.lax.rsqrt(jnp.maximum(vhat, 1e-30))
+        # relative update clipping (Adafactor d=1.0; per-slice when chunked)
+        rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
+        upd = upd / jnp.maximum(1.0, rms)
+    if cfg.weight_decay and p.ndim >= 2:
+        upd = upd + cfg.weight_decay * pf
+    return (pf - lr * upd).astype(p.dtype), out_s
+
+
+def apply_updates(params: dict, grads: dict, state: dict,
+                  cfg: OptConfig) -> tuple:
+    """Returns (new_params, new_state, metrics)."""
+    from repro.nn.spec import flatten_paths, tree_from_flat
+
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else 1.0
+
+    fp = flatten_paths(params)
+    fg = flatten_paths(grads)
+    fs = flatten_paths(state)
+    new_p, new_s = {}, {"step": step}
+
+    for path, p in fp.items():
+        st = {pre: fs[f"{pre}/{path}"] for pre in ("mu", "nu", "vr", "vc", "v")
+              if f"{pre}/{path}" in fs}
+        # vr/vc state only counts as factored if the slice stays >= 2D
+        chunk = (p.nbytes > _CHUNKED_UPDATE_BYTES and p.ndim >= 3
+                 and p.shape[0] > 1
+                 and all(s.shape[:1] == p.shape[:1] for s in st.values()))
+        if chunk:
+            np_, ns_ = jax.lax.map(
+                lambda args: _update_one(cfg, step, lr, scale, args[0],
+                                         args[1], args[2]),
+                (p, fg[path], st))
+        else:
+            np_, ns_ = _update_one(cfg, step, lr, scale, p, fg[path], st)
+        new_p[path] = np_
+        for k, v in ns_.items():
+            new_s[f"{k}/{path}"] = v
+
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return tree_from_flat(new_p), tree_from_flat(new_s), metrics

@@ -1,0 +1,147 @@
+"""Training loop with checkpoint/restart, straggler watchdog and metrics.
+
+Fault-tolerance contract:
+* auto-resume from the latest digest-valid checkpoint (params + optimizer +
+  step); the data stream is step-seeded so a restart reproduces it exactly;
+* atomic checkpoints every ``ckpt_every`` steps (CheckpointManager);
+* straggler watchdog: a step exceeding ``step_time_budget`` x median emits a
+  warning record, forces a checkpoint at the next boundary and (optionally)
+  aborts with exit code 17 so the cluster manager reschedules the job —
+  restart-on-straggler is the standard mitigation when a host degrades;
+* elastic: restore re-shards onto whatever mesh the new process builds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import statistics
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.distributed import sharding as shd
+from repro.launch.steps import make_train_step
+from repro.nn.spec import flatten_paths
+from repro.train import optim
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 200
+    ckpt_every: int = 50
+    ckpt_dir: str = "checkpoints"
+    keep_n: int = 3
+    log_every: int = 10
+    n_microbatches: int = 1
+    step_time_budget: float = 5.0      # x median -> straggler
+    abort_on_straggler: bool = False
+    metrics_path: Optional[str] = None
+
+
+class Trainer:
+    def __init__(self, model, opt_cfg: optim.OptConfig, mesh,
+                 cfg: TrainerConfig, mp: Optional[dict] = None):
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.mesh = mesh
+        self.cfg = cfg
+        self.ckpt = CheckpointManager(cfg.ckpt_dir, cfg.keep_n)
+        self.specs = model.param_specs()
+        self.p_sh = shd.param_shardings(self.specs, mesh)
+        self.s_specs = optim.state_specs(self.specs, opt_cfg)
+        self.s_sh = shd.param_shardings(self.s_specs, mesh, zero=True)
+        step_fn = make_train_step(model, opt_cfg,
+                                  n_microbatches=cfg.n_microbatches, mp=mp)
+        self.train_step = jax.jit(step_fn, donate_argnums=(0, 1))
+        self._step_times: list = []
+
+    # ------------------------------------------------------------------
+    def init_or_resume(self, init_key) -> tuple:
+        """Returns (start_step, params, opt_state)."""
+        latest = self.ckpt.latest_valid_step()
+        if latest is not None:
+            shardings = {**{f"params/{k}": s for k, s in self.p_sh.items()},
+                         **{f"opt/{k}": s for k, s in self.s_sh.items()}}
+            step, tree, _ = self.ckpt.restore(latest, shardings)
+            return step, tree["params"], tree["opt"]
+        with self.mesh:
+            params = self._init_sharded(init_key)
+            opt_state = self._init_opt_sharded()
+        return 0, params, opt_state
+
+    def _init_sharded(self, key):
+        from repro.nn.spec import tree_from_flat
+        params = self.model.init(key)
+        flat = flatten_paths(params)
+        out = {p: jax.device_put(v, self.p_sh[p]) for p, v in flat.items()}
+        return tree_from_flat(out)
+
+    def _init_opt_sharded(self):
+        from repro.nn.spec import tree_from_flat
+        state = optim.init_state(self.specs, self.opt_cfg)
+        flat = flatten_paths(state)
+        out = {p: jax.device_put(v, self.s_sh[p]) for p, v in flat.items()}
+        return tree_from_flat(out)
+
+    # ------------------------------------------------------------------
+    def _log(self, rec: dict) -> None:
+        if self.cfg.metrics_path:
+            os.makedirs(os.path.dirname(self.cfg.metrics_path) or ".",
+                        exist_ok=True)
+            with open(self.cfg.metrics_path, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+
+    def _watchdog(self, dt: float, step: int) -> bool:
+        """Returns True if this step is a straggler."""
+        self._step_times.append(dt)
+        hist = self._step_times[-50:]
+        if len(hist) < 5:
+            return False
+        med = statistics.median(hist[:-1])
+        if dt > self.cfg.step_time_budget * med:
+            self._log({"event": "straggler", "step": step, "dt": dt,
+                       "median": med})
+            return True
+        return False
+
+    # ------------------------------------------------------------------
+    def fit(self, data, start_key=None, eval_fn: Optional[Callable] = None):
+        start_key = start_key if start_key is not None else jax.random.key(0)
+        step, params, opt_state = self.init_or_resume(start_key)
+        last_loss = None
+        force_ckpt = False
+        with self.mesh:
+            while step < self.cfg.total_steps:
+                batch = data.batch_at(step)
+                t0 = time.time()
+                params, opt_state, metrics = self.train_step(
+                    params, opt_state, batch)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                step += 1
+                straggler = self._watchdog(dt, step)
+                force_ckpt |= straggler
+                if step % self.cfg.log_every == 0 or step == 1:
+                    rec = {"step": step, "loss": loss, "dt": round(dt, 4),
+                           "lr": float(metrics["lr"]),
+                           "grad_norm": float(metrics["grad_norm"])}
+                    self._log(rec)
+                    print(f"step {step:5d} loss {loss:.4f} "
+                          f"dt {dt*1e3:7.1f}ms gnorm {rec['grad_norm']:.3f}",
+                          flush=True)
+                if step % self.cfg.ckpt_every == 0 or force_ckpt \
+                        or step == self.cfg.total_steps:
+                    self.ckpt.save(step, {"params": params, "opt": opt_state},
+                                   extra={"loss": loss})
+                    force_ckpt = False
+                    if straggler and self.cfg.abort_on_straggler:
+                        raise SystemExit(17)
+                last_loss = loss
+        if eval_fn is not None:
+            eval_fn(params)
+        return params, opt_state, last_loss

@@ -1,0 +1,12 @@
+import jax
+import pytest
+
+# NOTE: no XLA_FLAGS device-count override here — smoke tests must see the
+# real (single) device; only launch/dryrun.py forces 512 placeholder devices.
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)

@@ -1,0 +1,48 @@
+"""Elastic rescale: checkpoints restore onto a different mesh (subprocess
+with 8 placeholder devices — the device count must be set pre-jax-init)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+
+def test_restore_onto_different_mesh(tmp_path):
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np
+        from repro.checkpoint import CheckpointManager
+        from repro.distributed import sharding as shd
+        from repro.models.registry import get_model
+        from repro.nn.spec import flatten_paths
+
+        m = get_model("llama3_1b", smoke=True)
+        params = m.init(jax.random.key(0))
+
+        # save from a (2, 2) mesh
+        mesh_a = jax.make_mesh((2, 2), ("data", "model"),
+                               devices=jax.devices()[:4])
+        sh_a = shd.param_shardings(m.param_specs(), mesh_a)
+        flat = flatten_paths(params)
+        placed = {{p: jax.device_put(v, sh_a[p]) for p, v in flat.items()}}
+        cm = CheckpointManager(r"{tmp_path}")
+        from repro.nn.spec import tree_from_flat
+        cm.save(7, {{"params": tree_from_flat(placed)}})
+
+        # restore onto a (4, 2) mesh — elastic rescale
+        mesh_b = jax.make_mesh((4, 2), ("data", "model"),
+                               devices=jax.devices()[:8])
+        sh_b = shd.param_shardings(m.param_specs(), mesh_b)
+        shardings = {{f"params/{{k}}": s for k, s in sh_b.items()}}
+        step, tree, _ = cm.restore(shardings=shardings)
+        assert step == 7
+        for p, v in flatten_paths(tree["params"]).items():
+            np.testing.assert_array_equal(
+                np.asarray(v, np.float32), np.asarray(flat[p], np.float32))
+            assert v.sharding.mesh.shape["data"] == 4
+        print("ELASTIC-OK")
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", script], env=env, cwd=".",
+                         capture_output=True, text=True, timeout=300)
+    assert "ELASTIC-OK" in out.stdout, out.stderr[-2000:]

@@ -1,0 +1,73 @@
+"""IP solver (MCKP, eq. 5): optimality vs brute force on random instances."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ip_solver import MCKPGroup, pareto_prune, solve_mckp
+
+
+def _random_instance(rng, n_groups, n_cfg):
+    groups = []
+    for j in range(n_groups):
+        c = rng.uniform(0, 10, n_cfg)
+        d = rng.uniform(0, 5, n_cfg)
+        # ensure a zero-cost option exists (the all-BF16 config)
+        d[0], c[0] = 0.0, 0.0
+        groups.append(MCKPGroup(f"g{j}", list(range(n_cfg)), c, d))
+    return groups
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10**6), st.integers(1, 5), st.integers(1, 6),
+       st.floats(0.0, 20.0))
+def test_dp_and_greedy_match_brute(seed, n_groups, n_cfg, budget):
+    rng = np.random.default_rng(seed)
+    groups = _random_instance(rng, n_groups, n_cfg)
+    exact = solve_mckp(groups, budget, method="brute")
+    heur = solve_mckp(groups, budget, method="dp", bins=20000)
+    assert heur.d_total <= budget * (1 + 1e-9) + 1e-12
+    # dp on a fine grid should be within a hair of optimal, never above
+    assert heur.c_total <= exact.c_total + 1e-9
+    assert heur.c_total >= exact.c_total * 0.99 - 1e-6
+    # the LP bound is a true upper bound
+    assert exact.upper_bound >= exact.c_total - 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10**6))
+def test_pareto_prune_preserves_optimum(seed):
+    rng = np.random.default_rng(seed)
+    groups = _random_instance(rng, 3, 6)
+    budget = float(rng.uniform(0, 10))
+    full = solve_mckp(groups, budget, method="brute")
+    pruned_groups = []
+    for g in groups:
+        kept, c, d = pareto_prune(g)
+        pruned_groups.append(MCKPGroup(g.name, [g.labels[i] for i in kept], c, d))
+    pr = solve_mckp(pruned_groups, budget, method="brute")
+    assert np.isclose(pr.c_total, full.c_total)
+
+
+def test_infeasible_raises():
+    g = MCKPGroup("g", [0, 1], np.array([1.0, 2.0]), np.array([5.0, 6.0]))
+    with pytest.raises(ValueError):
+        solve_mckp([g], budget=1.0, method="brute")
+
+
+def test_monotone_in_budget():
+    rng = np.random.default_rng(7)
+    groups = _random_instance(rng, 4, 4)
+    prev = -1.0
+    for b in (0.0, 1.0, 3.0, 10.0, 100.0):
+        r = solve_mckp(groups, b, method="brute")
+        assert r.c_total >= prev - 1e-12
+        prev = r.c_total
+
+
+def test_large_instance_runs_fast():
+    rng = np.random.default_rng(3)
+    groups = _random_instance(rng, 300, 4)   # ~4^300 brute-force impossible
+    r = solve_mckp(groups, budget=50.0, method="auto", bins=4096)
+    assert r.method in ("dp", "lp_greedy")
+    assert r.d_total <= 50.0 * (1 + 1e-9)
+    assert r.gap < 0.05  # certified near-optimal via the LP bound

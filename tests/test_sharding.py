@@ -1,0 +1,107 @@
+"""Sharding rules: divisibility fallback, ZeRO, roofline HLO parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis.roofline import parse_collective_bytes
+from repro.distributed import sharding as shd
+from repro.nn.spec import ParamSpec
+
+
+def _mesh():
+    # single-device "mesh" with the production axis names: rule logic only
+    return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+
+
+def test_partition_spec_divisible():
+    mesh = jax.make_mesh((1, 2), ("data", "model"), devices=jax.devices() * 2) \
+        if len(jax.devices()) >= 2 else None
+    # use abstract reasoning through a fake mesh via axis sizes on 1 device
+    mesh = jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+    ps = shd.partition_spec(ParamSpec((64, 128), ("ffn", "embed")), mesh)
+    assert ps == P("model")  # 64 % 1 == 0 -> sharded (trivially)
+
+
+def test_divisibility_fallback_replicates():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    ps = shd.partition_spec(ParamSpec((25, 64), ("heads", None)), FakeMesh())
+    assert ps == P()  # 25 % 16 != 0 -> replicated
+    ps2 = shd.partition_spec(ParamSpec((32, 64), ("heads", None)), FakeMesh())
+    assert ps2 == P("model")
+
+
+def test_kv_head_dim_fallback():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    spec = ParamSpec((128, 32768, 8, 128),
+                     ("act_batch", None, "kv_heads", "head_dim"))
+    ps = shd.partition_spec(spec, FakeMesh())
+    # kv_heads=8 not divisible -> head_dim picks up 'model'
+    assert ps == P("data", None, None, "model")
+
+
+def test_zero_sharding_adds_data_axis():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    spec = ParamSpec((1024, 4096), ("ffn", "embed"))
+    base = shd.partition_spec(spec, FakeMesh())
+    zero = shd.zero_partition_spec(spec, FakeMesh())
+    assert base == P("model")
+    assert zero == P("model", "data")
+
+
+def test_fsdp_rules_shard_embed():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    spec = ParamSpec((1024, 4096), ("ffn", "embed"))
+    ps = shd.partition_spec(spec, FakeMesh(), shd.FSDP_RULES)
+    assert ps == P("model", "data")
+
+
+def test_shard_hint_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    y = shd.shard_hint(x, "data", None)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_parse_collective_bytes():
+    hlo = """
+  %ag = bf16[64,1024]{1,0} all-gather(%x), replica_groups={}
+  %ar.1 = f32[128]{0} all-reduce(%y), to_apply=%sum
+  %rs = (f32[32]{0}, f32[32]{0}) reduce-scatter(%a, %b), dimensions={0}
+  %a2a = bf16[8,16]{1,0} all-to-all(%z), dimensions={0}
+  %cp = u8[4]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %notacoll = f32[999]{0} add(%p, %q)
+"""
+    got = parse_collective_bytes(hlo)
+    assert got["all-gather"] == 64 * 1024 * 2
+    assert got["all-reduce"] == 128 * 4
+    assert got["reduce-scatter"] == 2 * 32 * 4
+    assert got["all-to-all"] == 8 * 16 * 2
+    assert got["collective-permute"] == 4
+    assert got["total"] == sum(got[k] for k in (
+        "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute"))
+
+
+def test_grad_compression_roundtrip(rng):
+    """fp8 gradient compression w/ error feedback: bounded per-step error,
+    vanishing accumulated bias (the distributed-optimization trick)."""
+    from repro.distributed.grad_compress import compress_decompress
+    g = jax.random.normal(rng, (256, 128), jnp.float32)
+    err = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    acc_ref = jnp.zeros_like(g)
+    for i in range(8):
+        gi = g * (1.0 + 0.1 * i)
+        out, err = compress_decompress(gi, err)
+        acc = acc + out
+        acc_ref = acc_ref + gi
+    rel = float(jnp.linalg.norm(acc - acc_ref) / jnp.linalg.norm(acc_ref))
+    assert rel < 0.02  # error feedback keeps the accumulated bias tiny

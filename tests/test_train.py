@@ -1,0 +1,132 @@
+"""Training loop: learning, checkpoint/restart, corruption quarantine."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data.synthetic import SyntheticConfig, SyntheticLM
+from repro.launch.mesh import make_local_mesh
+from repro.models.registry import get_model
+from repro.train.optim import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+@pytest.fixture()
+def tmp_ckpt(tmp_path):
+    return str(tmp_path / "ckpt")
+
+
+def _mk(tmp_ckpt, total_steps=25, **kw):
+    m = get_model("llama3_1b", smoke=True)
+    mesh = make_local_mesh(1, 1)
+    kw.setdefault("log_every", 100)
+    tc = TrainerConfig(total_steps=total_steps, ckpt_every=10,
+                       ckpt_dir=tmp_ckpt,
+                       metrics_path=os.path.join(tmp_ckpt, "metrics.jsonl"),
+                       **kw)
+    oc = OptConfig(lr=1e-3, warmup_steps=5, total_steps=50)
+    return Trainer(m, oc, mesh, tc)
+
+
+def test_loss_decreases(tmp_ckpt):
+    tr = _mk(tmp_ckpt)
+    data = SyntheticLM(SyntheticConfig(vocab_size=512, batch=8, seq_len=64))
+    first = float(jax.jit(lambda: 0.0)())  # warm jit path
+    _, _, last = tr.fit(data)
+    # initial loss ~ ln(512) = 6.24; after 25 steps must be well below
+    assert last < 5.6
+
+
+def test_checkpoint_resume_bitexact(tmp_ckpt):
+    data = SyntheticLM(SyntheticConfig(vocab_size=512, batch=8, seq_len=64))
+    tr = _mk(tmp_ckpt, total_steps=20)
+    p1, o1, _ = tr.fit(data)
+    # restart from step 20, run to 30
+    tr2 = _mk(tmp_ckpt, total_steps=30)
+    step, p, o = tr2.init_or_resume(jax.random.key(0))
+    assert step == 20
+    p2, o2, _ = tr2.fit(data)
+    # compare against a straight 30-step run (identical stream + math)
+    ckpt2 = tmp_ckpt + "_straight"
+    tr3 = _mk(ckpt2, total_steps=30)
+    p3, o3, _ = tr3.fit(data)
+    for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(p3)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-2)
+
+
+def test_corrupted_checkpoint_quarantined(tmp_ckpt):
+    data = SyntheticLM(SyntheticConfig(vocab_size=512, batch=8, seq_len=64))
+    tr = _mk(tmp_ckpt, total_steps=20)
+    tr.fit(data)
+    cm = CheckpointManager(tmp_ckpt)
+    steps = cm.all_steps()
+    assert len(steps) >= 2
+    # corrupt the newest checkpoint's payload
+    latest = steps[-1]
+    path = os.path.join(tmp_ckpt, f"step_{latest:010d}", "arrays.npz")
+    with open(path, "r+b") as f:
+        f.seek(200)
+        f.write(b"\xde\xad\xbe\xef" * 8)
+    assert cm.latest_valid_step() == steps[-2]
+    step, tree, _ = cm.restore()
+    assert step == steps[-2]
+
+
+def test_checkpoint_atomicity(tmp_ckpt):
+    cm = CheckpointManager(tmp_ckpt, keep_n=2)
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 3), jnp.bfloat16)}}
+    cm.save(1, tree)
+    cm.save(2, tree, extra={"note": "x"})
+    cm.save(3, tree)
+    assert cm.all_steps() == [2, 3]  # keep_n GC
+    step, restored, extra = cm.restore()
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    assert restored["b"]["c"].dtype == np.dtype("bfloat16") or \
+        str(restored["b"]["c"].dtype) == "bfloat16"
+
+
+def test_metrics_written(tmp_ckpt):
+    data = SyntheticLM(SyntheticConfig(vocab_size=512, batch=8, seq_len=64))
+    tr = _mk(tmp_ckpt, total_steps=12, log_every=5)
+    tr.fit(data)
+    lines = open(os.path.join(tmp_ckpt, "metrics.jsonl")).read().splitlines()
+    recs = [json.loads(l) for l in lines]
+    assert any(r.get("step") == 5 for r in recs)
+
+
+def test_data_stream_deterministic():
+    cfg = SyntheticConfig(vocab_size=512, batch=4, seq_len=32, seed=11)
+    a = SyntheticLM(cfg).batch_at(17)
+    b = SyntheticLM(cfg).batch_at(17)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    c = SyntheticLM(cfg).batch_at(18)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+
+
+def test_grad_accumulation_equivalence(rng):
+    """n_microbatches=2 matches a single big batch (mean-of-means here since
+    micro losses are per-token means over equal-sized microbatches)."""
+    from repro.launch.steps import make_train_step
+    from repro.train.optim import OptConfig, init_state
+    m = get_model("llama3_1b", smoke=True)
+    p = m.init(rng)
+    oc = OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    s = init_state(m.param_specs(), oc)
+    batch = {"tokens": jax.random.randint(rng, (8, 32), 0, 512),
+             "labels": jax.random.randint(rng, (8, 32), 0, 512)}
+    p1, s1, m1 = jax.jit(make_train_step(m, oc, n_microbatches=1))(p, s, batch)
+    p2, s2, m2 = jax.jit(make_train_step(m, oc, n_microbatches=2))(p, s, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 0.02
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-2)
