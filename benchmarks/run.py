@@ -9,7 +9,7 @@ import traceback
 def main() -> None:
     from benchmarks import (fig1_group_additivity, fig3_validation,
                             fig4_tradeoff, fig8_macs, fig9_memory,
-                            kernels_bench, table1_accuracy)
+                            kernels_bench, serve_throughput, table1_accuracy)
     benches = [
         ("fig1_group_additivity", fig1_group_additivity.main),
         ("fig3_validation", fig3_validation.main),
@@ -18,6 +18,7 @@ def main() -> None:
         ("fig8_macs", fig8_macs.main),
         ("fig9_memory", fig9_memory.main),
         ("kernels_bench", kernels_bench.main),
+        ("serve_throughput", serve_throughput.main),
     ]
     failures = 0
     for name, fn in benches:

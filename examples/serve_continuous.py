@@ -1,0 +1,73 @@
+"""Continuous-batching serving demo: an MPPlan flows from the IP solver
+straight into the engine, and a staggered request stream drains through a
+fixed pool of cache slots.
+
+    PYTHONPATH=src python examples/serve_continuous.py \
+        [--tau 0.01] [--n-slots 4] [--requests 8] [--new-tokens 12]
+
+Pipeline shown here (the full plan->engine handoff):
+  1. ``auto_mixed_precision`` solves the IP and returns an ``MPPlan``;
+  2. ``ContinuousBatchingEngine(model, mp=plan)`` compiles quantized
+     prefill/decode steps from the plan (``core.mpconfig.as_assignment``);
+  3. requests with different prompts/arrival times share one decode batch,
+     each cache slot advancing at its own sequence depth.
+"""
+import argparse
+
+import numpy as np
+
+from benchmarks.common import bench_model, bench_sensitivity
+from repro.core.pipeline import AMPOptions, auto_mixed_precision
+from repro.serve import ContinuousBatchingEngine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tau", type=float, default=0.01)
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--arrival-every", type=int, default=2)
+    args = ap.parse_args()
+
+    model, params, data, _ = bench_model()
+    sens = bench_sensitivity()
+    plan = auto_mixed_precision(model, params, None,
+                                AMPOptions(tau=args.tau, objective="ET"),
+                                sens=sens)
+    print(f"MP plan quantizes {plan.n_quantized}/{plan.meta['n_ops']} ops\n")
+
+    rng = np.random.default_rng(11)
+    reqs = [Request(rid=i,
+                    tokens=np.asarray(
+                        data.batch_at(50_000 + i)["tokens"][0,
+                                                            :args.prompt_len],
+                        np.int32),
+                    max_new_tokens=args.new_tokens,
+                    arrival=i * args.arrival_every)
+            for i in range(args.requests)]
+    max_len = args.prompt_len + args.new_tokens
+
+    outs = {}
+    for tag, mp in (("bf16", None), ("mp-fp8", plan)):
+        eng = ContinuousBatchingEngine(model, n_slots=args.n_slots,
+                                       max_len=max_len, mp=mp)
+        eng.serve(params, [reqs[0]])          # warmup (compile)
+        out = eng.serve(params, reqs)
+        outs[tag] = out
+        ttfts = sorted(r.ttft_s for r in out.results.values())
+        print(f"{tag:8s} {out.n_steps:4d} decode steps   "
+              f"{out.tokens_per_s:8.1f} tok/s   "
+              f"TTFT p50 {ttfts[len(ttfts)//2]*1e3:7.2f} ms")
+
+    agree = np.mean([
+        np.mean(outs["bf16"].results[i].tokens == outs["mp-fp8"].results[i].tokens)
+        for i in range(args.requests)])
+    print(f"\ngreedy-token agreement bf16 vs mp: {agree:.2%}")
+    print("(on-host quantization is simulated; wall-clock gains appear on "
+          "accelerators with native FP8 throughput — see DESIGN.md)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,17 @@
-"""Mixed-precision plan: the pipeline's output artifact."""
+"""Mixed-precision plan: the pipeline's output artifact.
+
+A plan flows into serving through :func:`as_assignment`: every engine / step
+builder accepts ``mp`` as either a raw ``op name -> format`` dict or an
+``MPPlan`` and normalizes it here, so the IP solver's artifact is directly
+servable (``auto_mixed_precision(...) -> ServeEngine(model, mp=plan)``).
+"""
 from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Optional
+from typing import Optional, Union
 
-__all__ = ["MPPlan"]
+__all__ = ["MPPlan", "as_assignment"]
 
 
 @dataclasses.dataclass
@@ -22,6 +28,17 @@ class MPPlan:
 
     def format_for(self, op_name: str) -> str:
         return self.assignment.get(op_name, "bf16")
+
+    def unknown_ops(self, known_ops) -> set:
+        """Assignment keys that do not name an op in ``known_ops``.
+
+        Callers that pair a plan with a model (e.g. the serving launcher)
+        check this before compiling step functions: a non-empty result means
+        the plan was solved for a different model (or op namespace) and its
+        quantization directives would silently not apply.
+        """
+        known = set(known_ops)
+        return {n for n in self.assignment if n not in known}
 
     @property
     def n_quantized(self) -> int:
@@ -42,3 +59,20 @@ class MPPlan:
     def load(cls, path: str) -> "MPPlan":
         with open(path) as f:
             return cls.from_json(f.read())
+
+
+def as_assignment(mp: Union[None, dict, "MPPlan"]) -> Optional[dict]:
+    """Normalize an engine ``mp`` argument to an assignment dict (or None).
+
+    Accepts ``None`` (pure bf16), a raw ``op name -> format name`` dict, or
+    an :class:`MPPlan`; reference-format entries are dropped so an empty
+    result collapses to ``None`` and engines skip the MP quant context.
+    """
+    if mp is None:
+        return None
+    if isinstance(mp, MPPlan):
+        mp = mp.assignment
+    if not isinstance(mp, dict):
+        raise TypeError(f"mp must be None, dict or MPPlan, got {type(mp)}")
+    mp = {n: f for n, f in mp.items() if f != "bf16"}
+    return mp or None

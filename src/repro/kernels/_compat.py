@@ -1,0 +1,16 @@
+"""Pallas-TPU API compatibility across JAX versions.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in newer
+JAX releases; resolve whichever this install provides so the kernels build
+against both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+if hasattr(pltpu, "CompilerParams"):
+    CompilerParams = pltpu.CompilerParams
+else:  # pragma: no cover - depends on installed jax version
+    CompilerParams = pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

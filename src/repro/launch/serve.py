@@ -1,10 +1,18 @@
-"""Serving launcher: batched generate under an optional MP plan.
+"""Serving launcher: one-shot batch or continuous-batching serving under an
+optional MP plan.
 
+    # one-shot (the paper's TTFT measurement harness)
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_1b --smoke \
         --mp-plan plan.json --batch 4 --new-tokens 16
 
+    # continuous batching: staggered arrivals drain through cache slots
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_1b --smoke \
+        --continuous --n-slots 4 --requests 12 --arrival-every 2
+
 Loads params from a checkpoint directory if given, else random-init (smoke
-demos). Reports TTFT (the paper's measured quantity) and decode throughput.
+demos). An ``--mp-plan`` json (saved by ``MPPlan.save``) flows straight into
+either engine. Reports TTFT (the paper's measured quantity) and decode
+throughput.
 """
 from __future__ import annotations
 
@@ -12,11 +20,27 @@ import argparse
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.core.mpconfig import MPPlan
 from repro.models.registry import get_model
-from repro.serve.engine import ServeEngine
+from repro.serve import ContinuousBatchingEngine, Request, ServeEngine
+
+
+def _plan_unknown_ops(model, params, plan: MPPlan) -> set:
+    """Abstract-trace the serving prefill and flag plan ops this model lacks."""
+    from repro.models.encdec import EncDec
+    from repro.quant.qops import QuantContext
+    if isinstance(model, EncDec):
+        return set()  # encoder-decoder serving keeps its own op namespace
+    registry: list = []
+    ctx = QuantContext(mode="plain", registry=registry)
+    tokens = jax.ShapeDtypeStruct((1, 8), jnp.int32)
+    caches = model.init_cache(1, 16, abstract=True)
+    jax.eval_shape(lambda p, t, c: model.prefill(p, t, c, ctx),
+                   params, tokens, caches)
+    return plan.unknown_ops({op.name for op in registry})
 
 
 def main():
@@ -28,6 +52,12 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve a staggered request stream instead of one batch")
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--arrival-every", type=int, default=2,
+                    help="decode steps between request arrivals")
     args = ap.parse_args()
 
     model = get_model(args.arch, smoke=args.smoke)
@@ -39,22 +69,45 @@ def main():
         params = model.init(jax.random.key(0))
         print("[serve] random-init params (demo mode)")
 
-    mp = None
+    plan = None
     if args.mp_plan:
         plan = MPPlan.load(args.mp_plan)
-        mp = plan.assignment
         print(f"[serve] MP plan: {plan.n_quantized} ops quantized "
               f"(objective {plan.objective}, tau {plan.tau})")
+        unknown = _plan_unknown_ops(model, params, plan)
+        if unknown:
+            print(f"[serve] WARNING: {len(unknown)} plan ops not in this "
+                  f"model (e.g. {sorted(unknown)[:3]}) — they will NOT "
+                  f"apply; was the plan solved for a different arch?")
 
-    eng = ServeEngine(model, mp=mp, donate=False)
-    prompt = {"tokens": jax.random.randint(jax.random.key(1),
-                                           (args.batch, args.prompt_len), 0,
-                                           model.cfg.vocab_size)}
-    eng.generate(params, dict(prompt), max_new_tokens=2)  # compile
-    out = eng.generate(params, dict(prompt), max_new_tokens=args.new_tokens)
-    print(f"[serve] TTFT {out.ttft_s*1e3:.2f} ms | "
-          f"decode {out.tokens_per_s:.1f} tok/s | "
-          f"batch {args.batch} x {args.new_tokens} new tokens")
+    if args.continuous:
+        max_len = args.prompt_len + args.new_tokens
+        eng = ContinuousBatchingEngine(model, n_slots=args.n_slots,
+                                       max_len=max_len, mp=plan)
+        rng = np.random.default_rng(1)
+        reqs = [Request(rid=i,
+                        tokens=rng.integers(0, model.cfg.vocab_size,
+                                            args.prompt_len).astype(np.int32),
+                        max_new_tokens=args.new_tokens,
+                        arrival=i * args.arrival_every)
+                for i in range(args.requests)]
+        eng.serve(params, reqs[:1])  # compile
+        out = eng.serve(params, reqs)
+        ttfts = sorted(r.ttft_s for r in out.results.values())
+        p50 = f"{ttfts[len(ttfts)//2]*1e3:.2f} ms" if ttfts else "n/a"
+        print(f"[serve] continuous: {args.requests} reqs via {args.n_slots} "
+              f"slots | {out.n_steps} decode steps | "
+              f"{out.tokens_per_s:.1f} tok/s | TTFT p50 {p50}")
+    else:
+        eng = ServeEngine(model, mp=plan, donate=False)
+        prompt = {"tokens": jax.random.randint(jax.random.key(1),
+                                               (args.batch, args.prompt_len), 0,
+                                               model.cfg.vocab_size)}
+        eng.generate(params, dict(prompt), max_new_tokens=2)  # compile
+        out = eng.generate(params, dict(prompt), max_new_tokens=args.new_tokens)
+        print(f"[serve] TTFT {out.ttft_s*1e3:.2f} ms | "
+              f"decode {out.tokens_per_s:.1f} tok/s | "
+              f"batch {args.batch} x {args.new_tokens} new tokens")
 
 
 if __name__ == "__main__":

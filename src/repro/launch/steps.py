@@ -10,6 +10,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.mpconfig import as_assignment
 from repro.quant.qops import QuantContext
 from repro.train import optim
 
@@ -31,6 +32,7 @@ def _split_micro(batch: dict, n_micro: int) -> dict:
 def make_train_step(model, opt_cfg: optim.OptConfig,
                     n_microbatches: int = 1, mp: Optional[dict] = None):
     """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    mp = as_assignment(mp)
     ctx = QuantContext(mode="mp", mp=mp) if mp else QuantContext()
 
     def loss_fn(p, b):
@@ -64,6 +66,7 @@ def make_train_step(model, opt_cfg: optim.OptConfig,
 
 
 def make_eval_step(model, mp: Optional[dict] = None):
+    mp = as_assignment(mp)
     ctx = QuantContext(mode="mp", mp=mp) if mp else QuantContext()
 
     def eval_step(params, batch):
@@ -74,7 +77,11 @@ def make_eval_step(model, mp: Optional[dict] = None):
 
 def make_prefill_step(model, mp: Optional[dict] = None):
     """(params, caches, batch) -> (last-token logits, caches)."""
-    ctx = QuantContext(mode="mp", mp=mp) if mp else QuantContext()
+    mp = as_assignment(mp)
+    # serving uses per-sequence activation scales so co-batched requests are
+    # quantized independently (continuous batching keeps exact greedy parity)
+    ctx = (QuantContext(mode="mp", mp=mp, act_scale_axis=0) if mp
+           else QuantContext())
 
     from repro.models.encdec import EncDec
 
@@ -90,8 +97,15 @@ def make_prefill_step(model, mp: Optional[dict] = None):
 
 
 def make_decode_step(model, mp: Optional[dict] = None):
-    """(params, caches, token, pos) -> (logits, caches)."""
-    ctx = QuantContext(mode="mp", mp=mp) if mp else QuantContext()
+    """(params, caches, token, pos) -> (logits, caches).
+
+    ``pos`` is a scalar int32 for lock-step batches, or — for decoder-only
+    LMs — a (B,) int32 vector of per-slot positions so a continuous-batching
+    engine can decode sequences at different depths in one step.
+    """
+    mp = as_assignment(mp)
+    ctx = (QuantContext(mode="mp", mp=mp, act_scale_axis=0) if mp
+           else QuantContext())
 
     def decode_step(params, caches, token, pos):
         return model.decode_step(params, token, pos, caches, ctx)

@@ -514,10 +514,16 @@ class LM:
 
     def decode_step(self, params: dict, token: jax.Array, pos: jax.Array,
                     caches: dict, ctx: QuantContext):
-        """One token for every sequence. token: (B,1); pos: scalar int32."""
+        """One token for every sequence. token: (B,1); pos: scalar int32 for
+        a lock-step batch, or (B,) int32 with one position per sequence
+        (continuous batching: every cache slot decodes at its own depth)."""
         emb = jnp.take(params["embed"]["w"], token, axis=0).astype(self.dtype)
         B = token.shape[0]
-        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        pos = jnp.asarray(pos, jnp.int32)
+        if pos.ndim == 1:
+            positions = pos[:, None]
+        else:
+            positions = jnp.broadcast_to(pos[None, None], (B, 1))
         h, caches, _ = self._backbone(params, ctx, emb, positions,
                                       caches=caches, cache_pos=pos,
                                       decode=True)

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.quant import qtensor
 from repro.quant.formats import get_format
-from repro.quant.qops import OpInfo, QuantContext
+from repro.quant.qops import OpInfo, QuantContext, act_quant_axes
 
 __all__ = ["flash_attention"]
 
@@ -64,11 +64,13 @@ def flash_attention(ctx: QuantContext, scope: str, q: jax.Array, k: jax.Array,
 
     qk_fmt = _mp_fmt(ctx, f"{scope}/qk_matmul")
     av_fmt = _mp_fmt(ctx, f"{scope}/av_matmul")
+    # q/k/v are activations: honor per-sequence scales (serving contexts)
+    axes = act_quant_axes(ctx, 4)
     if qk_fmt is not None:
-        q = qtensor.fake_quant(q, qk_fmt)
-        k = qtensor.fake_quant(k, qk_fmt)
+        q = qtensor.fake_quant(q, qk_fmt, axis=axes)
+        k = qtensor.fake_quant(k, qk_fmt, axis=axes)
     if av_fmt is not None:
-        v = qtensor.fake_quant(v, av_fmt)
+        v = qtensor.fake_quant(v, av_fmt, axis=axes)
 
     nq = -(-T // block)
     nk = -(-S // block)
@@ -122,7 +124,10 @@ def flash_attention(ctx: QuantContext, scope: str, q: jax.Array, k: jax.Array,
             l_new = l * corr + jnp.sum(p, axis=-1)
             pq = p.astype(vv.dtype)
             if av_fmt is not None:
-                pq = qtensor.fake_quant(pq, av_fmt)
+                # per-sequence scales here too, else co-batched rows couple
+                # through the block-probability amax (batch axis is 0)
+                pq = qtensor.fake_quant(pq, av_fmt,
+                                        axis=act_quant_axes(ctx, pq.ndim))
             pv = jnp.einsum("BKGTS,BSKD->BKGTD", pq, vv,
                             preferred_element_type=jnp.float32)
             acc_new = acc * corr[..., None] + pv

@@ -203,6 +203,16 @@ def _cache_write(cache: dict, tensors: dict, positions: jax.Array,
             new[name] = cache[name].at[:, idx].set(
                 t[:, T - W:].astype(cache[name].dtype))
         new["pos"] = cache["pos"].at[:, idx].set(positions[:, T - W:])
+    elif getattr(cache_pos, "ndim", 0) == 1:
+        # decode with per-sequence positions (continuous batching): each
+        # batch row writes its own ring slot
+        slot = (cache_pos % W).astype(jnp.int32)          # (B,)
+        bidx = jnp.arange(B)
+        for name, t in tensors.items():
+            new[name] = cache[name].at[bidx, slot].set(
+                t[:, 0].astype(cache[name].dtype))
+        new["pos"] = cache["pos"].at[bidx, slot].set(
+            positions[:, 0].astype(jnp.int32))
     else:
         # decode: single-slot ring write
         slot = (cache_pos % W).astype(jnp.int32)

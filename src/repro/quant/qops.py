@@ -64,6 +64,12 @@ class QuantContext:
     registry: Optional[list] = None           # out: list[OpInfo]
     scales: Optional[dict] = None             # op name -> (s_lhs, s_rhs) calibrated
     default_format: str = "bf16"
+    # When set (serving: 0), activation operands get one dynamic quant scale
+    # per slice of this axis instead of one per tensor. Per-sequence scales
+    # decouple co-batched requests — a prerequisite for continuous batching,
+    # where greedy tokens must not depend on which other requests share the
+    # decode batch. Weights keep per-tensor scales (batch-invariant anyway).
+    act_scale_axis: Optional[int] = None
 
     def format_for(self, name: str) -> str:
         if self.mp is None:
@@ -97,18 +103,28 @@ def _maybe_register(ctx: QuantContext, name: str, kind: str, spec: str,
 
 
 def _quantize_operand(x: jax.Array, fmt_name: str, impl: str,
-                      scale: Optional[jax.Array]) -> jax.Array:
+                      scale: Optional[jax.Array],
+                      axis: Optional[tuple] = None) -> jax.Array:
     """Return the operand as it would be consumed by the MP matmul."""
     fmt = get_format(fmt_name)
     if not fmt.is_quantized:
         return x
     if impl == "native" and fmt.dtype is not None:
-        q = qtensor.quantize(x, fmt_name, scale=scale)
+        q = qtensor.quantize(x, fmt_name, axis=axis, scale=scale)
         # Native path: dequantize scales are folded into the output; for
         # simplicity (and exactness of the noise model) we dequantize to the
         # compute dtype here — XLA fuses the rescale into the dot epilogue.
         return q.dequantize(x.dtype)
-    return qtensor.fake_quant(x, fmt_name, scale=scale)
+    return qtensor.fake_quant(x, fmt_name, axis=axis, scale=scale)
+
+
+def act_quant_axes(ctx: QuantContext, ndim: int) -> Optional[tuple]:
+    """Scale-reduction axes for an activation operand: everything except the
+    per-sequence axis (None -> per-tensor scale)."""
+    if ctx.act_scale_axis is None:
+        return None
+    keep = ctx.act_scale_axis % ndim
+    return tuple(a for a in range(ndim) if a != keep)
 
 
 def qeinsum(ctx: QuantContext, name: str, spec: str, lhs: jax.Array,
@@ -134,8 +150,13 @@ def qeinsum(ctx: QuantContext, name: str, spec: str, lhs: jax.Array,
                 from repro.kernels import ops as kops  # lazy: optional dep
                 return kops.fp8_linear(lhs, rhs, spec=spec, fmt_name=fmt_name,
                                        out_dtype=out_dtype)
-            lhs = _quantize_operand(lhs, fmt_name, ctx.impl, s_lhs)
-            rhs = _quantize_operand(rhs, fmt_name, ctx.impl, s_rhs)
+            # activations may use per-sequence scales (serving); the weight
+            # of a linear op is batch-invariant and keeps a per-tensor scale
+            lhs = _quantize_operand(lhs, fmt_name, ctx.impl, s_lhs,
+                                    act_quant_axes(ctx, lhs.ndim))
+            rhs = _quantize_operand(rhs, fmt_name, ctx.impl, s_rhs,
+                                    act_quant_axes(ctx, rhs.ndim)
+                                    if kind == KIND_BGEMM else None)
 
     out = jnp.einsum(spec, lhs, rhs, preferred_element_type=accum_dtype)
     out = out.astype(out_dtype)

@@ -1,3 +1,7 @@
-from repro.serve.engine import ServeEngine
+from repro.serve.cache_pool import CachePool
+from repro.serve.engine import (ContinuousBatchingEngine, GenResult,
+                                ServeEngine, ServeSummary)
+from repro.serve.scheduler import Request, RequestResult, Scheduler
 
-__all__ = ["ServeEngine"]
+__all__ = ["CachePool", "ContinuousBatchingEngine", "GenResult", "Request",
+           "RequestResult", "Scheduler", "ServeEngine", "ServeSummary"]

@@ -1,0 +1,60 @@
+"""Slot-based KV/SSM cache pool for continuous batching.
+
+The pool owns one device cache tree whose leading (batch) axis is the slot
+axis: ``n_slots`` independent sequences decode together in a single compiled
+step. A freshly prefilled single-request cache (batch=1) is scattered into a
+slot with one jitted ``dynamic_update_slice`` per leaf; because the insert
+overwrites the *entire* slot row — including the ring-buffer ``pos`` entries
+that gate the attention mask — stale K/V from the slot's previous occupant
+can never leak into a new request.
+
+Slot allocation is a plain free list on the host; all device traffic goes
+through :meth:`insert`. The ``slot`` index is a traced argument, so inserts
+at different slots reuse one compiled scatter.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CachePool"]
+
+
+@jax.jit
+def _scatter_slot(pool: dict, one: dict, slot: jax.Array) -> dict:
+    def upd(pl, ol):
+        start = (slot,) + (0,) * (pl.ndim - 1)
+        return jax.lax.dynamic_update_slice(pl, ol.astype(pl.dtype), start)
+    return jax.tree.map(upd, pool, one)
+
+
+class CachePool:
+    """``n_slots`` x ``max_len`` KV/SSM cache slots for one model."""
+
+    def __init__(self, model, n_slots: int, max_len: int):
+        assert n_slots >= 1 and max_len >= 1, (n_slots, max_len)
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.caches = model.init_cache(n_slots, max_len)
+        self._free = list(range(n_slots - 1, -1, -1))  # pop() yields slot 0 first
+
+    # ---- host-side slot accounting ----
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int:
+        """Claim a free slot index; raises RuntimeError when the pool is full."""
+        if not self._free:
+            raise RuntimeError("cache pool exhausted")
+        return self._free.pop()
+
+    def free(self, slot: int) -> None:
+        assert 0 <= slot < self.n_slots and slot not in self._free, slot
+        self._free.append(slot)
+
+    # ---- device-side slot contents ----
+    def insert(self, slot: int, request_cache: dict) -> None:
+        """Scatter a batch=1 cache tree into ``slot`` (overwrites the row)."""
+        self.caches = _scatter_slot(self.caches, request_cache,
+                                    jnp.asarray(slot, jnp.int32))

@@ -1,0 +1,129 @@
+"""Continuous-batching request scheduler (FCFS admission).
+
+The scheduler is pure host-side bookkeeping: it owns the waiting queue and
+the per-request decode state, and decides *which* request may enter a cache
+slot at a given engine clock tick. All device work (prefill, slot scatter,
+batched decode) stays in the engine, so scheduling policy can evolve —
+priority classes, preemption, chunked prefill — without touching compiled
+code.
+
+The clock is abstract: the engine advances it once per decode step, and a
+request becomes admissible when ``arrival <= now``. Driving admission off a
+deterministic step clock (instead of wall time) is what makes "a late request
+arrives mid-decode" reproducible in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["Request", "RequestState", "RequestResult", "Scheduler"]
+
+WAITING = "waiting"
+RUNNING = "running"
+DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``arrival`` is in engine clock ticks
+    (decode steps); 0 means present from the start."""
+    rid: int
+    tokens: np.ndarray                # (T,) int32 prompt
+    max_new_tokens: int
+    arrival: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.tokens).shape[0])
+
+
+@dataclasses.dataclass
+class RequestState:
+    request: Request
+    status: str = WAITING
+    slot: int = -1
+    next_pos: int = 0                 # cache position of the next decode write
+    last_token: int = 0
+    out_tokens: list = dataclasses.field(default_factory=list)
+    ttft_s: float = 0.0
+    admitted_step: int = -1
+    finished_step: int = -1
+
+    @property
+    def done(self) -> bool:
+        return len(self.out_tokens) >= self.request.max_new_tokens
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tokens: np.ndarray                # (max_new_tokens,) greedy continuation
+    ttft_s: float
+    admitted_step: int
+    finished_step: int
+
+
+class Scheduler:
+    def __init__(self):
+        self._queue: deque = deque()           # WAITING states, FCFS
+        self.running: dict = {}                # slot -> RequestState
+        self.states: dict = {}                 # rid -> RequestState
+
+    def submit(self, req: Request) -> RequestState:
+        assert req.rid not in self.states, f"duplicate rid {req.rid}"
+        st = RequestState(req)
+        self.states[req.rid] = st
+        self._queue.append(st)
+        return st
+
+    # ---- admission ----
+    def has_work(self) -> bool:
+        return bool(self._queue) or bool(self.running)
+
+    def next_arrival(self) -> Optional[int]:
+        """Earliest arrival among waiting requests (None if queue empty)."""
+        return min((st.request.arrival for st in self._queue), default=None)
+
+    def pop_admissible(self, now: int) -> Optional[RequestState]:
+        """FCFS: the head of the queue, iff it has arrived by ``now``."""
+        if self._queue and self._queue[0].request.arrival <= now:
+            return self._queue.popleft()
+        return None
+
+    def start(self, st: RequestState, slot: int, first_token: int,
+              ttft_s: float, now: int) -> None:
+        """Mark a prefilled request as occupying ``slot``."""
+        st.status = RUNNING
+        st.slot = slot
+        st.last_token = first_token
+        st.out_tokens.append(first_token)
+        st.next_pos = st.request.prompt_len
+        st.ttft_s = ttft_s
+        st.admitted_step = now
+        self.running[slot] = st
+
+    # ---- decode bookkeeping ----
+    def record_token(self, slot: int, token: int) -> RequestState:
+        st = self.running[slot]
+        st.out_tokens.append(token)
+        st.last_token = token
+        st.next_pos += 1
+        return st
+
+    def finish(self, st: RequestState, now: int) -> RequestResult:
+        if st.slot in self.running:
+            del self.running[st.slot]
+        st.status = DONE
+        st.finished_step = now
+        return RequestResult(
+            rid=st.request.rid,
+            tokens=np.asarray(st.out_tokens[:st.request.max_new_tokens],
+                              np.int32),
+            ttft_s=st.ttft_s,
+            admitted_step=st.admitted_step,
+            finished_step=now,
+        )

@@ -1,9 +1,20 @@
-"""IP solver (MCKP, eq. 5): optimality vs brute force on random instances."""
+"""IP solver (MCKP, eq. 5): optimality vs brute force on random instances.
+
+``hypothesis`` is optional (CI installs it; minimal images may not): the
+property tests run only when it imports, and deterministic seed sweeps below
+exercise the same checks regardless, so this module always collects and
+covers ``solve_mckp``.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.ip_solver import MCKPGroup, pareto_prune, solve_mckp
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - exercised on minimal images
+    HAS_HYPOTHESIS = False
 
 
 def _random_instance(rng, n_groups, n_cfg):
@@ -17,10 +28,7 @@ def _random_instance(rng, n_groups, n_cfg):
     return groups
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(0, 10**6), st.integers(1, 5), st.integers(1, 6),
-       st.floats(0.0, 20.0))
-def test_dp_and_greedy_match_brute(seed, n_groups, n_cfg, budget):
+def _check_dp_and_greedy_match_brute(seed, n_groups, n_cfg, budget):
     rng = np.random.default_rng(seed)
     groups = _random_instance(rng, n_groups, n_cfg)
     exact = solve_mckp(groups, budget, method="brute")
@@ -33,9 +41,7 @@ def test_dp_and_greedy_match_brute(seed, n_groups, n_cfg, budget):
     assert exact.upper_bound >= exact.c_total - 1e-9
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(0, 10**6))
-def test_pareto_prune_preserves_optimum(seed):
+def _check_pareto_prune_preserves_optimum(seed):
     rng = np.random.default_rng(seed)
     groups = _random_instance(rng, 3, 6)
     budget = float(rng.uniform(0, 10))
@@ -46,6 +52,23 @@ def test_pareto_prune_preserves_optimum(seed):
         pruned_groups.append(MCKPGroup(g.name, [g.labels[i] for i in kept], c, d))
     pr = solve_mckp(pruned_groups, budget, method="brute")
     assert np.isclose(pr.c_total, full.c_total)
+
+
+# ---------------------------------------------------------------------------
+# deterministic sweeps (always run, with or without hypothesis)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,n_groups,n_cfg,budget", [
+    (0, 1, 1, 0.0), (1, 1, 6, 20.0), (2, 3, 3, 5.0), (3, 5, 4, 0.5),
+    (4, 4, 2, 12.0), (5, 2, 5, 3.3), (6, 5, 6, 8.0), (7, 3, 6, 0.01),
+])
+def test_dp_and_greedy_match_brute_cases(seed, n_groups, n_cfg, budget):
+    _check_dp_and_greedy_match_brute(seed, n_groups, n_cfg, budget)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 5, 8, 13, 21])
+def test_pareto_prune_preserves_optimum_cases(seed):
+    _check_pareto_prune_preserves_optimum(seed)
 
 
 def test_infeasible_raises():
@@ -71,3 +94,20 @@ def test_large_instance_runs_fast():
     assert r.method in ("dp", "lp_greedy")
     assert r.d_total <= 50.0 * (1 + 1e-9)
     assert r.gap < 0.05  # certified near-optimal via the LP bound
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis only)
+# ---------------------------------------------------------------------------
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 10**6), st.integers(1, 5), st.integers(1, 6),
+           st.floats(0.0, 20.0))
+    def test_dp_and_greedy_match_brute(seed, n_groups, n_cfg, budget):
+        _check_dp_and_greedy_match_brute(seed, n_groups, n_cfg, budget)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 10**6))
+    def test_pareto_prune_preserves_optimum(seed):
+        _check_pareto_prune_preserves_optimum(seed)

@@ -1,10 +1,20 @@
-"""Partition (Alg. 2): paper Fig. 6 structure + invariants on random DAGs."""
+"""Partition (Alg. 2): paper Fig. 6 structure + invariants on random DAGs.
+
+``hypothesis`` is optional: property tests run when it is installed, and a
+deterministic random-DAG sweep checks the same invariants without it.
+"""
+import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.graphs import build_graph
 from repro.core.partition import GraphSpec, partition_sequential
 from repro.models.registry import get_model
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - exercised on minimal images
+    HAS_HYPOTHESIS = False
 
 
 def test_llama_block_matches_paper_fig6():
@@ -12,10 +22,6 @@ def test_llama_block_matches_paper_fig6():
     V3={gate,up}, V4={down} (+ lm_head as its own group)."""
     m = get_model("llama3_1b", smoke=True, n_layers=1)
     groups = partition_sequential(build_graph(m))
-    assert groups[0] == sorted(
-        ["layers/0/attn/q_proj", "layers/0/attn/k_proj", "layers/0/attn/v_proj",
-         "layers/0/attn/qk_matmul", "layers/0/attn/av_matmul"],
-        key=lambda n: ("qk" in n) + 2 * ("av" in n))[:5] or True
     flat = [set(g) for g in groups]
     assert {"layers/0/attn/q_proj", "layers/0/attn/k_proj",
             "layers/0/attn/v_proj", "layers/0/attn/qk_matmul",
@@ -57,13 +63,36 @@ def test_max_group_size_split():
 
 
 # ---------------------------------------------------------------------------
-# property tests on random layered DAGs
+# invariants on random layered DAGs
 # ---------------------------------------------------------------------------
 
-@st.composite
-def random_dag(draw):
-    n_ranks = draw(st.integers(2, 6))
-    widths = [draw(st.integers(1, 4)) for _ in range(n_ranks)]
+
+def _check_partition_invariants(g, max_group_size=None):
+    groups = partition_sequential(g, max_group_size=max_group_size)
+    names = [x for grp in groups for x in grp]
+    # groups form a partition of the quantizable ops: coverage + uniqueness
+    assert sorted(names) == sorted(g.quantizable_nodes())
+    assert len(names) == len(set(names))
+    assert all(grp for grp in groups)        # no empty groups
+    if max_group_size is not None:
+        assert all(len(grp) <= max_group_size for grp in groups)
+    # order-preserving: no edge from a later group back into an earlier one
+    order = {n: i for i, grp in enumerate(groups) for n in grp}
+    for (a, b) in g.edges:
+        if a in order and b in order:
+            assert order[a] <= order[b]
+
+
+def _layered_dag(int_fn, bool_fn, subset_fn, pick_fn) -> GraphSpec:
+    """Random layered single-sink DAG, generator-agnostic.
+
+    ``int_fn(lo, hi)`` -> int in [lo, hi]; ``bool_fn()`` -> bool;
+    ``subset_fn(seq)`` -> non-empty unique subset; ``pick_fn(seq)`` -> one
+    element. Both the numpy and the hypothesis sweeps build through this,
+    so they always test the same DAG family.
+    """
+    n_ranks = int_fn(2, 6)
+    widths = [int_fn(1, 4) for _ in range(n_ranks)]
     g = GraphSpec()
     ranks = []
     idx = 0
@@ -71,20 +100,18 @@ def random_dag(draw):
         rank = []
         for _ in range(w):
             name = f"n{idx}"
-            g.add(name, quantizable=draw(st.booleans()))
+            g.add(name, quantizable=bool_fn())
             rank.append(name)
             idx += 1
         ranks.append(rank)
     # connect each node to >=1 node in the next rank (guarantees single flow)
     for a, b in zip(ranks, ranks[1:]):
         for u in a:
-            targets = draw(st.lists(st.sampled_from(b), min_size=1,
-                                    max_size=len(b), unique=True))
-            for v in targets:
+            for v in subset_fn(b):
                 g.edge(u, v)
         for v in b:  # every node needs a predecessor
             if not any((u, v) in g.edges for u in a):
-                g.edge(draw(st.sampled_from(a)), v)
+                g.edge(pick_fn(a), v)
     # funnel all sinks into one terminal vertex (paper: single-sink DAG)
     g.add("sink")
     nxt = g.successors(False)
@@ -94,16 +121,48 @@ def random_dag(draw):
     return g
 
 
-@settings(max_examples=40, deadline=None)
-@given(random_dag())
-def test_partition_invariants(g):
-    groups = partition_sequential(g)
-    names = [x for grp in groups for x in grp]
-    # coverage + uniqueness over quantizable nodes
-    assert sorted(names) == sorted(g.quantizable_nodes())
-    # groups respect topological order: no edge from a later group back into
-    # an earlier one
-    order = {n: i for i, grp in enumerate(groups) for n in grp}
-    for (a, b) in g.edges:
-        if a in order and b in order:
-            assert order[a] <= order[b]
+def _numpy_random_dag(rng) -> GraphSpec:
+    return _layered_dag(
+        int_fn=lambda lo, hi: int(rng.integers(lo, hi + 1)),
+        bool_fn=lambda: bool(rng.integers(0, 2)),
+        subset_fn=lambda seq: [str(v) for v in rng.choice(
+            seq, size=int(rng.integers(1, len(seq) + 1)), replace=False)],
+        pick_fn=lambda seq: str(rng.choice(seq)))
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_partition_invariants_cases(seed):
+    g = _numpy_random_dag(np.random.default_rng(seed))
+    _check_partition_invariants(g)
+
+
+@pytest.mark.parametrize("seed,cap", [(0, 1), (1, 2), (2, 3), (3, 2), (4, 1)])
+def test_partition_invariants_max_group_size_cases(seed, cap):
+    g = _numpy_random_dag(np.random.default_rng(seed))
+    _check_partition_invariants(g, max_group_size=cap)
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis only)
+# ---------------------------------------------------------------------------
+
+if HAS_HYPOTHESIS:
+    @st.composite
+    def random_dag(draw):
+        return _layered_dag(
+            int_fn=lambda lo, hi: draw(st.integers(lo, hi)),
+            bool_fn=lambda: draw(st.booleans()),
+            subset_fn=lambda seq: draw(st.lists(
+                st.sampled_from(seq), min_size=1, max_size=len(seq),
+                unique=True)),
+            pick_fn=lambda seq: draw(st.sampled_from(seq)))
+
+    @settings(max_examples=40, deadline=None)
+    @given(random_dag())
+    def test_partition_invariants(g):
+        _check_partition_invariants(g)
+
+    @settings(max_examples=20, deadline=None)
+    @given(random_dag(), st.integers(1, 3))
+    def test_partition_invariants_max_group_size(g, cap):
+        _check_partition_invariants(g, max_group_size=cap)

@@ -39,6 +39,29 @@ def test_pipeline_objectives(setup, objective):
                       plan.predicted_loss_mse, rtol=1e-6, atol=1e-12)
 
 
+def test_predicted_loss_mse_additive_over_disjoint_assignments(setup):
+    """Eq. (6)/(23): the loss MSE of a union of disjoint assignments is the
+    sum of the parts (the additivity the IP decomposition relies on)."""
+    m, params, batches, sens = setup
+    names = sorted(op.name for op in sens.ops)
+    assert len(names) >= 9
+    a1 = {n: "fp8_e4m3" for n in names[0:3]}
+    a2 = {n: "fp8_e5m2" for n in names[3:6]}
+    a3 = {n: "fp8_e4m3" for n in names[6:9]}
+    parts = (predicted_loss_mse(sens, a1) + predicted_loss_mse(sens, a2)
+             + predicted_loss_mse(sens, a3))
+    merged = predicted_loss_mse(sens, {**a1, **a2, **a3})
+    assert np.isclose(merged, parts, rtol=1e-12)
+    assert predicted_loss_mse(sens, {}) == 0.0
+    # reference-format entries contribute exactly zero
+    assert predicted_loss_mse(sens, {names[0]: "bf16"}) == 0.0
+    assert np.isclose(
+        predicted_loss_mse(sens, {**a1, names[3]: "bf16"}),
+        predicted_loss_mse(sens, a1), rtol=1e-12)
+    # unknown op names fall back to zero sensitivity rather than crashing
+    assert predicted_loss_mse(sens, {"ghost_op": "fp8_e4m3"}) == 0.0
+
+
 def test_gain_monotone_in_tau(setup):
     m, params, batches, sens = setup
     gains = []

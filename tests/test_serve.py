@@ -1,0 +1,261 @@
+"""Serving subsystem: continuous batching vs one-shot token parity, mid-decode
+admission, slot pool invariants, scheduler policy, and the MPPlan handoff."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mpconfig import MPPlan, as_assignment
+from repro.models.registry import get_model
+from repro.quant.qops import QuantContext
+from repro.serve import (CachePool, ContinuousBatchingEngine, Request,
+                         Scheduler, ServeEngine)
+
+MP_ASSIGNMENT = {
+    "layers/0/attn/q_proj": "fp8_e4m3",
+    "layers/1/mlp/down_proj": "fp8_e4m3",
+    "lm_head": "fp8_e4m3",
+}
+
+
+@pytest.fixture(scope="module")
+def model():
+    return get_model("llama3_1b", smoke=True)
+
+
+@pytest.fixture(scope="module")
+def params(model):
+    return model.init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.default_rng(42)
+    return [rng.integers(0, 500, size=12).astype(np.int32) for _ in range(4)]
+
+
+def _oneshot_reference(model, params, prompts, max_new, mp=None):
+    eng = ServeEngine(model, mp=mp, donate=False)
+    out = {}
+    for i, p in enumerate(prompts):
+        r = eng.generate(params, {"tokens": jnp.asarray(p)[None]},
+                         max_new_tokens=max_new)
+        out[i] = np.asarray(r.tokens)[0]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# token parity: continuous batching == one-shot greedy decode
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_matches_oneshot_tokens(model, params, prompts):
+    ref = _oneshot_reference(model, params, prompts, max_new=6)
+    eng = ContinuousBatchingEngine(model, n_slots=4, max_len=32)
+    reqs = [Request(rid=i, tokens=p, max_new_tokens=6)
+            for i, p in enumerate(prompts)]
+    summ = eng.serve(params, reqs)
+    assert set(summ.results) == set(range(len(prompts)))
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(summ.results[i].tokens, ref[i])
+    assert summ.tokens_per_s > 0
+    assert all(r.ttft_s > 0 for r in summ.results.values())
+
+
+def test_continuous_matches_batched_oneshot(model, params, prompts):
+    """Lock-step batched generate() and continuous serving agree exactly."""
+    eng1 = ServeEngine(model, donate=False)
+    batch = {"tokens": jnp.asarray(np.stack(prompts))}
+    ref = np.asarray(eng1.generate(params, batch, max_new_tokens=5).tokens)
+    eng2 = ContinuousBatchingEngine(model, n_slots=len(prompts), max_len=32)
+    reqs = [Request(rid=i, tokens=p, max_new_tokens=5)
+            for i, p in enumerate(prompts)]
+    summ = eng2.serve(params, reqs)
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(summ.results[i].tokens, ref[i])
+
+
+def test_continuous_matches_oneshot_with_mp_plan(model, params, prompts):
+    """Parity holds under an MP assignment, handed over as an MPPlan."""
+    ref = _oneshot_reference(model, params, prompts[:2], max_new=5,
+                             mp=MP_ASSIGNMENT)
+    plan = MPPlan(assignment=dict(MP_ASSIGNMENT), groups=[], objective="ET",
+                  tau=0.01, budget=0.0, predicted_loss_mse=0.0,
+                  predicted_gain=0.0)
+    eng = ContinuousBatchingEngine(model, n_slots=2, max_len=32, mp=plan)
+    assert eng.mp == MP_ASSIGNMENT
+    reqs = [Request(rid=i, tokens=p, max_new_tokens=5)
+            for i, p in enumerate(prompts[:2])]
+    summ = eng.serve(params, reqs)
+    for i in range(2):
+        np.testing.assert_array_equal(summ.results[i].tokens, ref[i])
+
+
+def test_late_admission_no_cache_corruption(model, params, prompts):
+    """More requests than slots, staggered arrivals: a request admitted
+    mid-decode reuses a slot without disturbing in-flight sequences."""
+    ref = _oneshot_reference(model, params, prompts, max_new=6)
+    eng = ContinuousBatchingEngine(model, n_slots=2, max_len=32)
+    # rid 0/1 fill both slots; rid 2 queues until a slot frees; rid 3
+    # arrives while rid 2 is mid-decode and joins its batch
+    arrivals = [0, 0, 1, 8]
+    reqs = [Request(rid=i, tokens=p, max_new_tokens=6, arrival=arrivals[i])
+            for i, p in enumerate(prompts)]
+    summ = eng.serve(params, reqs)
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(summ.results[i].tokens, ref[i])
+    # the late requests really were admitted after decode began, rid 3
+    # strictly later than rid 2 (i.e. it joined an in-flight batch)
+    assert summ.results[3].admitted_step > summ.results[2].admitted_step >= 1
+    assert summ.results[3].admitted_step < summ.results[2].finished_step
+    # 4 requests through 2 slots: at least two slot reuses happened
+    assert summ.n_steps >= 10
+
+
+def test_single_token_requests(model, params, prompts):
+    """max_new_tokens=1 finishes at prefill and frees its slot immediately."""
+    eng = ContinuousBatchingEngine(model, n_slots=1, max_len=32)
+    reqs = [Request(rid=i, tokens=p, max_new_tokens=1)
+            for i, p in enumerate(prompts[:3])]
+    summ = eng.serve(params, reqs)
+    ref = _oneshot_reference(model, params, prompts[:3], max_new=1)
+    for i in range(3):
+        np.testing.assert_array_equal(summ.results[i].tokens, ref[i])
+    assert summ.n_steps == 0
+
+
+# ---------------------------------------------------------------------------
+# per-slot position vectors (the decode-path change under the engine)
+# ---------------------------------------------------------------------------
+
+
+def test_vector_pos_decode_matches_scalar(model, params):
+    toks = jnp.asarray(np.random.default_rng(3).integers(0, 500, (2, 8)),
+                       jnp.int32)
+    ctx = QuantContext()
+
+    def run(pos):
+        caches = model.init_cache(2, 16)
+        _, caches = model.prefill(params, toks, caches, ctx)
+        tok = jnp.array([[5], [9]], jnp.int32)
+        return model.decode_step(params, tok, pos, caches, ctx)
+
+    logits_s, caches_s = run(jnp.array(8, jnp.int32))
+    logits_v, caches_v = run(jnp.array([8, 8], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(logits_s, np.float32),
+                                  np.asarray(logits_v, np.float32))
+    for (ps, ls), (pv, lv) in zip(
+            jax.tree_util.tree_leaves_with_path(caches_s),
+            jax.tree_util.tree_leaves_with_path(caches_v)):
+        np.testing.assert_array_equal(np.asarray(ls, np.float32),
+                                      np.asarray(lv, np.float32), err_msg=str(ps))
+
+
+# ---------------------------------------------------------------------------
+# ttft regression (satellite: it used to read self.model_params)
+# ---------------------------------------------------------------------------
+
+
+def test_ttft_without_prior_generate(model, params, prompts):
+    eng = ServeEngine(model, donate=False)
+    t = eng.ttft(params, {"tokens": jnp.asarray(prompts[0])[None]},
+                 max_len=16, n_iters=1, n_warmup=0)
+    assert t > 0
+
+
+# ---------------------------------------------------------------------------
+# cache pool
+# ---------------------------------------------------------------------------
+
+
+def test_cache_pool_alloc_free(model):
+    pool = CachePool(model, n_slots=2, max_len=8)
+    a, b = pool.alloc(), pool.alloc()
+    assert {a, b} == {0, 1} and pool.n_free == 0
+    with pytest.raises(RuntimeError):
+        pool.alloc()
+    pool.free(a)
+    assert pool.n_free == 1 and pool.alloc() == a
+
+
+def test_cache_pool_insert_overwrites_only_its_slot(model):
+    pool = CachePool(model, n_slots=3, max_len=8)
+    ones = jax.tree.map(lambda x: jnp.ones((1,) + x.shape[1:], x.dtype),
+                        model.init_cache(1, 8))
+    pool.insert(1, ones)
+    for path, leaf in jax.tree_util.tree_leaves_with_path(pool.caches):
+        arr = np.asarray(leaf, np.float32)
+        assert np.all(arr[1] == 1), path
+        assert np.all(arr[0] != 1) or arr[0].size == 0, path
+        assert np.all(arr[2] != 1) or arr[2].size == 0, path
+
+
+# ---------------------------------------------------------------------------
+# scheduler policy
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, arrival=0, max_new=4):
+    return Request(rid=rid, tokens=np.arange(4, dtype=np.int32),
+                   max_new_tokens=max_new, arrival=arrival)
+
+
+def test_scheduler_fcfs_and_arrival_gating():
+    s = Scheduler()
+    s.submit(_req(0, arrival=0))
+    s.submit(_req(1, arrival=2))
+    st0 = s.pop_admissible(0)
+    assert st0.request.rid == 0
+    assert s.pop_admissible(0) is None          # rid 1 hasn't arrived
+    assert s.next_arrival() == 2
+    assert s.pop_admissible(2).request.rid == 1
+    assert s.pop_admissible(2) is None          # queue drained
+
+
+def test_scheduler_lifecycle_bookkeeping():
+    s = Scheduler()
+    st = s.submit(_req(7, max_new=3))
+    st = s.pop_admissible(0)
+    s.start(st, slot=0, first_token=11, ttft_s=0.5, now=0)
+    assert s.running[0] is st and st.out_tokens == [11]
+    assert st.next_pos == 4                      # == prompt_len
+    s.record_token(0, 12)
+    s.record_token(0, 13)
+    assert st.done
+    res = s.finish(st, now=2)
+    assert not s.running and not s.has_work()
+    np.testing.assert_array_equal(res.tokens, [11, 12, 13])
+    assert res.finished_step == 2 and res.ttft_s == 0.5
+
+
+def test_scheduler_rejects_duplicate_rid():
+    s = Scheduler()
+    s.submit(_req(1))
+    with pytest.raises(AssertionError):
+        s.submit(_req(1))
+
+
+# ---------------------------------------------------------------------------
+# MPPlan -> engine handoff
+# ---------------------------------------------------------------------------
+
+
+def test_as_assignment_normalizes():
+    assert as_assignment(None) is None
+    assert as_assignment({}) is None
+    assert as_assignment({"a": "bf16"}) is None      # ref format drops out
+    assert as_assignment({"a": "fp8_e4m3", "b": "bf16"}) == {"a": "fp8_e4m3"}
+    plan = MPPlan(assignment={"x": "fp8_e5m2"}, groups=[["x"]], objective="M",
+                  tau=0.1, budget=1.0, predicted_loss_mse=0.0,
+                  predicted_gain=1.0)
+    assert as_assignment(plan) == {"x": "fp8_e5m2"}
+    with pytest.raises(TypeError):
+        as_assignment(["not", "a", "plan"])
+
+
+def test_mpplan_unknown_ops():
+    plan = MPPlan(assignment={"a": "fp8_e4m3", "ghost": "fp8_e4m3"},
+                  groups=[], objective="ET", tau=0.1, budget=1.0,
+                  predicted_loss_mse=0.0, predicted_gain=1.0)
+    assert plan.unknown_ops({"a", "b"}) == {"ghost"}
+    assert plan.unknown_ops({"a", "ghost"}) == set()
