@@ -12,8 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import bench_model, bench_sensitivity, emit
-from repro.core.pipeline import AMPOptions, build_groups
+from benchmarks.common import bench_bundle, bench_model, emit
 from repro.core.timegain import TheoreticalGainModel, WallClockGainModel, enumerate_combos
 from repro.hw.profiles import TPU_V5E
 from repro.quant.qops import QuantContext
@@ -23,9 +22,10 @@ import jax
 
 def main() -> None:
     model, params, data, _ = bench_model()
-    sens = bench_sensitivity()
+    bundle = bench_bundle()
+    sens = bundle.sens
     op_index = {o.name: o for o in sens.ops}
-    _, groups = build_groups(model, AMPOptions())
+    groups = bundle.objectives["ET"]["groups"]  # the Alg. 2 partition
     attn_group = next(g for g in groups if any("qk_matmul" in n for n in g))
     ops = [op_index[n] for n in attn_group]
     toks = data.batch_at(0)["tokens"][:4, :64]

@@ -11,15 +11,14 @@ import numpy as np
 
 import jax
 
-from benchmarks.common import bench_model, bench_sensitivity, emit
-from repro.core.pipeline import AMPOptions, auto_mixed_precision
+from benchmarks.common import bench_bundle, bench_model, emit
 from repro.core.timegain import WallClockGainModel
 from repro.quant.qops import QuantContext
 
 
 def main() -> None:
     model, params, data, _ = bench_model()
-    sens = bench_sensitivity()
+    bundle = bench_bundle()  # calibrated once; each tau is a cheap IP solve
     eval_batches = [data.batch_at(30_000 + i) for i in range(6)]
     loss_ref = jax.jit(lambda p, b: model.loss(p, b, QuantContext()))
     refs = [float(loss_ref(params, b)) for b in eval_batches]
@@ -27,9 +26,7 @@ def main() -> None:
     print("tau,predicted_mse,measured_mse,n_quantized")
     ratios = []
     for tau in (0.001, 0.002, 0.005, 0.01, 0.02, 0.05):
-        plan = auto_mixed_precision(model, params, None,
-                                    AMPOptions(tau=tau, objective="TT"),
-                                    sens=sens)
+        plan = bundle.solve(tau=tau, objective="TT")
         ctx = QuantContext(mode="mp", mp=plan.assignment)
         lm = jax.jit(lambda p, b: model.loss(p, b, ctx))
         errs = [(float(lm(params, b)) - r) ** 2
@@ -43,9 +40,7 @@ def main() -> None:
          f"ratio={np.median(ratios):.3f}")
 
     # (b) additivity of measured time gains across groups
-    plan = auto_mixed_precision(model, params, None,
-                                AMPOptions(tau=0.02, objective="TT"),
-                                sens=sens)
+    plan = bundle.solve(tau=0.02, objective="TT")
     toks = data.batch_at(0)["tokens"][:4, :64]
 
     def factory(assignment):

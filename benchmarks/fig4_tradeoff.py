@@ -9,16 +9,20 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import bench_model, bench_sensitivity, emit
+from benchmarks.common import bench_bundle, emit
 from repro.core.baselines import prefix_strategy, random_strategy
-from repro.core.pipeline import AMPOptions, auto_mixed_precision, predicted_loss_mse
+from repro.core.pipeline import predicted_loss_mse
 from repro.core.timegain import RooflineGainModel, TheoreticalGainModel
 from repro.hw.profiles import TPU_V5E
 
+TAUS = (0.001, 0.002, 0.005, 0.01, 0.02, 0.05)
+
 
 def main() -> None:
-    model, params, data, _ = bench_model()
-    sens = bench_sensitivity()
+    # the whole tau sweep solves from one calibration artifact (exactly one
+    # sensitivity pass + gain enumeration across all six points)
+    bundle = bench_bundle()
+    sens = bundle.sens
     op_index = {o.name: o for o in sens.ops}
     names = [o.name for o in sens.ops]
     tt = TheoreticalGainModel(TPU_V5E)
@@ -34,10 +38,7 @@ def main() -> None:
     print("tau,strategy,loss_mse,tt_gain_s,et_gain_s,n_quantized")
     dominated = 0
     total_pts = 0
-    for tau in (0.001, 0.002, 0.005, 0.01, 0.02, 0.05):
-        plan = auto_mixed_precision(model, params, None,
-                                    AMPOptions(tau=tau, objective="TT"),
-                                    sens=sens)
+    for tau, plan in zip(TAUS, bundle.pareto(TAUS, objective="TT")):
         budget = plan.budget
         rows = {
             "IP-TT": plan.assignment,

@@ -2,16 +2,16 @@
 time gain, comparing IP-TT / Random / Prefix."""
 from __future__ import annotations
 
-from benchmarks.common import bench_model, bench_sensitivity, emit, eval_metrics
+from benchmarks.common import bench_bundle, bench_model, emit, eval_metrics
 from repro.core.baselines import prefix_strategy, random_strategy
-from repro.core.pipeline import AMPOptions, auto_mixed_precision
 from repro.core.timegain import TheoreticalGainModel
 from repro.hw.profiles import TPU_V5E
 
 
 def main() -> None:
     model, params, data, _ = bench_model()
-    sens = bench_sensitivity()
+    bundle = bench_bundle()
+    sens = bundle.sens
     names = [o.name for o in sens.ops]
     op_index = {o.name: o for o in sens.ops}
     gm = TheoreticalGainModel(TPU_V5E)
@@ -23,9 +23,7 @@ def main() -> None:
     print("strategy,tau,tt_gain_s,d_acc")
     best = {}
     for tau in (0.002, 0.01, 0.05):
-        plan = auto_mixed_precision(model, params, None,
-                                    AMPOptions(tau=tau, objective="TT"),
-                                    sens=sens)
+        plan = bundle.solve(tau=tau, objective="TT")
         budget = plan.budget
         for strat, asg in (("IP-TT", plan.assignment),
                            ("Random", random_strategy(names, sens, budget,

@@ -2,15 +2,15 @@
 under IP-M / Random / Prefix (linear layers only, eq. 25)."""
 from __future__ import annotations
 
-from benchmarks.common import bench_model, bench_sensitivity, emit, eval_metrics
+from benchmarks.common import bench_bundle, bench_model, emit, eval_metrics
 from repro.core.baselines import prefix_strategy, random_strategy
-from repro.core.pipeline import AMPOptions, auto_mixed_precision
 from repro.core.timegain import MemoryGainModel
 
 
 def main() -> None:
     model, params, data, _ = bench_model()
-    sens = bench_sensitivity()
+    bundle = bench_bundle()
+    sens = bundle.sens
     gm = MemoryGainModel()
     op_index = {o.name: o for o in sens.ops}
     lin_names = [o.name for o in sens.ops if o.kind == "linear"]
@@ -23,9 +23,7 @@ def main() -> None:
 
     print("strategy,tau,model_MB,d_acc")
     for tau in (0.002, 0.01, 0.05):
-        plan = auto_mixed_precision(model, params, None,
-                                    AMPOptions(tau=tau, objective="M"),
-                                    sens=sens)
+        plan = bundle.solve(tau=tau, objective="M")
         budget = plan.budget
         for strat, asg in (("IP-M", plan.assignment),
                            ("Random", random_strategy(lin_names, sens, budget,

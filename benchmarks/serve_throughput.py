@@ -17,8 +17,7 @@ import argparse
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import bench_model, bench_sensitivity, emit
-from repro.core.pipeline import AMPOptions, auto_mixed_precision
+from benchmarks.common import bench_bundle, bench_model, emit
 from repro.serve import ContinuousBatchingEngine, Request, ServeEngine
 
 
@@ -73,10 +72,7 @@ def main():
     args = ap.parse_args()
 
     model, params, data, _ = bench_model()
-    sens = bench_sensitivity()
-    plan = auto_mixed_precision(model, params, None,
-                                AMPOptions(tau=args.tau, objective="ET"),
-                                sens=sens)
+    plan = bench_bundle().solve(tau=args.tau, objective="ET")
     print(f"# MP plan quantizes {plan.n_quantized}/{plan.meta['n_ops']} ops")
 
     reqs = _requests(data, args.requests, args.prompt_len, args.new_tokens,

@@ -9,16 +9,16 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import bench_model, bench_sensitivity, emit, eval_metrics
+from benchmarks.common import bench_bundle, bench_model, emit, eval_metrics
 from repro.core.baselines import prefix_strategy, random_strategy
-from repro.core.pipeline import AMPOptions, auto_mixed_precision
 
 TAUS = (0.002, 0.005, 0.01, 0.02)
 
 
 def main() -> None:
     model, params, data, _ = bench_model()
-    sens = bench_sensitivity()
+    bundle = bench_bundle()  # one calibration serves all 3 objectives x taus
+    sens = bundle.sens
     names = [o.name for o in sens.ops]
     loss0, acc0 = eval_metrics(model, params, data)
     print(f"# bf16 reference: loss={loss0:.4f} acc={acc0:.4f}")
@@ -28,9 +28,7 @@ def main() -> None:
     for tau in TAUS:
         plans = {}
         for obj in ("ET", "TT", "M"):
-            plans[f"IP-{obj}"] = auto_mixed_precision(
-                model, params, None, AMPOptions(tau=tau, objective=obj),
-                sens=sens).assignment
+            plans[f"IP-{obj}"] = bundle.solve(tau=tau, objective=obj).assignment
         budget = tau ** 2 * sens.loss_sq_mean
         plans["Random"] = random_strategy(names, sens, budget,
                                           seed=int(tau * 1e5))

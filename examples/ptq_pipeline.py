@@ -3,17 +3,18 @@ Random and Prefix baselines — the paper's Table-1 style comparison.
 
     PYTHONPATH=src python examples/ptq_pipeline.py [--tau 0.01]
 
-Trains (or resumes) the small benchmark model, then for each strategy
-reports the eval-loss delta, the predicted TPU-v5e time gain, and the
-weight-memory gain of the produced MP configuration.
+Trains (or resumes) the small benchmark model, calibrates it once into a
+``CalibrationBundle``, then solves each IP objective from that artifact and
+reports, per strategy, the eval-loss delta, the predicted TPU-v5e time gain,
+and the weight-memory gain of the produced MP configuration.
 """
 import argparse
 
 import numpy as np
 
-from benchmarks.common import bench_model, bench_sensitivity, eval_metrics
+from benchmarks.common import bench_bundle, bench_model, eval_metrics
 from repro.core.baselines import prefix_strategy, random_strategy
-from repro.core.pipeline import AMPOptions, auto_mixed_precision, predicted_loss_mse
+from repro.core.pipeline import predicted_loss_mse
 from repro.core.timegain import MemoryGainModel, RooflineGainModel
 from repro.hw.profiles import TPU_V5E
 
@@ -24,7 +25,9 @@ def main():
     args = ap.parse_args()
 
     model, params, data, train_loss = bench_model()
-    sens = bench_sensitivity()
+    # staged API: one calibration artifact, three cheap objective solves
+    bundle = bench_bundle()
+    sens = bundle.sens
     names = [o.name for o in sens.ops]
     op_index = {o.name: o for o in sens.ops}
     et = RooflineGainModel(TPU_V5E)
@@ -35,9 +38,7 @@ def main():
 
     plans = {}
     for obj in ("ET", "TT", "M"):
-        plans[f"IP-{obj}"] = auto_mixed_precision(
-            model, params, None, AMPOptions(tau=args.tau, objective=obj),
-            sens=sens).assignment
+        plans[f"IP-{obj}"] = bundle.solve(tau=args.tau, objective=obj).assignment
     budget = args.tau ** 2 * sens.loss_sq_mean
     plans["Random"] = random_strategy(names, sens, budget, seed=1)
     plans["Prefix"] = prefix_strategy(names, sens, budget)

@@ -1,17 +1,23 @@
-"""Quickstart: the paper's Algorithm 1 on a small model, end to end.
+"""Quickstart: the paper's Algorithm 1 on a small model, staged.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Steps: build model -> partition its graph into sequential sub-graphs ->
-calibrate per-layer sensitivity (fwd+bwd) -> evaluate per-group gains ->
-solve the IP -> print the MP plan and verify the loss-MSE contract.
+The expensive phase runs once — ``calibrate()`` partitions the graph into
+sequential sub-graphs (Alg. 2), calibrates per-layer sensitivity (fwd+bwd,
+Sec. 2.2), and tabulates per-group gains (Sec. 2.3) into a durable
+``CalibrationBundle``. Every ``bundle.solve(tau=..., objective=...)`` after
+that is a millisecond IP solve needing neither model nor params — including
+from a bundle reloaded off disk.
 """
+import os
+import tempfile
+
 import jax
 import numpy as np
 
 from repro.core.graphs import build_graph
 from repro.core.partition import partition_sequential
-from repro.core.pipeline import AMPOptions, auto_mixed_precision
+from repro.core.pipeline import AMPOptions, CalibrationBundle, calibrate
 from repro.models.registry import get_model
 from repro.quant.qops import QuantContext
 
@@ -26,21 +32,32 @@ def main():
     for g in groups[:4]:
         print("  ", g)
 
-    # 2+3+4) calibrate + gains + IP (paper Alg. 1)
+    # 2+3) calibrate: sensitivity + per-group gain tables, once
     calib = [{"tokens": jax.random.randint(jax.random.key(i), (2, 64), 0, 512),
               "labels": jax.random.randint(jax.random.key(99 + i), (2, 64),
                                            0, 512)} for i in range(3)]
     # NOTE: objective "ET" (roofline time) at these tiny shapes correctly
     # judges most ops memory-bound (fp8 gains ~nothing on a roofline basis),
     # so the demo uses "TT" (MAC-based, eq. 24) to show the IP mechanics.
-    opts = AMPOptions(tau=0.01, objective="TT")
-    plan = auto_mixed_precision(model, params, calib, opts)
+    bundle = calibrate(model, params, calib,
+                       AMPOptions(tau=0.01, objective="TT"))
 
-    print(f"\nMP plan: {plan.n_quantized}/{plan.meta['n_ops']} ops in FP8, "
-          f"predicted loss-MSE {plan.predicted_loss_mse:.3e} "
+    # 4) solve the IP — and re-solve at another tau without recalibrating
+    plan = bundle.solve()                 # calibration-time (tau, objective)
+    plan_loose = bundle.solve(tau=0.05)   # pure NumPy, milliseconds
+    print(f"\nMP plan (tau=0.01): {plan.n_quantized}/{plan.meta['n_ops']} ops "
+          f"in FP8, predicted loss-MSE {plan.predicted_loss_mse:.3e} "
           f"(budget {plan.budget:.3e}), predicted gain {plan.predicted_gain:.3e}s")
+    print(f"re-solved at tau=0.05: {plan_loose.n_quantized} ops, "
+          f"gain {plan_loose.predicted_gain:.3e}s")
     fp8_ops = sorted(plan.assignment)[:8]
     print("first FP8 ops:", fp8_ops)
+
+    # the artifact is durable: save, reload, solve identically — no model
+    path = os.path.join(tempfile.mkdtemp(), "bundle.json")
+    bundle.save(path)
+    replayed = CalibrationBundle.load(path).solve()
+    print(f"saved -> {path}; reloaded solve identical: {replayed == plan}")
 
     # verify the contract: measured loss shift stays small
     ctx, ctx_mp = QuantContext(), QuantContext(mode="mp", mp=plan.assignment)

@@ -6,7 +6,8 @@ fixed pool of cache slots.
         [--tau 0.01] [--n-slots 4] [--requests 8] [--new-tokens 12]
 
 Pipeline shown here (the full plan->engine handoff):
-  1. ``auto_mixed_precision`` solves the IP and returns an ``MPPlan``;
+  1. ``CalibrationBundle.solve`` runs the IP (here from the shared benchmark
+     bundle) and returns an ``MPPlan``;
   2. ``ContinuousBatchingEngine(model, mp=plan)`` compiles quantized
      prefill/decode steps from the plan (``core.mpconfig.as_assignment``);
   3. requests with different prompts/arrival times share one decode batch,
@@ -16,8 +17,7 @@ import argparse
 
 import numpy as np
 
-from benchmarks.common import bench_model, bench_sensitivity
-from repro.core.pipeline import AMPOptions, auto_mixed_precision
+from benchmarks.common import bench_bundle, bench_model
 from repro.serve import ContinuousBatchingEngine, Request
 
 
@@ -32,10 +32,7 @@ def main():
     args = ap.parse_args()
 
     model, params, data, _ = bench_model()
-    sens = bench_sensitivity()
-    plan = auto_mixed_precision(model, params, None,
-                                AMPOptions(tau=args.tau, objective="ET"),
-                                sens=sens)
+    plan = bench_bundle().solve(tau=args.tau, objective="ET")
     print(f"MP plan quantizes {plan.n_quantized}/{plan.meta['n_ops']} ops\n")
 
     rng = np.random.default_rng(11)

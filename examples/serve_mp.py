@@ -9,8 +9,7 @@ import argparse
 import jax
 import numpy as np
 
-from benchmarks.common import bench_model, bench_sensitivity
-from repro.core.pipeline import AMPOptions, auto_mixed_precision
+from benchmarks.common import bench_bundle, bench_model
 from repro.serve.engine import ServeEngine
 
 
@@ -23,10 +22,7 @@ def main():
     args = ap.parse_args()
 
     model, params, data, _ = bench_model()
-    sens = bench_sensitivity()
-    plan = auto_mixed_precision(model, params, None,
-                                AMPOptions(tau=args.tau, objective="ET"),
-                                sens=sens)
+    plan = bench_bundle().solve(tau=args.tau, objective="ET")
     print(f"MP plan quantizes {plan.n_quantized}/{plan.meta['n_ops']} ops\n")
 
     prompt = {"tokens": data.batch_at(40_000)["tokens"][:args.batch,

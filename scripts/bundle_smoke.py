@@ -1,0 +1,83 @@
+"""CI smoke for the staged AMP pipeline: calibrate a tiny model ONCE, save
+the CalibrationBundle, and run a fig4-style tau sweep entirely from the
+cached artifact.
+
+    PYTHONPATH=src python scripts/bundle_smoke.py [--out DIR]
+
+Asserts:
+  * the second calibrate() call with the same cache is a pure cache hit
+    (no sensitivity recalibration);
+  * a reloaded bundle solves to plans identical to the in-memory ones;
+  * predicted gain is monotone non-decreasing in tau and every plan
+    respects its loss-MSE budget.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import tempfile
+
+import jax
+
+import repro.core.pipeline as pl
+from repro.core.pipeline import AMPOptions, CalibrationBundle, calibrate
+from repro.models.registry import get_model
+
+# low end tight enough that the IP must leave sensitive ops at bf16
+TAUS = (0.0001, 0.0003, 0.001, 0.01, 0.05)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, help="artifact dir (default: tmp)")
+    args = ap.parse_args()
+    out = args.out or tempfile.mkdtemp(prefix="bundle_smoke_")
+    os.makedirs(out, exist_ok=True)
+    path = os.path.join(out, "bundle.npz")
+
+    model = get_model("llama3_1b", smoke=True, n_layers=2)
+    params = model.init(jax.random.key(0))
+    calib = [{"tokens": jax.random.randint(jax.random.key(i), (2, 32), 0, 512),
+              "labels": jax.random.randint(jax.random.key(9 + i), (2, 32),
+                                           0, 512)} for i in range(2)]
+    opts = AMPOptions(tau=0.01, objective="TT")
+
+    bundle = calibrate(model, params, calib, opts, cache=path)
+    print(f"[smoke] calibrated {len(bundle.sens.ops)} ops -> {path} "
+          f"({os.path.getsize(path)} bytes)")
+
+    # calibration must run exactly once: the second call is a cache hit
+    def refuse(*a, **kw):
+        raise AssertionError("cache miss: sensitivity recalibration ran")
+
+    orig = pl.calibrate_sensitivity
+    pl.calibrate_sensitivity = refuse
+    try:
+        again = calibrate(model, params, calib, opts, cache=path)
+    finally:
+        pl.calibrate_sensitivity = orig
+    print("[smoke] second calibrate() was a pure cache hit")
+
+    # fig4-style tau sweep from the saved artifact only (no model needed)
+    loaded = CalibrationBundle.load(path)
+    plans = loaded.pareto(TAUS, objective="TT")
+    print("tau,predicted_gain_s,predicted_loss_mse,n_quantized")
+    for tau, plan in zip(TAUS, plans):
+        print(f"{tau},{plan.predicted_gain:.6e},"
+              f"{plan.predicted_loss_mse:.6e},{plan.n_quantized}")
+        assert plan.predicted_loss_mse <= plan.budget * (1 + 1e-9), \
+            (tau, plan.predicted_loss_mse, plan.budget)
+        mem = again.solve(tau=tau, objective="TT")
+        assert dataclasses.asdict(mem) == dataclasses.asdict(plan), \
+            f"loaded-bundle plan differs from in-memory plan at tau={tau}"
+
+    gains = [p.predicted_gain for p in plans]
+    assert all(a <= b + 1e-15 for a, b in zip(gains, gains[1:])), \
+        f"gain not monotone non-decreasing in tau: {gains}"
+    print(f"[smoke] OK: gain monotone over {len(TAUS)} taus from one "
+          f"calibration artifact")
+
+
+if __name__ == "__main__":
+    main()

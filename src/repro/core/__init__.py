@@ -1,3 +1,10 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+from repro.core.mpconfig import MPPlan, as_assignment
+from repro.core.pipeline import (AMPOptions, CalibrationBundle,
+                                 auto_mixed_precision, calibrate,
+                                 predicted_loss_mse)
+
+__all__ = ["MPPlan", "as_assignment", "AMPOptions", "CalibrationBundle",
+           "auto_mixed_precision", "calibrate", "predicted_loss_mse"]

@@ -26,6 +26,11 @@ class MPPlan:
     ip_gap: float = 0.0
     meta: dict = dataclasses.field(default_factory=dict)
 
+    def __post_init__(self):
+        # JSON turns tuple groups into lists; normalize eagerly so a plan
+        # compares equal across a save/load round-trip.
+        self.groups = [list(g) for g in self.groups]
+
     def format_for(self, op_name: str) -> str:
         return self.assignment.get(op_name, "bf16")
 

@@ -40,25 +40,52 @@ class SensitivityResult:
     n_batches: int
     ops: list                  # list[OpInfo] (from registry tracing)
 
-    def loss_mse(self, assignment: dict, default: str = "bf16") -> float:
-        """Predicted loss MSE of an MP assignment (eq. 23): sum_l s_l alpha_f."""
+    def loss_mse(self, assignment: dict, ref: str = "bf16") -> float:
+        """Predicted loss MSE of an MP assignment (eq. 23).
+
+        Eq. (23) measures noise *added* relative to the reference run, so an
+        op executed at the reference format contributes d = 0 — not
+        ``s_l * alpha_ref``. Ops absent from ``assignment`` stay at the
+        reference format. This is the single implementation behind
+        ``pipeline.predicted_loss_mse`` and the IP's per-combo d vectors.
+        """
         total = 0.0
-        for name, s in self.sensitivity.items():
-            fmt = get_format(assignment.get(name, default))
-            total += s * fmt.alpha
+        for name, fmt in assignment.items():
+            if fmt == ref:
+                continue
+            total += self.sensitivity.get(name, 0.0) * get_format(fmt).alpha
         return total
 
     def d_layer(self, name: str, fmt_name: str) -> float:
         """d_{l,f} = s_l * alpha_f (eq. 22)."""
         return self.sensitivity[name] * get_format(fmt_name).alpha
 
+    def to_dict(self) -> dict:
+        return {
+            "sensitivity": dict(self.sensitivity),
+            "loss_sq_mean": float(self.loss_sq_mean),
+            "loss_mean": float(self.loss_mean),
+            "n_batches": int(self.n_batches),
+            "ops": [dataclasses.asdict(op) for op in self.ops],
+        }
 
-def collect_ops(loss_fn: Callable, params, batch) -> list:
-    """Trace the model once (abstractly) and return every quantizable OpInfo.
+    @classmethod
+    def from_dict(cls, d: dict) -> "SensitivityResult":
+        ops = [OpInfo(name=o["name"], kind=o["kind"], spec=o["spec"],
+                      lhs_shape=tuple(o["lhs_shape"]),
+                      rhs_shape=tuple(o["rhs_shape"]),
+                      out_shape=tuple(o["out_shape"]),
+                      macs=int(o["macs"]),
+                      weight_elems=int(o["weight_elems"]))
+               for o in d["ops"]]
+        return cls(sensitivity=dict(d["sensitivity"]),
+                   loss_sq_mean=float(d["loss_sq_mean"]),
+                   loss_mean=float(d["loss_mean"]),
+                   n_batches=int(d["n_batches"]), ops=ops)
 
-    ``loss_fn(params, batch, ctx)`` must route all quantizable matmuls
-    through ``repro.quant.qops``.
-    """
+
+def _trace_ops(loss_fn: Callable, params, batch) -> list:
+    """One abstract trace; quantizable OpInfo per call site, deduplicated."""
     registry: list = []
     ctx = QuantContext(mode="plain", registry=registry)
     jax.eval_shape(lambda p, b: loss_fn(p, b, ctx), params, batch)
@@ -71,18 +98,30 @@ def collect_ops(loss_fn: Callable, params, batch) -> list:
     return out
 
 
-def _zero_probes(loss_fn, params, batch, ops: Iterable[OpInfo]) -> dict:
-    """Zero probe arrays shaped like each op's operands for this batch."""
-    shapes = {}
-    registry: list = []
-    ctx = QuantContext(mode="plain", registry=registry)
-    jax.eval_shape(lambda p, b: loss_fn(p, b, ctx), params, batch)
-    for op in registry:
-        if op.name not in shapes:
-            shapes[op.name] = (op.lhs_shape, op.rhs_shape)
-    names = {op.name for op in ops}
-    return {name: (jnp.zeros(lhs, jnp.float32), jnp.zeros(rhs, jnp.float32))
-            for name, (lhs, rhs) in shapes.items() if name in names}
+def collect_ops(loss_fn: Callable, params, batch) -> list:
+    """Trace the model once (abstractly) and return every quantizable OpInfo.
+
+    ``loss_fn(params, batch, ctx)`` must route all quantizable matmuls
+    through ``repro.quant.qops``.
+    """
+    return _trace_ops(loss_fn, params, batch)
+
+
+def _batch_signature(batch) -> tuple:
+    """Hashable key describing a batch's pytree structure and leaf shapes."""
+    leaves, treedef = jax.tree_util.tree_flatten(batch)
+    return (treedef, tuple((tuple(getattr(l, "shape", ())),
+                            str(jnp.result_type(l))) for l in leaves))
+
+
+def _zero_probes(shapes: dict, ops: Iterable[OpInfo]) -> dict:
+    """Zero probe arrays shaped like each op's operands.
+
+    ``shapes`` maps op name -> (lhs_shape, rhs_shape) from a cached trace.
+    """
+    return {op.name: (jnp.zeros(shapes[op.name][0], jnp.float32),
+                      jnp.zeros(shapes[op.name][1], jnp.float32))
+            for op in ops if op.name in shapes}
 
 
 def calibrate_sensitivity(loss_fn: Callable, params, batches: Iterable,
@@ -106,17 +145,31 @@ def calibrate_sensitivity(loss_fn: Callable, params, batches: Iterable,
 
     grad_fn = jax.jit(jax.value_and_grad(probed_loss, has_aux=True))
 
+    # Probe shapes only depend on the batch's shape signature, so one trace
+    # per *distinct* signature serves every op-chunk of every batch (steady
+    # state: one trace total). The first trace doubles as op collection.
+    shape_cache: dict = {}
+
+    def shapes_for(batch) -> tuple:
+        sig = _batch_signature(batch)
+        if sig not in shape_cache:
+            traced = _trace_ops(loss_fn, params, batch)
+            shape_cache[sig] = (traced, {op.name: (op.lhs_shape, op.rhs_shape)
+                                         for op in traced})
+        return shape_cache[sig]
+
     for batch in batches:
+        traced, shapes = shapes_for(batch)
         if first:
             if ops is None:
-                ops = collect_ops(loss_fn, params, batch)
+                ops = traced
             first = False
         groups = [ops]
         if op_chunk is not None:
             groups = [ops[i:i + op_chunk] for i in range(0, len(ops), op_chunk)]
         loss_val = None
         for group in groups:
-            probes = _zero_probes(loss_fn, params, batch, group)
+            probes = _zero_probes(shapes, group)
             (loss_val, captures), grads = grad_fn(probes, params, batch)
             for name in probes:
                 z_lhs, z_rhs = captures[name]

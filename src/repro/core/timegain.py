@@ -33,14 +33,27 @@ from repro.quant.formats import get_format
 from repro.quant.qops import OpInfo
 
 __all__ = [
-    "enumerate_combos", "TheoreticalGainModel", "MemoryGainModel",
-    "RooflineGainModel", "WallClockGainModel",
+    "enumerate_combos", "default_gain_models", "TheoreticalGainModel",
+    "MemoryGainModel", "RooflineGainModel", "WallClockGainModel",
 ]
 
 
 def enumerate_combos(n_ops: int, formats: Sequence[str]) -> list:
     """All F^L format tuples for a group of L ops."""
     return list(itertools.product(formats, repeat=n_ops))
+
+
+def default_gain_models(hw: HWProfile, ref: str = "bf16") -> dict:
+    """The registered objective -> gain-model map (paper Sec. 2.3).
+
+    Calibration tabulates per-group gains for every model in this registry so
+    a :class:`~repro.core.pipeline.CalibrationBundle` can solve any objective
+    later without the model in scope. WallClockGainModel is deliberately not
+    registered: it needs a live run factory (pass it explicitly instead).
+    """
+    return {"ET": RooflineGainModel(hw, ref=ref),
+            "TT": TheoreticalGainModel(hw, ref=ref),
+            "M": MemoryGainModel(ref=ref)}
 
 
 class TheoreticalGainModel:

@@ -1,9 +1,14 @@
 """Serving launcher: one-shot batch or continuous-batching serving under an
-optional MP plan.
+optional MP plan — or an MP plan solved *at serve time* from a saved
+calibration bundle.
 
     # one-shot (the paper's TTFT measurement harness)
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_1b --smoke \
         --mp-plan plan.json --batch 4 --new-tokens 16
+
+    # solve per serving SLA from a calibrate() artifact — no recalibration
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_1b --smoke \
+        --calibration bundle.npz --tau 0.01 --objective ET
 
     # continuous batching: staggered arrivals drain through cache slots
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_1b --smoke \
@@ -11,8 +16,9 @@ optional MP plan.
 
 Loads params from a checkpoint directory if given, else random-init (smoke
 demos). An ``--mp-plan`` json (saved by ``MPPlan.save``) flows straight into
-either engine. Reports TTFT (the paper's measured quantity) and decode
-throughput.
+either engine; ``--calibration`` loads a ``CalibrationBundle`` and runs the
+cheap IP for the requested ``--tau`` / ``--objective`` right here. Reports
+TTFT (the paper's measured quantity) and decode throughput.
 """
 from __future__ import annotations
 
@@ -24,23 +30,51 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.core.mpconfig import MPPlan
+from repro.core.pipeline import CalibrationBundle
 from repro.models.registry import get_model
 from repro.serve import ContinuousBatchingEngine, Request, ServeEngine
 
 
-def _plan_unknown_ops(model, params, plan: MPPlan) -> set:
-    """Abstract-trace the serving prefill and flag plan ops this model lacks."""
+def _serving_op_names(model, params):
+    """Abstract-trace the serving prefill; returns its op-name set, or None
+    when the arch keeps a separate serving op namespace."""
     from repro.models.encdec import EncDec
     from repro.quant.qops import QuantContext
     if isinstance(model, EncDec):
-        return set()  # encoder-decoder serving keeps its own op namespace
+        return None  # encoder-decoder serving keeps its own op namespace
     registry: list = []
     ctx = QuantContext(mode="plain", registry=registry)
     tokens = jax.ShapeDtypeStruct((1, 8), jnp.int32)
     caches = model.init_cache(1, 16, abstract=True)
     jax.eval_shape(lambda p, t, c: model.prefill(p, t, c, ctx),
                    params, tokens, caches)
-    return plan.unknown_ops({op.name for op in registry})
+    return {op.name for op in registry}
+
+
+def _plan_unknown_ops(model, params, plan: MPPlan) -> set:
+    """Flag plan ops this model lacks (plan solved for a different arch)."""
+    known = _serving_op_names(model, params)
+    return set() if known is None else plan.unknown_ops(known)
+
+
+def _solve_from_bundle(model, params, args) -> MPPlan:
+    """Serve-time solve: load the calibration artifact, validate it against
+    this model's op namespace, and run the IP for the requested SLA."""
+    bundle = CalibrationBundle.load(args.calibration)
+    known = _serving_op_names(model, params)
+    if known is not None:
+        unknown = bundle.unknown_ops(known)
+        if unknown:
+            raise SystemExit(
+                f"[serve] calibration bundle has {len(unknown)} ops not in "
+                f"this model (e.g. {sorted(unknown)[:3]}); was it calibrated "
+                f"for a different arch?")
+    plan = bundle.solve(tau=args.tau, objective=args.objective)
+    print(f"[serve] solved from {args.calibration}: tau {plan.tau} "
+          f"objective {plan.objective} -> {plan.n_quantized} ops quantized "
+          f"(predicted gain {plan.predicted_gain:.3e}, "
+          f"MSE {plan.predicted_loss_mse:.3e} <= {plan.budget:.3e})")
+    return plan
 
 
 def main():
@@ -49,6 +83,14 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--mp-plan", default=None, help="MPPlan json path")
+    ap.add_argument("--calibration", default=None,
+                    help="CalibrationBundle path (json/npz): solve the IP at "
+                         "serve time instead of loading a fixed plan")
+    ap.add_argument("--tau", type=float, default=None,
+                    help="loss-MSE threshold for --calibration solves "
+                         "(default: the bundle's calibration-time tau)")
+    ap.add_argument("--objective", default=None, choices=("ET", "TT", "M"),
+                    help="IP objective for --calibration solves")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -69,8 +111,16 @@ def main():
         params = model.init(jax.random.key(0))
         print("[serve] random-init params (demo mode)")
 
+    if args.mp_plan and args.calibration:
+        raise SystemExit("--mp-plan and --calibration are mutually exclusive")
+    if (args.tau is not None or args.objective is not None) \
+            and not args.calibration:
+        raise SystemExit("--tau/--objective select a serve-time solve and "
+                         "require --calibration")
     plan = None
-    if args.mp_plan:
+    if args.calibration:
+        plan = _solve_from_bundle(model, params, args)
+    elif args.mp_plan:
         plan = MPPlan.load(args.mp_plan)
         print(f"[serve] MP plan: {plan.n_quantized} ops quantized "
               f"(objective {plan.objective}, tau {plan.tau})")

@@ -1,0 +1,186 @@
+"""CalibrationBundle / MPPlan artifacts: round-trips, staged-vs-legacy
+equality, serve-without-model solves, and cache resumption."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core.pipeline as pl
+from repro.core.mpconfig import MPPlan
+from repro.core.pipeline import (AMPOptions, CalibrationBundle,
+                                 auto_mixed_precision, calibrate)
+from repro.models.registry import get_model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    m = get_model("llama3_1b", smoke=True, n_layers=2)
+    params = m.init(jax.random.key(0))
+    batches = [{"tokens": jax.random.randint(jax.random.key(i), (2, 32), 0, 512),
+                "labels": jax.random.randint(jax.random.key(i + 50), (2, 32),
+                                             0, 512)}
+               for i in range(2)]
+    bundle = calibrate(m, params, batches, AMPOptions(tau=0.01, objective="TT"))
+    return m, params, batches, bundle
+
+
+def _plans_equal(a: MPPlan, b: MPPlan) -> bool:
+    return dataclasses.asdict(a) == dataclasses.asdict(b)
+
+
+def test_mpplan_roundtrip_normalizes_tuple_groups(tmp_path, setup):
+    """JSON turns tuple groups into lists; a round-tripped plan must still
+    compare equal to the in-memory original."""
+    _, _, _, bundle = setup
+    plan = bundle.solve()
+    # force tuple groups on a hand-built plan: __post_init__ normalizes
+    tup = MPPlan(assignment=dict(plan.assignment),
+                 groups=[tuple(g) for g in plan.groups],
+                 objective=plan.objective, tau=plan.tau, budget=plan.budget,
+                 predicted_loss_mse=plan.predicted_loss_mse,
+                 predicted_gain=plan.predicted_gain, ip_gap=plan.ip_gap,
+                 meta=dict(plan.meta))
+    assert all(isinstance(g, list) for g in tup.groups)
+    assert _plans_equal(tup, plan)
+    path = tmp_path / "plan.json"
+    plan.save(str(path))
+    loaded = MPPlan.load(str(path))
+    assert _plans_equal(loaded, plan)
+    assert loaded == plan
+
+
+@pytest.mark.parametrize("ext", ["json", "npz"])
+def test_bundle_roundtrip(tmp_path, setup, ext):
+    """Saved -> loaded bundle preserves sensitivity, groups, gain tables,
+    and solves to the identical plan with no model/params in scope."""
+    _, _, _, bundle = setup
+    path = tmp_path / f"bundle.{ext}"
+    bundle.save(str(path))
+    loaded = CalibrationBundle.load(str(path))
+    assert loaded.formats == bundle.formats
+    assert loaded.ref_format == bundle.ref_format
+    assert loaded.sens.sensitivity == bundle.sens.sensitivity
+    assert loaded.sens.loss_sq_mean == bundle.sens.loss_sq_mean
+    assert loaded.sens.ops == bundle.sens.ops
+    assert loaded.meta == bundle.meta
+    for obj in bundle.objectives:
+        a, b = loaded.objectives[obj], bundle.objectives[obj]
+        assert a["groups"] == b["groups"]
+        assert all(np.array_equal(x, y) for x, y in zip(a["gains"],
+                                                        b["gains"]))
+    for objective in ("ET", "TT", "M"):
+        for tau in (0.002, 0.02):
+            before = bundle.solve(tau=tau, objective=objective)
+            after = loaded.solve(tau=tau, objective=objective)
+            assert _plans_equal(before, after)
+            assert after.meta == before.meta
+
+
+def test_solve_matches_legacy_auto_mixed_precision(setup):
+    """Acceptance: bundle.solve() == legacy auto_mixed_precision() on
+    assignment and predicted gain/MSE, for every objective."""
+    m, params, batches, bundle = setup
+    for objective in ("ET", "TT", "M"):
+        for tau in (0.005, 0.05):
+            opts = AMPOptions(tau=tau, objective=objective)
+            legacy = auto_mixed_precision(m, params, batches, opts,
+                                          sens=bundle.sens)
+            staged = bundle.solve(tau=tau, objective=objective)
+            assert staged.assignment == legacy.assignment
+            assert staged.predicted_gain == legacy.predicted_gain
+            assert staged.predicted_loss_mse == legacy.predicted_loss_mse
+            assert _plans_equal(staged, legacy)
+
+
+def test_pareto_frontier(setup):
+    _, _, _, bundle = setup
+    taus = (0.001, 0.01, 0.05)
+    plans = bundle.pareto(taus, objective="TT")
+    assert [p.tau for p in plans] == list(taus)
+    gains = [p.predicted_gain for p in plans]
+    assert all(a <= b + 1e-15 for a, b in zip(gains, gains[1:]))
+    for p in plans:
+        assert p.predicted_loss_mse <= p.budget * (1 + 1e-9)
+
+
+def test_solve_defaults_and_unknown_objective(setup):
+    _, _, _, bundle = setup
+    plan = bundle.solve()
+    assert plan.tau == bundle.default_tau
+    assert plan.objective == bundle.default_objective
+    with pytest.raises(KeyError):
+        bundle.solve(objective="WALLCLOCK")
+
+
+def test_unknown_ops(setup):
+    _, _, _, bundle = setup
+    names = bundle.op_names
+    assert bundle.unknown_ops(names) == set()
+    missing = bundle.unknown_ops(names[1:])
+    assert missing == {names[0]}
+
+
+def test_calibrate_cache_resumes_without_recalibration(tmp_path, setup,
+                                                       monkeypatch):
+    """A matching cached bundle short-circuits calibration entirely; a
+    params change invalidates it via the fingerprint."""
+    m, params, batches, _ = setup
+    path = tmp_path / "cache.npz"
+    opts = AMPOptions(tau=0.01, objective="TT")
+    calls = {"n": 0}
+    orig = pl.calibrate_sensitivity
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(pl, "calibrate_sensitivity", counting)
+    first = calibrate(m, params, batches, opts, cache=str(path))
+    assert calls["n"] == 1 and path.exists()
+    second = calibrate(m, params, batches, opts, cache=str(path))
+    assert calls["n"] == 1  # pure cache hit
+    assert _plans_equal(second.solve(), first.solve())
+    # different params -> fingerprint mismatch -> recalibrate
+    params2 = jax.tree.map(lambda x: x * 1.5, params)
+    calibrate(m, params2, batches, opts, cache=str(path))
+    assert calls["n"] == 2
+
+
+def test_calibrate_cache_rejects_different_gain_model(tmp_path, setup):
+    """Cached tables must come from the same gain-model type: a bundle of
+    roofline ET tables cannot satisfy a request for another ET model."""
+    from repro.core.timegain import TheoreticalGainModel
+    from repro.hw.profiles import TPU_V5E
+    m, params, batches, _ = setup
+    path = tmp_path / "cache.json"
+    opts = AMPOptions(tau=0.01, objective="ET")
+    calibrate(m, params, batches, opts, cache=str(path))  # roofline ET
+    swapped = calibrate(m, params, batches, opts,
+                        gain_models={"ET": TheoreticalGainModel(TPU_V5E)},
+                        cache=str(path))
+    assert swapped.meta["gain_models"] == {"ET": "TheoreticalGainModel"}
+
+
+def test_calibrate_cache_rejects_option_mismatch(tmp_path, setup):
+    m, params, batches, _ = setup
+    path = tmp_path / "cache.json"
+    calibrate(m, params, batches, AMPOptions(max_group_size=8),
+              cache=str(path))
+    narrower = calibrate(m, params, batches, AMPOptions(max_group_size=2),
+                         cache=str(path))
+    assert narrower.meta["max_group_size"] == 2
+    assert all(len(g) <= 2
+               for g in narrower.objectives["ET"]["groups"])
+
+
+def test_corrupt_cache_falls_back_to_calibration(tmp_path, setup):
+    m, params, batches, bundle = setup
+    path = tmp_path / "cache.json"
+    path.write_text("{not json")
+    rebuilt = calibrate(m, params, batches,
+                        AMPOptions(tau=0.01, objective="TT"),
+                        cache=str(path))
+    assert _plans_equal(rebuilt.solve(), bundle.solve())
+    # and the bad file was replaced with a loadable artifact
+    assert CalibrationBundle.load(str(path)).solve() is not None

@@ -81,6 +81,51 @@ def test_additivity_across_layers(rng):
     assert np.isclose(dAB, dA + dB, rtol=1e-9)
 
 
+def test_loss_mse_reference_format_is_zero_noise(rng):
+    """Eq. (23) measures noise *added* vs the reference run: ops assigned to
+    (or left at) the reference format contribute d = 0, and the method is
+    the same implementation as pipeline.predicted_loss_mse."""
+    X = jax.random.normal(rng, (3, 5), jnp.float32)
+    W = jax.random.normal(jax.random.fold_in(rng, 1), (4, 5), jnp.float32)
+    sens = calibrate_sensitivity(_linear_loss, {"w": W}, [{"x": X}])
+    assert sens.sensitivity["lin"] > 0
+    # empty assignment (everything at the reference) predicts zero MSE
+    assert sens.loss_mse({}) == 0.0
+    # explicitly assigning the reference format is also zero, not s*alpha_bf16
+    assert sens.loss_mse({"lin": "bf16"}) == 0.0
+    # and both public entry points agree on a quantized assignment
+    asg = {"lin": "fp8_e4m3"}
+    assert sens.loss_mse(asg) == predicted_loss_mse(sens, asg)
+    assert sens.loss_mse(asg) == sens.d_layer("lin", "fp8_e4m3")
+
+
+def test_calibration_traces_once_per_batch_signature(rng, monkeypatch):
+    """Probe shapes are cached on the batch-shape signature: steady-state
+    calibration does ONE abstract trace total, even with op chunking over
+    many batches; a new batch shape costs exactly one more."""
+    X = jax.random.normal(rng, (3, 5), jnp.float32)
+    W = jax.random.normal(jax.random.fold_in(rng, 1), (4, 5), jnp.float32)
+    calls = {"n": 0}
+    orig = jax.eval_shape
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(jax, "eval_shape", counting)
+    same_shape = [{"x": X}, {"x": X + 1.0}, {"x": X * 2.0}]
+    sens = calibrate_sensitivity(_linear_loss, {"w": W}, same_shape,
+                                 op_chunk=1)
+    assert calls["n"] == 1, calls
+    assert sens.n_batches == 3
+
+    calls["n"] = 0
+    mixed = same_shape + [{"x": jnp.concatenate([X, X], axis=0)}]
+    sens = calibrate_sensitivity(_linear_loss, {"w": W}, mixed, op_chunk=1)
+    assert calls["n"] == 2, calls
+    assert sens.n_batches == 4
+
+
 def test_format_scaling(rng):
     """d_{l,f} scales exactly with alpha_f (eq. 22)."""
     m = get_model("llama3_1b", smoke=True)
