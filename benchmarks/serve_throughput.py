@@ -1,14 +1,20 @@
-"""Serving throughput: continuous batching vs the one-shot baseline under a
-mixed (staggered) request arrival pattern.
+"""Serving throughput: continuous batching (paged and dense-slot KV) vs the
+one-shot baseline under a mixed (staggered) request arrival pattern.
 
 Emits (via common.emit) tokens/s and per-request TTFT for both engines, with
-and without the IP-solved MP plan. The one-shot baseline must wait for the
-whole batch to arrive before prefilling (batch-formation latency), so its
-effective TTFT for early requests includes the queueing wait; the continuous
-engine admits each request the moment a slot frees up.
+and without the IP-solved MP plan — plus the KV-cache memory economics the
+paged refactor exists for: peak block occupancy and KV HBM bytes per live
+token, paged vs the dense-slot baseline at the same batch pressure. The run
+fails if paged bytes/live-token is not strictly below dense, or if any
+engine pair disagrees on greedy tokens.
+
+The one-shot baseline must wait for the whole batch to arrive before
+prefilling (batch-formation latency), so its effective TTFT for early
+requests includes the queueing wait; the continuous engine admits each
+request the moment a slot (and, paged, its block budget) frees up.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py \
-        [--requests 8] [--n-slots 4] [--new-tokens 12]
+        [--requests 8] [--n-slots 4] [--new-tokens 12] [--block-size 8]
 """
 from __future__ import annotations
 
@@ -31,16 +37,30 @@ def _requests(data, n, prompt_len, new_tokens, arrival_every):
             for i in range(n)]
 
 
-def run_continuous(model, params, reqs, n_slots, max_len, mp, tag):
+def run_continuous(model, params, reqs, n_slots, max_len, mp, tag,
+                   paged=True, block_size=16):
     eng = ContinuousBatchingEngine(model, n_slots=n_slots, max_len=max_len,
-                                   mp=mp)
+                                   mp=mp, paged=paged, block_size=block_size)
     eng.serve(params, [reqs[0]])              # warmup (compile)
     out = eng.serve(params, reqs)
     ttfts = np.array(sorted(r.ttft_s for r in out.results.values()))
-    emit(f"serve_continuous_{tag}_tok_s", out.tokens_per_s,
+    layout = "paged" if paged else "dense"
+    emit(f"serve_continuous_{layout}_{tag}_tok_s", out.tokens_per_s,
          f"{out.n_steps} steps, {len(reqs)} reqs, {n_slots} slots")
-    emit(f"serve_continuous_{tag}_ttft_p50_us", ttfts[len(ttfts) // 2] * 1e6,
-         "prefill wall time at admission")
+    emit(f"serve_continuous_{layout}_{tag}_ttft_p50_us",
+         ttfts[len(ttfts) // 2] * 1e6, "prefill wall time at admission")
+    c = out.counters
+    # the paging win, measured: HBM the KV cache actually pins per live
+    # token at peak batch pressure (dense pins n_slots * max_len regardless)
+    emit(f"serve_continuous_{layout}_{tag}_kv_bytes_per_live_token",
+         c["peak_kv_bytes"] / max(c["peak_live_tokens"], 1),
+         f"peak KV {c['peak_kv_bytes'] / 1e6:.3f} MB over "
+         f"{c['peak_live_tokens']} live tokens")
+    if paged:
+        emit(f"serve_continuous_{layout}_{tag}_peak_blocks",
+             c["peak_blocks_in_use"],
+             f"of {c['n_blocks'] - 1} allocatable, block_size "
+             f"{c['block_size']}, {c['blocked_admissions']} blocked admissions")
     return out
 
 
@@ -69,6 +89,12 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--arrival-every", type=int, default=2)
     ap.add_argument("--tau", type=float, default=0.01)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=None,
+                    help="continuous-engine cache ceiling (default 2x the "
+                         "request span: engines are provisioned for their "
+                         "longest admissible request, and paging only pays "
+                         "for live tokens inside that ceiling)")
     args = ap.parse_args()
 
     model, params, data, _ = bench_model()
@@ -77,24 +103,40 @@ def main():
 
     reqs = _requests(data, args.requests, args.prompt_len, args.new_tokens,
                      args.arrival_every)
-    max_len = args.prompt_len + args.new_tokens
+    max_len = args.max_len or 2 * (args.prompt_len + args.new_tokens)
 
     for tag, mp in (("bf16", None), ("mp", plan)):
         one = run_oneshot(model, params, reqs, mp, tag)
-        cont = run_continuous(model, params, reqs, args.n_slots, max_len, mp,
-                              tag)
-        # parity guard: the benchmark is only meaningful if both engines
+        dense = run_continuous(model, params, reqs, args.n_slots, max_len,
+                               mp, tag, paged=False)
+        paged = run_continuous(model, params, reqs, args.n_slots, max_len,
+                               mp, tag, paged=True,
+                               block_size=args.block_size)
+        # parity guard: the benchmark is only meaningful if all engines
         # generate the same greedy continuations
         batch_toks = np.asarray(one.tokens)
-        agree = np.mean([
-            np.array_equal(cont.results[i].tokens, batch_toks[i])
-            for i in range(args.requests)])
-        print(f"# {tag}: one-shot vs continuous greedy agreement "
-              f"{agree:.2%}")
-        if agree < 1.0:
+        for name, cont in (("dense", dense), ("paged", paged)):
+            agree = np.mean([
+                np.array_equal(cont.results[i].tokens, batch_toks[i])
+                for i in range(args.requests)])
+            print(f"# {tag}: one-shot vs continuous[{name}] greedy "
+                  f"agreement {agree:.2%}")
+            if agree < 1.0:
+                raise SystemExit(
+                    f"token-parity violation ({tag}/{name}): continuous and "
+                    f"one-shot engines disagree — comparison is invalid")
+        # the acceptance bar: paged KV must pin strictly fewer HBM bytes per
+        # live token than dense slots at the same batch pressure
+        bpl = {name: c.counters["peak_kv_bytes"]
+               / max(c.counters["peak_live_tokens"], 1)
+               for name, c in (("dense", dense), ("paged", paged))}
+        print(f"# {tag}: KV bytes/live-token paged {bpl['paged']:.1f} vs "
+              f"dense {bpl['dense']:.1f} "
+              f"({bpl['paged'] / bpl['dense']:.1%} of dense)")
+        if bpl["paged"] >= bpl["dense"]:
             raise SystemExit(
-                f"token-parity violation ({tag}): continuous and one-shot "
-                f"engines disagree — throughput comparison is invalid")
+                f"paging regression ({tag}): paged KV bytes/live-token "
+                f"{bpl['paged']:.1f} not below dense {bpl['dense']:.1f}")
 
 
 if __name__ == "__main__":

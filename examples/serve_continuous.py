@@ -1,9 +1,11 @@
 """Continuous-batching serving demo: an MPPlan flows from the IP solver
 straight into the engine, and a staggered request stream drains through a
-fixed pool of cache slots.
+paged KV-block pool (vLLM-style block tables; ``--dense-slots`` for the old
+monolithic rings).
 
     PYTHONPATH=src python examples/serve_continuous.py \
-        [--tau 0.01] [--n-slots 4] [--requests 8] [--new-tokens 12]
+        [--tau 0.01] [--n-slots 4] [--requests 8] [--new-tokens 12] \
+        [--block-size 8] [--n-blocks 24] [--no-mp]
 
 Pipeline shown here (the full plan->engine handoff):
   1. ``CalibrationBundle.solve`` runs the IP (here from the shared benchmark
@@ -11,14 +13,20 @@ Pipeline shown here (the full plan->engine handoff):
   2. ``ContinuousBatchingEngine(model, mp=plan)`` compiles quantized
      prefill/decode steps from the plan (``core.mpconfig.as_assignment``);
   3. requests with different prompts/arrival times share one decode batch,
-     each cache slot advancing at its own sequence depth.
+     each cache slot advancing at its own sequence depth, KV blocks
+     allocated as each sequence crosses a block boundary.
+
+Exits non-zero unless every request completes AND the continuous engine's
+greedy tokens exactly match the one-shot reference — the contract the CI
+serve-smoke job enforces.
 """
 import argparse
 
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bench_bundle, bench_model
-from repro.serve import ContinuousBatchingEngine, Request
+from repro.serve import ContinuousBatchingEngine, Request, ServeEngine
 
 
 def main():
@@ -29,13 +37,22 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--arrival-every", type=int, default=2)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--n-blocks", type=int, default=None)
+    ap.add_argument("--dense-slots", action="store_true",
+                    help="monolithic per-slot rings instead of paged blocks")
+    ap.add_argument("--no-mp", action="store_true",
+                    help="skip bundle calibration / MP plan (bf16 only; "
+                         "fast path for CI smoke)")
     args = ap.parse_args()
 
     model, params, data, _ = bench_model()
-    plan = bench_bundle().solve(tau=args.tau, objective="ET")
-    print(f"MP plan quantizes {plan.n_quantized}/{plan.meta['n_ops']} ops\n")
+    configs = [("bf16", None)]
+    if not args.no_mp:
+        plan = bench_bundle().solve(tau=args.tau, objective="ET")
+        print(f"MP plan quantizes {plan.n_quantized}/{plan.meta['n_ops']} ops\n")
+        configs.append(("mp-fp8", plan))
 
-    rng = np.random.default_rng(11)
     reqs = [Request(rid=i,
                     tokens=np.asarray(
                         data.batch_at(50_000 + i)["tokens"][0,
@@ -47,9 +64,12 @@ def main():
     max_len = args.prompt_len + args.new_tokens
 
     outs = {}
-    for tag, mp in (("bf16", None), ("mp-fp8", plan)):
+    for tag, mp in configs:
         eng = ContinuousBatchingEngine(model, n_slots=args.n_slots,
-                                       max_len=max_len, mp=mp)
+                                       max_len=max_len, mp=mp,
+                                       paged=not args.dense_slots,
+                                       block_size=args.block_size,
+                                       n_blocks=args.n_blocks)
         eng.serve(params, [reqs[0]])          # warmup (compile)
         out = eng.serve(params, reqs)
         outs[tag] = out
@@ -57,13 +77,40 @@ def main():
         print(f"{tag:8s} {out.n_steps:4d} decode steps   "
               f"{out.tokens_per_s:8.1f} tok/s   "
               f"TTFT p50 {ttfts[len(ttfts)//2]*1e3:7.2f} ms")
+        c = out.counters
+        if c.get("paged"):
+            print(f"{'':8s} paged KV: {c['peak_blocks_in_use']}/"
+                  f"{c['n_blocks'] - 1} blocks at peak (block_size "
+                  f"{c['block_size']}), peak KV {c['peak_kv_bytes']/1e6:.2f} "
+                  f"MB vs dense-slot {c['dense_kv_bytes']/1e6:.2f} MB, "
+                  f"{c['blocked_admissions']} blocked admissions")
 
-    agree = np.mean([
-        np.mean(outs["bf16"].results[i].tokens == outs["mp-fp8"].results[i].tokens)
-        for i in range(args.requests)])
-    print(f"\ngreedy-token agreement bf16 vs mp: {agree:.2%}")
-    print("(on-host quantization is simulated; wall-clock gains appear on "
-          "accelerators with native FP8 throughput — see DESIGN.md)")
+        # contract checks: completion + exact greedy parity vs one-shot
+        # (prompts share a length, so one batched generate covers all rids)
+        missing = [r.rid for r in reqs if r.rid not in out.results]
+        if missing:
+            raise SystemExit(f"{tag}: requests never completed: {missing}")
+        ref_eng = ServeEngine(model, mp=mp, donate=False)
+        ref = ref_eng.generate(
+            params, {"tokens": jnp.asarray(np.stack([r.tokens for r in reqs]))},
+            max_new_tokens=args.new_tokens)
+        ref_toks = np.asarray(ref.tokens)
+        for j, r in enumerate(reqs):
+            if not np.array_equal(out.results[r.rid].tokens, ref_toks[j]):
+                raise SystemExit(
+                    f"{tag}: rid {r.rid} diverged from the one-shot "
+                    f"reference — paged/continuous decode is broken")
+        print(f"{'':8s} all {len(reqs)} requests completed, greedy tokens "
+              f"== one-shot reference\n")
+
+    if "mp-fp8" in outs:
+        agree = np.mean([
+            np.mean(outs["bf16"].results[i].tokens
+                    == outs["mp-fp8"].results[i].tokens)
+            for i in range(args.requests)])
+        print(f"greedy-token agreement bf16 vs mp: {agree:.2%}")
+        print("(on-host quantization is simulated; wall-clock gains appear "
+              "on accelerators with native FP8 throughput — see DESIGN.md)")
 
 
 if __name__ == "__main__":

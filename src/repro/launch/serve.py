@@ -10,9 +10,10 @@ calibration bundle.
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_1b --smoke \
         --calibration bundle.npz --tau 0.01 --objective ET
 
-    # continuous batching: staggered arrivals drain through cache slots
+    # continuous batching: staggered arrivals drain through a paged KV pool
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_1b --smoke \
-        --continuous --n-slots 4 --requests 12 --arrival-every 2
+        --continuous --n-slots 4 --requests 12 --arrival-every 2 \
+        --block-size 16 --n-blocks 24        # (--dense-slots for the old rings)
 
 Loads params from a checkpoint directory if given, else random-init (smoke
 demos). An ``--mp-plan`` json (saved by ``MPPlan.save``) flows straight into
@@ -100,6 +101,14 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--arrival-every", type=int, default=2,
                     help="decode steps between request arrivals")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV block size in tokens (continuous mode)")
+    ap.add_argument("--n-blocks", type=int, default=None,
+                    help="paged KV pool size incl. the trash block "
+                         "(default: worst case, never backpressures)")
+    ap.add_argument("--dense-slots", action="store_true",
+                    help="use monolithic per-slot rings instead of paged "
+                         "KV blocks (continuous mode)")
     args = ap.parse_args()
 
     model = get_model(args.arch, smoke=args.smoke)
@@ -133,7 +142,10 @@ def main():
     if args.continuous:
         max_len = args.prompt_len + args.new_tokens
         eng = ContinuousBatchingEngine(model, n_slots=args.n_slots,
-                                       max_len=max_len, mp=plan)
+                                       max_len=max_len, mp=plan,
+                                       paged=not args.dense_slots,
+                                       block_size=args.block_size,
+                                       n_blocks=args.n_blocks)
         rng = np.random.default_rng(1)
         reqs = [Request(rid=i,
                         tokens=rng.integers(0, model.cfg.vocab_size,
@@ -148,6 +160,13 @@ def main():
         print(f"[serve] continuous: {args.requests} reqs via {args.n_slots} "
               f"slots | {out.n_steps} decode steps | "
               f"{out.tokens_per_s:.1f} tok/s | TTFT p50 {p50}")
+        c = out.counters
+        if c.get("paged"):
+            print(f"[serve] paged KV: block_size {c['block_size']} | "
+                  f"{c['peak_blocks_in_use']}/{c['n_blocks'] - 1} blocks at "
+                  f"peak | peak KV {c['peak_kv_bytes'] / 1e6:.2f} MB vs dense "
+                  f"{c['dense_kv_bytes'] / 1e6:.2f} MB | "
+                  f"{c['blocked_admissions']} blocked admissions")
     else:
         eng = ServeEngine(model, mp=plan, donate=False)
         prompt = {"tokens": jax.random.randint(jax.random.key(1),

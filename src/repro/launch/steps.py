@@ -15,7 +15,7 @@ from repro.quant.qops import QuantContext
 from repro.train import optim
 
 __all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
-           "make_eval_step"]
+           "make_paged_decode_step", "make_eval_step"]
 
 
 def _split_micro(batch: dict, n_micro: int) -> dict:
@@ -75,13 +75,19 @@ def make_eval_step(model, mp: Optional[dict] = None):
     return eval_step
 
 
+def _serving_ctx(mp) -> QuantContext:
+    """One QuantContext policy for every serving step (prefill, dense and
+    paged decode): per-sequence activation scales so co-batched requests are
+    quantized independently (continuous batching keeps exact greedy parity).
+    Shared so the paged and dense decode twins can never diverge."""
+    mp = as_assignment(mp)
+    return (QuantContext(mode="mp", mp=mp, act_scale_axis=0) if mp
+            else QuantContext())
+
+
 def make_prefill_step(model, mp: Optional[dict] = None):
     """(params, caches, batch) -> (last-token logits, caches)."""
-    mp = as_assignment(mp)
-    # serving uses per-sequence activation scales so co-batched requests are
-    # quantized independently (continuous batching keeps exact greedy parity)
-    ctx = (QuantContext(mode="mp", mp=mp, act_scale_axis=0) if mp
-           else QuantContext())
+    ctx = _serving_ctx(mp)
 
     from repro.models.encdec import EncDec
 
@@ -103,11 +109,25 @@ def make_decode_step(model, mp: Optional[dict] = None):
     LMs — a (B,) int32 vector of per-slot positions so a continuous-batching
     engine can decode sequences at different depths in one step.
     """
-    mp = as_assignment(mp)
-    ctx = (QuantContext(mode="mp", mp=mp, act_scale_axis=0) if mp
-           else QuantContext())
+    ctx = _serving_ctx(mp)
 
     def decode_step(params, caches, token, pos):
         return model.decode_step(params, token, pos, caches, ctx)
+
+    return decode_step
+
+
+def make_paged_decode_step(model, mp: Optional[dict] = None):
+    """(params, caches, token, pos, block_tables) -> (logits, caches).
+
+    The paged twin of :func:`make_decode_step`: ``caches`` hold block-major
+    attention K/V owned by a ``PagedCachePool`` and ``block_tables`` is the
+    (B, max_blocks) int32 map from each decode row's logical pages to
+    physical blocks (-1 = unallocated; vacant rows are all -1)."""
+    ctx = _serving_ctx(mp)
+
+    def decode_step(params, caches, token, pos, block_tables):
+        return model.decode_step(params, token, pos, caches, ctx,
+                                 block_tables=block_tables)
 
     return decode_step

@@ -67,6 +67,11 @@ def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
 
 
 class EncDec:
+    # serving capability flags (engines dispatch on these, not on isinstance):
+    # init_cache(batch, max_len, enc_len) needs the encoder length for the
+    # pre-computed cross-attention K/V
+    cache_needs_enc_len = True
+
     def __init__(self, cfg: EncDecConfig):
         self.cfg = cfg
         self.dtype = jnp.dtype(cfg.dtype)

@@ -130,6 +130,9 @@ class LMConfig:
 
 
 class LM:
+    # serving capability flags (engines dispatch on these, not on isinstance)
+    cache_needs_enc_len = False
+
     def __init__(self, cfg: LMConfig):
         self.cfg = cfg
         self.dtype = jnp.dtype(cfg.dtype)
@@ -220,7 +223,8 @@ class LM:
     def _block(self, p: dict, ctx: QuantContext, scope: str, sig: tuple,
                h: jax.Array, positions: jax.Array, *,
                window="cfg", cache: Optional[dict] = None,
-               cache_pos=None, decode: bool = False):
+               cache_pos=None, decode: bool = False,
+               block_tables: Optional[jax.Array] = None):
         cfg = self.cfg
         block, is_moe = sig
         new_cache = cache
@@ -230,11 +234,13 @@ class LM:
             y, new_cache = L.attention(p["attn"], ctx, f"{scope}/attn",
                                        cfg.attn_cfg, hn, positions,
                                        cache=cache, cache_pos=cache_pos,
+                                       block_tables=block_tables,
                                        window=window)
         elif block == "mla":
             y, new_cache = L.mla_attention(p["attn"], ctx, f"{scope}/attn",
                                            cfg.mla_cfg, hn, positions,
-                                           cache=cache, cache_pos=cache_pos)
+                                           cache=cache, cache_pos=cache_pos,
+                                           block_tables=block_tables)
         elif block == "mamba":
             if decode:
                 y, new_cache = M.apply_mamba_decode(p["mamba"], ctx,
@@ -249,7 +255,7 @@ class LM:
             ya, a_new = L.attention(p["attn"], ctx, f"{scope}/attn",
                                     cfg.attn_cfg, hn, positions,
                                     cache=a_cache, cache_pos=cache_pos,
-                                    window=window)
+                                    block_tables=block_tables, window=window)
             if decode:
                 ym, m_new = M.apply_mamba_decode(p["mamba"], ctx,
                                                  f"{scope}/mamba", cfg.ssm,
@@ -276,7 +282,8 @@ class LM:
 
     def _backbone(self, params: dict, ctx: QuantContext, h: jax.Array,
                   positions: jax.Array, *, caches: Optional[dict] = None,
-                  cache_pos=None, decode: bool = False):
+                  cache_pos=None, decode: bool = False,
+                  block_tables: Optional[jax.Array] = None):
         """Run all layers. caches: {"layers/i" or "segments/s": cache pytree}."""
         from repro.distributed.sharding import shard_hint
         cfg = self.cfg
@@ -300,7 +307,7 @@ class LM:
                     h_, c_new, aux_i = self._block(
                         p_i, ctx, f"segments/{s}", sig, h_, positions,
                         window=win_i, cache=cache_i, cache_pos=cache_pos,
-                        decode=decode)
+                        decode=decode, block_tables=block_tables)
                     return (h_, aux_ + aux_i), c_new
 
                 if cfg.remat:
@@ -345,7 +352,8 @@ class LM:
                     return self._block(p_i, ctx, f"layers/{i}", sig, h_,
                                        positions, window=cfg.window_for(i),
                                        cache=cache_i_, cache_pos=cache_pos,
-                                       decode=decode)
+                                       decode=decode,
+                                       block_tables=block_tables)
 
                 if cfg.remat:
                     body = jax.checkpoint(body)
@@ -429,29 +437,16 @@ class LM:
     # ------------------------------------------------------------------
     # serving
     # ------------------------------------------------------------------
-    def cache_specs(self, batch: int, max_len: int) -> dict:
-        """Flat path->ParamSpec dict for the KV/SSM caches."""
+    @property
+    def _kv_dtype(self):
+        return (jnp.float8_e4m3fn if self.cfg.kv_cache_dtype == "fp8_e4m3"
+                else self.dtype)
+
+    def _assemble_cache_specs(self, one) -> dict:
+        """Stitch per-layer cache specs (``one(sig) -> {sub: tree}``) into the
+        flat ``layers/i@sub/path`` (or ``segments/s@...``) namespace."""
         cfg = self.cfg
-        kv_dtype = (jnp.float8_e4m3fn if cfg.kv_cache_dtype == "fp8_e4m3"
-                    else self.dtype)
         specs: dict = {}
-
-        def one(sig) -> dict:
-            block, _ = sig
-            if block == "attn":
-                return {"attn": L.kv_cache_spec(cfg.attn_cfg, batch, max_len,
-                                                kv_dtype)}
-            if block == "mla":
-                return {"attn": L.mla_cache_spec(cfg.mla_cfg, batch, max_len,
-                                                 kv_dtype)}
-            if block == "mamba":
-                return {"mamba": M.mamba_cache_spec(cfg.ssm, batch, self.dtype)}
-            if block == "hybrid":
-                return {"attn": L.kv_cache_spec(cfg.attn_cfg, batch, max_len,
-                                                kv_dtype),
-                        "mamba": M.mamba_cache_spec(cfg.ssm, batch, self.dtype)}
-            raise ValueError(block)
-
         if cfg.scan_layers:
             for s, (sig, idxs) in enumerate(cfg.segments()):
                 for sub, tree in one(sig).items():
@@ -466,6 +461,61 @@ class LM:
                         specs[f"layers/{i}@{sub}/{path}"] = ps
         return specs
 
+    def cache_specs(self, batch: int, max_len: int,
+                    ring_window: bool = True) -> dict:
+        """Flat path->ParamSpec dict for the dense KV/SSM caches.
+        ``ring_window=False`` keeps full ``max_len`` K/V rows for
+        sliding-window layers (window enforced by mask only) — required for
+        a prefill cache that will be reshaped into paged blocks."""
+        cfg = self.cfg
+        kv_dtype = self._kv_dtype
+
+        def one(sig) -> dict:
+            block, _ = sig
+            if block == "attn":
+                return {"attn": L.kv_cache_spec(cfg.attn_cfg, batch, max_len,
+                                                kv_dtype, ring=ring_window)}
+            if block == "mla":
+                return {"attn": L.mla_cache_spec(cfg.mla_cfg, batch, max_len,
+                                                 kv_dtype)}
+            if block == "mamba":
+                return {"mamba": M.mamba_cache_spec(cfg.ssm, batch, self.dtype)}
+            if block == "hybrid":
+                return {"attn": L.kv_cache_spec(cfg.attn_cfg, batch, max_len,
+                                                kv_dtype, ring=ring_window),
+                        "mamba": M.mamba_cache_spec(cfg.ssm, batch, self.dtype)}
+            raise ValueError(block)
+
+        return self._assemble_cache_specs(one)
+
+    def paged_cache_specs(self, n_slots: int, n_blocks: int,
+                          block_size: int) -> dict:
+        """Flat specs for paged serving: attention K/V (and MLA latents) are
+        block-major ``(n_blocks, block_size, ...)`` shared storage; SSM state
+        has no sequence axis and stays slot-major ``(n_slots, ...)``."""
+        cfg = self.cfg
+        kv_dtype = self._kv_dtype
+
+        def one(sig) -> dict:
+            block, _ = sig
+            if block == "attn":
+                return {"attn": L.kv_page_spec(cfg.attn_cfg, n_blocks,
+                                               block_size, kv_dtype)}
+            if block == "mla":
+                return {"attn": L.mla_page_spec(cfg.mla_cfg, n_blocks,
+                                                block_size, kv_dtype)}
+            if block == "mamba":
+                return {"mamba": M.mamba_cache_spec(cfg.ssm, n_slots,
+                                                    self.dtype)}
+            if block == "hybrid":
+                return {"attn": L.kv_page_spec(cfg.attn_cfg, n_blocks,
+                                               block_size, kv_dtype),
+                        "mamba": M.mamba_cache_spec(cfg.ssm, n_slots,
+                                                    self.dtype)}
+            raise ValueError(block)
+
+        return self._assemble_cache_specs(one)
+
     @staticmethod
     def _cache_tree(flat_specs_or_vals: dict) -> dict:
         """'layers/0@attn/k' flat keys -> {"layers/0": {"attn": {"k": ...}}}."""
@@ -479,8 +529,18 @@ class LM:
             node[sub[-1]] = v
         return out
 
-    def init_cache(self, batch: int, max_len: int, abstract: bool = False) -> dict:
-        specs = self.cache_specs(batch, max_len)
+    def init_cache(self, batch: int, max_len: int, abstract: bool = False,
+                   ring_window: bool = True) -> dict:
+        return self._materialize_cache(
+            self.cache_specs(batch, max_len, ring_window=ring_window),
+            abstract)
+
+    def init_paged_cache(self, n_slots: int, n_blocks: int, block_size: int,
+                         abstract: bool = False) -> dict:
+        return self._materialize_cache(
+            self.paged_cache_specs(n_slots, n_blocks, block_size), abstract)
+
+    def _materialize_cache(self, specs: dict, abstract: bool = False) -> dict:
         if abstract:
             flat = {k: jax.ShapeDtypeStruct(s.shape, s.dtype)
                     for k, s in specs.items()}
@@ -503,6 +563,47 @@ class LM:
                 out[lk] = subs
         return out
 
+    def paged_insert(self, paged: dict, dense1: dict, block_ids: jax.Array,
+                     slot: jax.Array) -> dict:
+        """Scatter a freshly prefilled batch=1 dense cache into paged storage.
+
+        Page-major leaves (attention K/V, MLA latents) land in the physical
+        blocks named by ``block_ids``; the dense prefill length must equal
+        ``len(block_ids) * block_size`` so the reshape is exact. Slot-major
+        leaves (SSM state) overwrite row ``slot``. The dense ``pos`` ring is
+        dropped: paged attention derives key positions from block-table
+        order. Pure function of its array args — jit it once per distinct
+        prompt-block count.
+        """
+        scan = self.cfg.scan_layers
+        nb = block_ids.shape[0]
+        slot = jnp.asarray(slot, jnp.int32)
+
+        def rec(pv, dv):
+            if isinstance(pv, dict):
+                if "pos" in dv and "pos" not in pv:    # attention page node
+                    out = {}
+                    for name, leaf in pv.items():
+                        src = dv[name]
+                        if scan:
+                            n_l, bs = leaf.shape[0], leaf.shape[2]
+                            s = src[:, 0].reshape((n_l, nb, bs) + src.shape[3:])
+                            out[name] = leaf.at[:, block_ids].set(
+                                s.astype(leaf.dtype))
+                        else:
+                            bs = leaf.shape[1]
+                            s = src[0].reshape((nb, bs) + src.shape[2:])
+                            out[name] = leaf.at[block_ids].set(
+                                s.astype(leaf.dtype))
+                    return out
+                return {k: rec(v, dv[k]) for k, v in pv.items()}
+            # slot-major leaf (SSM state): overwrite row ``slot``
+            axis = 1 if scan else 0
+            start = (0,) * axis + (slot,) + (0,) * (pv.ndim - axis - 1)
+            return jax.lax.dynamic_update_slice(pv, dv.astype(pv.dtype), start)
+
+        return {k: rec(v, dense1[k]) for k, v in paged.items()}
+
     def prefill(self, params: dict, tokens: jax.Array, caches: dict,
                 ctx: QuantContext, *,
                 prefix_embeds: Optional[jax.Array] = None):
@@ -513,10 +614,13 @@ class LM:
         return logits, caches
 
     def decode_step(self, params: dict, token: jax.Array, pos: jax.Array,
-                    caches: dict, ctx: QuantContext):
+                    caches: dict, ctx: QuantContext, *,
+                    block_tables: Optional[jax.Array] = None):
         """One token for every sequence. token: (B,1); pos: scalar int32 for
         a lock-step batch, or (B,) int32 with one position per sequence
-        (continuous batching: every cache slot decodes at its own depth)."""
+        (continuous batching: every cache slot decodes at its own depth).
+        ``block_tables`` (B, max_blocks) switches attention caches to the
+        paged layout (shared across layers; SSM state stays slot-major)."""
         emb = jnp.take(params["embed"]["w"], token, axis=0).astype(self.dtype)
         B = token.shape[0]
         pos = jnp.asarray(pos, jnp.int32)
@@ -526,7 +630,7 @@ class LM:
             positions = jnp.broadcast_to(pos[None, None], (B, 1))
         h, caches, _ = self._backbone(params, ctx, emb, positions,
                                       caches=caches, cache_pos=pos,
-                                      decode=True)
+                                      decode=True, block_tables=block_tables)
         logits = self._head(params, ctx, h)
         return logits, caches
 

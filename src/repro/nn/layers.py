@@ -8,11 +8,24 @@ Conventions:
 * weights are stored (out_features, in_features) following eq. (8) of the
   paper: ``y = x @ w^T + b``.
 
-KV cache: a unified ring buffer ``{"k": (B,W,Hkv,D), "v": ..., "pos": (B,W)}``
-where ``pos`` holds the absolute position stored in each slot (-1 = empty).
-``W = min(max_len, window)`` — sliding-window archs get O(window) decode
-memory (what makes hymba ``long_500k`` deployable); full-attention archs use
-W = max_len where the ring write degenerates to an append.
+KV cache — two layouts share the attention math:
+
+* dense ring (the default / one-shot path): ``{"k": (B,W,Hkv,D), "v": ...,
+  "pos": (B,W)}`` where ``pos`` holds the absolute position stored in each
+  slot (-1 = empty). ``W = min(max_len, window)`` — sliding-window archs get
+  O(window) decode memory (what makes hymba ``long_500k`` deployable);
+  full-attention archs use W = max_len where the ring write degenerates to
+  an append.
+* paged blocks (continuous serving): ``{"k": (n_blocks, block_size, Hkv,
+  D), "v": ...}`` — physical blocks owned by a ``PagedCachePool``; each
+  decode row carries a block table (row of physical block ids, -1 =
+  unallocated) and logical position ``j*block_size + i`` lives at page-table
+  entry ``j``, offset ``i``. There is no ``pos`` leaf: the pool guarantees
+  blocks are exclusively owned and written contiguously, so every key at
+  logical position <= the query position is fresh by construction and the
+  causal mask alone separates live keys from stale block contents. Block 0
+  is a trash block (never allocated) that absorbs writes from vacant decode
+  rows, whose block tables are all -1.
 """
 from __future__ import annotations
 
@@ -162,8 +175,13 @@ def attn_specs(prefix: str, cfg: AttnConfig) -> dict:
 
 
 def kv_cache_spec(cfg: AttnConfig, batch: int, max_len: int,
-                  dtype=jnp.bfloat16) -> dict:
-    W = max_len if cfg.window is None else min(max_len, cfg.window)
+                  dtype=jnp.bfloat16, ring: bool = True) -> dict:
+    """``ring=False`` disables the sliding-window ring clamp and keeps the
+    full ``max_len`` layout (positions stay contiguous from slot 0) — the
+    shape ``LM.paged_insert`` needs to reshape a prefill cache into blocks;
+    the window is still enforced by the attention mask."""
+    W = (max_len if (cfg.window is None or not ring)
+         else min(max_len, cfg.window))
     # kv_heads shard over 'model' when divisible; otherwise head_dim picks up
     # the model axis (contraction-dim sharding -> small score all-reduce)
     return {
@@ -175,6 +193,55 @@ def kv_cache_spec(cfg: AttnConfig, batch: int, max_len: int,
                        "zeros"),
         "pos": ParamSpec((batch, W), ("act_batch", None), jnp.int32, "zeros"),
     }
+
+
+def kv_page_spec(cfg: AttnConfig, n_blocks: int, block_size: int,
+                 dtype=jnp.bfloat16) -> dict:
+    """Paged KV storage: ``n_blocks`` physical blocks of ``block_size``
+    tokens, shared by all decode rows via block tables. Sliding-window archs
+    keep masked-window *compute* but not O(window) *memory* under paging
+    (block tables grow with absolute position)."""
+    return {
+        "k": ParamSpec((n_blocks, block_size, cfg.n_kv_heads, cfg.d_head),
+                       (None, None, "kv_heads", "head_dim"), dtype, "zeros"),
+        "v": ParamSpec((n_blocks, block_size, cfg.n_kv_heads, cfg.d_head),
+                       (None, None, "kv_heads", "head_dim"), dtype, "zeros"),
+    }
+
+
+def paged_write(cache: dict, tensors: dict, block_tables: jax.Array,
+                cache_pos: jax.Array) -> dict:
+    """Scatter one new token per decode row into its physical block.
+
+    ``block_tables``: (B, max_blocks) int32 physical block ids; ``cache_pos``:
+    (B,) absolute write positions. Rows with an unallocated page (table entry
+    -1, e.g. vacant slots) are clamped to the trash block 0.
+    """
+    bs = next(iter(cache.values())).shape[1]
+    B = block_tables.shape[0]
+    cp = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (B,))
+    page = jnp.take_along_axis(block_tables, (cp // bs)[:, None], axis=1)[:, 0]
+    page = jnp.maximum(page, 0)              # -1 (vacant/unallocated) -> trash
+    off = cp % bs
+    new = dict(cache)
+    for name, t in tensors.items():
+        new[name] = cache[name].at[page, off].set(t[:, 0].astype(cache[name].dtype))
+    return new
+
+
+def paged_gather(cache: dict, block_tables: jax.Array, dtype) -> tuple:
+    """Gather each row's blocks into logical order: (B, S, ...) tensors plus
+    the (B, S) logical key positions (S = max_blocks * block_size). Entries
+    beyond a row's written length read stale/trash data; they sit at logical
+    positions > the row's query position, so the causal mask removes them."""
+    bs = next(iter(cache.values())).shape[1]
+    B, nb = block_tables.shape
+    bt = jnp.maximum(block_tables, 0)
+    out = {name: jnp.take(arr, bt, axis=0)
+           .reshape(B, nb * bs, *arr.shape[2:]).astype(dtype)
+           for name, arr in cache.items()}
+    kp = jnp.broadcast_to(jnp.arange(nb * bs, dtype=jnp.int32)[None], (B, nb * bs))
+    return out, kp
 
 
 def _split_heads(x: jax.Array, n: int, d: int) -> jax.Array:
@@ -244,12 +311,16 @@ def attention(p: dict, ctx: QuantContext, scope: str, cfg: AttnConfig,
               kv_valid: Optional[jax.Array] = None,
               cache: Optional[dict] = None,
               cache_pos: Optional[jax.Array] = None,
+              block_tables: Optional[jax.Array] = None,
               window: Union[None, int, jax.Array] = "cfg",
               cross: bool = False):
     """Returns (y, new_cache).
 
     * self-attention:  default. K/V come from ``x`` and are written into
       ``cache`` when given (prefill: cache_pos None; decode: scalar pos).
+    * paged decode: ``block_tables`` given with a block-major ``cache`` —
+      the new token is scattered into its row's page and K/V are gathered
+      back into logical order before the (identical) attention math.
     * cross-attention: ``cross=True``; K/V from ``kv_x`` (encoder output) or
       from a pre-computed ``cache`` {"k","v"}; bidirectional, no RoPE.
     * ``window``: "cfg" -> use cfg.window; else override (may be traced).
@@ -290,7 +361,13 @@ def attention(p: dict, ctx: QuantContext, scope: str, cfg: AttnConfig,
             sin, cos = rope_table(positions, D, cfg.rope_theta)
             q = apply_rope(q, sin, cos)
             k = apply_rope(k, sin, cos)
-        if cache is not None:
+        if cache is not None and block_tables is not None:
+            assert cache_pos is not None, "paged attention is decode-only"
+            new_cache = paged_write(cache, {"k": k, "v": v}, block_tables,
+                                    cache_pos)
+            g, kp = paged_gather(new_cache, block_tables, x.dtype)
+            k, v = g["k"], g["v"]
+        elif cache is not None:
             new_cache = _cache_write(cache, {"k": k, "v": v}, positions, cache_pos)
             if cache_pos is not None:
                 # decode: attend over the ring buffer (upcast fp8 caches)
@@ -412,10 +489,22 @@ def mla_cache_spec(cfg: MLAConfig, batch: int, max_len: int,
     }
 
 
+def mla_page_spec(cfg: MLAConfig, n_blocks: int, block_size: int,
+                  dtype=jnp.bfloat16) -> dict:
+    """Paged latent KV storage (see :func:`kv_page_spec` for semantics)."""
+    return {
+        "ckv": ParamSpec((n_blocks, block_size, cfg.kv_lora_rank),
+                         (None, None, "kv_lora"), dtype, "zeros"),
+        "kr": ParamSpec((n_blocks, block_size, cfg.qk_rope_dim),
+                        (None, None, None), dtype, "zeros"),
+    }
+
+
 def mla_attention(p: dict, ctx: QuantContext, scope: str, cfg: MLAConfig,
                   x: jax.Array, positions: jax.Array, *,
                   cache: Optional[dict] = None,
-                  cache_pos: Optional[jax.Array] = None):
+                  cache_pos: Optional[jax.Array] = None,
+                  block_tables: Optional[jax.Array] = None):
     """MLA; latent KV cache {"ckv","kr","pos"}; returns (y, new_cache)."""
     B, T, _ = x.shape
     H = cfg.n_heads
@@ -436,7 +525,16 @@ def mla_attention(p: dict, ctx: QuantContext, scope: str, cfg: MLAConfig,
     kr = apply_rope(kr[:, :, None, :], sin, cos)[:, :, 0, :]
 
     new_cache = cache
-    if cache is not None:
+    if cache is not None and block_tables is not None:
+        assert cache_pos is not None, "paged MLA is decode-only"
+        new_cache = paged_write(cache, {"ckv": ckv, "kr": kr}, block_tables,
+                                cache_pos)
+        g, kp = paged_gather(new_cache, block_tables, x.dtype)
+        ckv, kr = g["ckv"], g["kr"]
+        if cfg.absorb_decode:
+            return _mla_decode_absorbed(p, ctx, scope, cfg, qn, qr, ckv,
+                                        kr, positions, kp, new_cache)
+    elif cache is not None:
         new_cache = _cache_write(cache, {"ckv": ckv, "kr": kr}, positions,
                                  cache_pos)
         if cache_pos is not None:

@@ -1,23 +1,61 @@
-"""Slot-based KV/SSM cache pool for continuous batching.
+"""KV/SSM cache pools for continuous batching: dense slots and paged blocks.
 
-The pool owns one device cache tree whose leading (batch) axis is the slot
-axis: ``n_slots`` independent sequences decode together in a single compiled
-step. A freshly prefilled single-request cache (batch=1) is scattered into a
-slot with one jitted ``dynamic_update_slice`` per leaf; because the insert
-overwrites the *entire* slot row — including the ring-buffer ``pos`` entries
-that gate the attention mask — stale K/V from the slot's previous occupant
-can never leak into a new request.
+:class:`CachePool` (dense) owns one device cache tree whose leading (batch)
+axis is the slot axis: ``n_slots`` independent sequences decode together in a
+single compiled step, each slot a monolithic ``max_len`` ring. HBM scales
+with ``n_slots * max_len`` regardless of live tokens.
 
-Slot allocation is a plain free list on the host; all device traffic goes
-through :meth:`insert`. The ``slot`` index is a traced argument, so inserts
-at different slots reuse one compiled scatter.
+:class:`PagedCachePool` (vLLM-style) replaces the per-slot rings with a
+shared store of fixed-size blocks: attention K/V lives in block-major arrays
+``(n_blocks, block_size, ...)``, each slot maps its logical pages to physical
+blocks through a host-side block table, and blocks are allocated on demand as
+decode crosses block boundaries — HBM scales with *live tokens*, so an MP
+plan's fp8 ``kv_cache_dtype`` savings buy proportionally more concurrent
+slots. Admission reserves a request's worst-case block count (prompt +
+``max_new_tokens - 1`` writes), which makes mid-decode allocation infallible
+while materializing blocks lazily; :meth:`can_admit` returning False is the
+scheduler's backpressure signal. Physical block 0 is never allocated: it is
+the trash block that absorbs writes from vacant decode rows (block-table
+entries of -1 clamp to 0 inside the kernel). SSM state has no sequence axis
+and stays slot-major.
+
+All allocation is host-side free lists; device traffic goes through
+:meth:`insert` (one jitted scatter, traced over slot/block ids).
 """
 from __future__ import annotations
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["CachePool"]
+__all__ = ["CachePool", "PagedCachePool", "dense_slot_bytes",
+           "paged_block_bytes", "paged_slot_bytes"]
+
+
+def dense_slot_bytes(model, max_len: int) -> int:
+    """HBM bytes one dense cache slot (KV rings + SSM state) pins at
+    ``max_len`` — the dense baseline cost of a slot whether or not it holds
+    live tokens."""
+    from repro.nn.spec import param_bytes
+    return param_bytes(model.cache_specs(1, max_len))
+
+
+def paged_block_bytes(model, block_size: int) -> int:
+    """HBM bytes one KV block adds across all layers (the marginal cost of
+    ``block_size`` live tokens under paging)."""
+    from repro.nn.spec import param_bytes
+    return (param_bytes(model.paged_cache_specs(1, 2, block_size))
+            - param_bytes(model.paged_cache_specs(1, 1, block_size)))
+
+
+def paged_slot_bytes(model, block_size: int) -> int:
+    """HBM bytes one *slot* pins under paging regardless of live tokens:
+    the slot-major leaves (SSM state on mamba/hybrid archs; zero for pure
+    attention). Counted so paged-vs-dense comparisons stay symmetric."""
+    from repro.nn.spec import param_bytes
+    return (param_bytes(model.paged_cache_specs(2, 1, block_size))
+            - param_bytes(model.paged_cache_specs(1, 1, block_size)))
 
 
 @jax.jit
@@ -29,7 +67,14 @@ def _scatter_slot(pool: dict, one: dict, slot: jax.Array) -> dict:
 
 
 class CachePool:
-    """``n_slots`` x ``max_len`` KV/SSM cache slots for one model."""
+    """``n_slots`` x ``max_len`` dense KV/SSM cache slots for one model.
+
+    A freshly prefilled single-request cache (batch=1) is scattered into a
+    slot with one jitted ``dynamic_update_slice`` per leaf; because the
+    insert overwrites the *entire* slot row — including the ring-buffer
+    ``pos`` entries that gate the attention mask — stale K/V from the slot's
+    previous occupant can never leak into a new request.
+    """
 
     def __init__(self, model, n_slots: int, max_len: int):
         assert n_slots >= 1 and max_len >= 1, (n_slots, max_len)
@@ -43,6 +88,11 @@ class CachePool:
     def n_free(self) -> int:
         return len(self._free)
 
+    # uniform pool interface (shared with PagedCachePool)
+    @property
+    def n_free_slots(self) -> int:
+        return len(self._free)
+
     def alloc(self) -> int:
         """Claim a free slot index; raises RuntimeError when the pool is full."""
         if not self._free:
@@ -53,8 +103,140 @@ class CachePool:
         assert 0 <= slot < self.n_slots and slot not in self._free, slot
         self._free.append(slot)
 
+    def free_slot(self, slot: int) -> None:
+        self.free(slot)
+
     # ---- device-side slot contents ----
     def insert(self, slot: int, request_cache: dict) -> None:
         """Scatter a batch=1 cache tree into ``slot`` (overwrites the row)."""
         self.caches = _scatter_slot(self.caches, request_cache,
                                     jnp.asarray(slot, jnp.int32))
+
+
+class PagedCachePool:
+    """Paged KV storage: ``n_blocks`` blocks of ``block_size`` tokens shared
+    by ``n_slots`` decode rows through per-slot block tables.
+
+    Invariants the attention kernel relies on (see ``nn/layers.py``):
+
+    * a block is owned by at most one slot at a time (block 0 by nobody — it
+      is the trash sink for vacant rows);
+    * a slot's pages are allocated in logical order and written contiguously,
+      so every logical position <= the slot's current write position holds
+      that slot's own fresh data and the causal mask alone separates live
+      keys from stale block contents — freed blocks need no device-side
+      scrubbing before reuse.
+
+    Admission accounting: :meth:`alloc_slot` *reserves* the request's
+    worst-case block count without materializing it; :meth:`ensure_block`
+    then draws on the reservation as decode crosses block boundaries.
+    ``can_admit`` is False while free-minus-reserved can't cover a new
+    request — the backpressure signal the scheduler turns into head-of-line
+    queueing.
+    """
+
+    def __init__(self, model, n_slots: int, max_len: int,
+                 block_size: int = 16, n_blocks=None):
+        assert n_slots >= 1 and max_len >= 1 and block_size >= 1
+        self.model = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.block_size = block_size
+        self.max_blocks = -(-max_len // block_size)     # table width per slot
+        if n_blocks is None:
+            # worst case: every slot decodes to max_len (same HBM as dense,
+            # modulo block rounding); size it tighter to realize the win
+            n_blocks = 1 + n_slots * self.max_blocks
+        assert n_blocks >= 2, "need at least the trash block plus one"
+        self.n_blocks = n_blocks
+        self.caches = model.init_paged_cache(n_slots, n_blocks, block_size)
+        self._insert_fn = jax.jit(model.paged_insert)
+        self._free_blocks = list(range(n_blocks - 1, 0, -1))  # 0 = trash
+        self._free_slots = list(range(n_slots - 1, -1, -1))
+        self._reserved = 0                  # promised, not yet materialized
+        self._slot_reserve: dict = {}       # slot -> outstanding reservation
+        self._slot_blocks: dict = {}        # slot -> [owned block ids]
+        self.block_tables = np.full((n_slots, self.max_blocks), -1, np.int32)
+
+    # ---- budget / accounting ----
+    @property
+    def n_free_slots(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def n_free_blocks(self) -> int:
+        return len(self._free_blocks)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return (self.n_blocks - 1) - len(self._free_blocks)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return max(-(-n_tokens // self.block_size), 1)
+
+    def blocks_for_request(self, prompt_len: int, max_new_tokens: int) -> int:
+        """Worst-case blocks a request can touch: the prompt plus one KV
+        write per decode step (the last generated token is never written)."""
+        return self.blocks_for(prompt_len + max(max_new_tokens - 1, 0))
+
+    def can_admit(self, prompt_len: int, max_new_tokens: int) -> bool:
+        need = self.blocks_for_request(prompt_len, max_new_tokens)
+        return (bool(self._free_slots)
+                and need <= len(self._free_blocks) - self._reserved)
+
+    # ---- slot lifecycle ----
+    def alloc_slot(self, prompt_len: int, max_new_tokens: int) -> int:
+        """Claim a slot and reserve the request's worst-case block budget."""
+        need = self.blocks_for_request(prompt_len, max_new_tokens)
+        if need > self.n_blocks - 1:
+            raise ValueError(
+                f"request needs {need} blocks but the pool only has "
+                f"{self.n_blocks - 1} allocatable blocks")
+        if not self.can_admit(prompt_len, max_new_tokens):
+            raise RuntimeError("paged cache pool exhausted")
+        slot = self._free_slots.pop()
+        self._reserved += need
+        self._slot_reserve[slot] = need
+        self._slot_blocks[slot] = []
+        return slot
+
+    def free_slot(self, slot: int) -> None:
+        """Return the slot, its blocks, and any unused reservation."""
+        assert slot not in self._free_slots, slot
+        self._free_blocks.extend(reversed(self._slot_blocks.pop(slot, [])))
+        self._reserved -= self._slot_reserve.pop(slot, 0)
+        self.block_tables[slot] = -1
+        self._free_slots.append(slot)
+
+    def _alloc_block(self, slot: int) -> int:
+        if not self._free_blocks:
+            raise RuntimeError("paged cache pool out of blocks")
+        blk = self._free_blocks.pop()
+        if self._slot_reserve.get(slot, 0) > 0:
+            self._slot_reserve[slot] -= 1
+            self._reserved -= 1
+        self._slot_blocks[slot].append(blk)
+        return blk
+
+    def ensure_block(self, slot: int, pos: int) -> None:
+        """Alloc-on-demand: materialize the page for write position ``pos``
+        when decode crosses a block boundary. Covered by the admission-time
+        reservation, so it cannot fail for an admitted request."""
+        page, off = divmod(int(pos), self.block_size)
+        if off == 0 and self.block_tables[slot, page] < 0:
+            self.block_tables[slot, page] = self._alloc_block(slot)
+
+    # ---- device-side contents ----
+    def insert(self, slot: int, request_cache: dict, prompt_len: int) -> None:
+        """Allocate the prompt's blocks and scatter a batch=1 dense prefill
+        cache into them (the prefill cache must be sized to exactly
+        ``blocks_for(prompt_len) * block_size``)."""
+        nb = self.blocks_for(prompt_len)
+        ids = [self._alloc_block(slot) for _ in range(nb)]
+        self.block_tables[slot, :nb] = ids
+        self.caches = self._insert_fn(self.caches, request_cache,
+                                      jnp.asarray(ids, jnp.int32),
+                                      jnp.asarray(slot, jnp.int32))
+
+    def block_tables_device(self) -> jax.Array:
+        return jnp.asarray(self.block_tables)

@@ -14,6 +14,15 @@ IP-solver artifact is directly servable.
   advances every occupied slot at its own sequence depth (per-slot position
   vectors). Greedy tokens are identical to the one-shot path — batching is
   across independent cache rows, never across a sequence's own math.
+
+Continuous serving defaults to the **paged** KV layout (``paged=True``):
+attention caches are block-major (``PagedCachePool``), admission is
+block-budget-aware (a request only enters when its worst-case block need is
+coverable — otherwise it queues, the backpressure path), and the compiled
+decode step takes the per-slot block tables. ``paged=False`` keeps the dense
+per-slot rings for comparison. Token parity with the dense/one-shot path is
+exact either way: the paged gather reproduces the dense key layout in
+logical order, and the causal mask hides everything else.
 """
 from __future__ import annotations
 
@@ -26,9 +35,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.mpconfig import as_assignment
-from repro.launch.steps import make_decode_step, make_prefill_step
-from repro.models.encdec import EncDec
-from repro.serve.cache_pool import CachePool
+from repro.launch.steps import (make_decode_step, make_paged_decode_step,
+                                make_prefill_step)
+from repro.serve.cache_pool import (CachePool, PagedCachePool,
+                                    dense_slot_bytes, paged_block_bytes,
+                                    paged_slot_bytes)
 from repro.serve.scheduler import Request, Scheduler
 
 __all__ = ["ServeEngine", "ContinuousBatchingEngine", "GenResult",
@@ -45,12 +56,20 @@ class GenResult:
 
 @dataclasses.dataclass
 class ServeSummary:
-    """Outcome of draining a request queue through the continuous engine."""
+    """Outcome of draining a request queue through the continuous engine.
+
+    ``counters`` carries the occupancy/backpressure signals a future
+    SLA-aware re-solve hook needs (ROADMAP): peak queue depth, blocked
+    admissions, peak live tokens, and — under paging — block occupancy and
+    the KV HBM actually pinned (``peak_kv_bytes``) vs the dense-slot cost
+    (``dense_kv_bytes``).
+    """
     results: dict                     # rid -> RequestResult
     n_steps: int                      # decode steps executed
     decode_s: float                   # wall time inside decode steps
     total_s: float                    # wall time of the whole drain
     tokens_per_s: float               # decode-produced tokens / decode_s
+    counters: dict = dataclasses.field(default_factory=dict)
 
     def tokens_for(self, rid: int) -> np.ndarray:
         return self.results[rid].tokens
@@ -71,7 +90,10 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def init_caches(self, batch: int, max_len: int, enc_len: int = 0):
-        if isinstance(self.model, EncDec):
+        # explicit capability check: enc-dec models declare that their cache
+        # needs the encoder length (for pre-computed cross-attention K/V)
+        # instead of the engine relying on call-arity coincidence
+        if getattr(self.model, "cache_needs_enc_len", False):
             return self.model.init_cache(batch, max_len, enc_len)
         return self.model.init_cache(batch, max_len)
 
@@ -135,54 +157,95 @@ class ContinuousBatchingEngine:
        slot, which the next tick's admission phase can immediately reuse.
 
     Vacant slots decode garbage rows; their outputs are ignored and their
-    cache rows are fully overwritten at the next insert, so they cost FLOPs
-    but never correctness. Prefill compiles once per distinct prompt length
-    (bucket prompts upstream if that matters).
+    cache rows (dense) are fully overwritten at the next insert — or their
+    writes land in the paged pool's trash block — so they cost FLOPs but
+    never correctness. Prefill compiles once per distinct prompt length in
+    both layouts (the token operand's shape is per-length even though the
+    paged prefill cache is block-rounded) — bucket prompts upstream if that
+    matters.
     """
 
     def __init__(self, model, n_slots: int = 4, max_len: int = 512,
-                 mp=None, donate: bool = False):
-        if isinstance(model, EncDec):
+                 mp=None, donate: bool = False, paged: bool = True,
+                 block_size: int = 16, n_blocks: Optional[int] = None):
+        if getattr(model, "cache_needs_enc_len", False):
             raise NotImplementedError(
                 "continuous batching currently serves decoder-only LMs")
         self.model = model
         self.n_slots = n_slots
         self.max_len = max_len
         self.mp = as_assignment(mp)
+        if not paged and n_blocks is not None:
+            raise ValueError("n_blocks only applies to paged mode; drop it "
+                             "or remove paged=False")
+        self.paged = paged
+        self.block_size = block_size
+        self.n_blocks = n_blocks
         d = (1,) if donate else ()
         self.prefill_step = jax.jit(make_prefill_step(model, mp=self.mp))
-        self.decode_step = jax.jit(make_decode_step(model, mp=self.mp),
-                                   donate_argnums=d)
+        mk = make_paged_decode_step if paged else make_decode_step
+        self.decode_step = jax.jit(mk(model, mp=self.mp), donate_argnums=d)
 
     # ------------------------------------------------------------------
-    def _admit(self, params, pool: CachePool, sched: Scheduler,
+    def _make_pool(self):
+        if self.paged:
+            return PagedCachePool(self.model, self.n_slots, self.max_len,
+                                  block_size=self.block_size,
+                                  n_blocks=self.n_blocks)
+        return CachePool(self.model, self.n_slots, self.max_len)
+
+    def _admit(self, params, pool, sched: Scheduler,
                results: dict, now: int) -> None:
-        while pool.n_free:
-            st = sched.pop_admissible(now)
+        gate = None
+        if self.paged:
+            def gate(r):
+                need = pool.blocks_for_request(r.prompt_len, r.max_new_tokens)
+                if need > pool.n_blocks - 1:
+                    # would block the queue forever — fail fast instead
+                    raise ValueError(
+                        f"request {r.rid} needs {need} KV blocks but the "
+                        f"pool has only {pool.n_blocks - 1}; raise "
+                        f"--n-blocks or shrink the request")
+                return pool.can_admit(r.prompt_len, r.max_new_tokens)
+        while pool.n_free_slots:
+            st = sched.pop_admissible(now, gate)
             if st is None:
                 return
             req = st.request
             assert req.prompt_len + req.max_new_tokens <= self.max_len, (
                 f"request {req.rid}: {req.prompt_len}+{req.max_new_tokens} "
                 f"exceeds pool max_len {self.max_len}")
-            slot = pool.alloc()
             tokens = jnp.asarray(np.asarray(req.tokens, np.int32))[None]
-            cache1 = self.model.init_cache(1, self.max_len)
+            if self.paged:
+                slot = pool.alloc_slot(req.prompt_len, req.max_new_tokens)
+                # prefill into a dense batch=1 cache sized to the prompt's
+                # block span, then scatter it into freshly allocated blocks;
+                # ring_window=False keeps full-width K/V rows so the block
+                # reshape is exact even when the prompt exceeds a sliding
+                # window (the window is enforced by the mask either way)
+                plen = pool.blocks_for(req.prompt_len) * pool.block_size
+                cache1 = self.model.init_cache(1, plen, ring_window=False)
+            else:
+                slot = pool.alloc()
+                cache1 = self.model.init_cache(1, self.max_len)
             t0 = time.perf_counter()
             logits, cache1 = self.prefill_step(params, cache1,
                                                {"tokens": tokens})
             jax.block_until_ready(logits)
             ttft = time.perf_counter() - t0
-            pool.insert(slot, cache1)
+            if self.paged:
+                pool.insert(slot, cache1, req.prompt_len)
+            else:
+                pool.insert(slot, cache1)
             first = int(jnp.argmax(logits[0, -1]))
             sched.start(st, slot, first, ttft, now)
             if st.done:                      # max_new_tokens == 1
                 results[req.rid] = sched.finish(st, now)
-                pool.free(slot)
+                pool.free_slot(slot)
 
     def serve(self, params, requests: Sequence[Request]) -> ServeSummary:
         """Drain ``requests`` (any arrival order) and return all results."""
-        pool = CachePool(self.model, self.n_slots, self.max_len)
+        pool = self._make_pool()
         sched = Scheduler()
         for r in sorted(requests, key=lambda r: (r.arrival, r.rid)):
             sched.submit(r)
@@ -193,19 +256,35 @@ class ContinuousBatchingEngine:
         now = 0
         n_steps = 0
         decode_s = 0.0
+        peak_queue = peak_live = peak_blocks = peak_slots = 0
         t_start = time.perf_counter()
         while sched.has_work():
             self._admit(params, pool, sched, results, now)
+            peak_queue = max(peak_queue, sched.queue_depth)
             if sched.running:
                 tok_host[:] = 0
                 pos_host[:] = 0
                 for slot, st in sched.running.items():
                     tok_host[slot, 0] = st.last_token
                     pos_host[slot] = st.next_pos
+                    if self.paged:
+                        pool.ensure_block(slot, st.next_pos)
+                # live tokens after this step: everything written so far
+                # (next_pos) plus the write this step performs
+                peak_live = max(peak_live, sum(
+                    st.next_pos + 1 for st in sched.running.values()))
+                peak_slots = max(peak_slots, len(sched.running))
+                if self.paged:
+                    peak_blocks = max(peak_blocks, pool.blocks_in_use)
                 t0 = time.perf_counter()
-                logits, pool.caches = self.decode_step(
-                    params, pool.caches, jnp.asarray(tok_host),
-                    jnp.asarray(pos_host))
+                if self.paged:
+                    logits, pool.caches = self.decode_step(
+                        params, pool.caches, jnp.asarray(tok_host),
+                        jnp.asarray(pos_host), pool.block_tables_device())
+                else:
+                    logits, pool.caches = self.decode_step(
+                        params, pool.caches, jnp.asarray(tok_host),
+                        jnp.asarray(pos_host))
                 nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
                 decode_s += time.perf_counter() - t0
                 n_steps += 1
@@ -213,7 +292,7 @@ class ContinuousBatchingEngine:
                     st = sched.record_token(slot, int(nxt[slot]))
                     if st.done:
                         results[st.request.rid] = sched.finish(st, now)
-                        pool.free(slot)
+                        pool.free_slot(slot)
                 now += 1
             else:
                 # idle: jump the clock to the next arrival instead of spinning
@@ -223,10 +302,34 @@ class ContinuousBatchingEngine:
                 now = max(now + 1, nxt_arrival)
 
         total_s = time.perf_counter() - t_start
+        counters = {
+            "paged": self.paged,
+            "peak_queue_depth": peak_queue,
+            "blocked_admissions": sched.blocked_admissions,
+            "peak_live_tokens": peak_live,
+            "peak_slots_in_use": peak_slots,
+            "dense_kv_bytes": self.n_slots * dense_slot_bytes(self.model,
+                                                              self.max_len),
+        }
+        if self.paged:
+            blk_bytes = paged_block_bytes(self.model, pool.block_size)
+            # slot-major SSM state is allocated per slot up front in paged
+            # mode too — include it so the dense comparison is symmetric
+            slot_bytes = paged_slot_bytes(self.model, pool.block_size)
+            counters.update(
+                block_size=pool.block_size, n_blocks=pool.n_blocks,
+                peak_blocks_in_use=peak_blocks,
+                free_blocks_final=pool.n_free_blocks,
+                kv_bytes_per_block=blk_bytes,
+                peak_kv_bytes=(peak_blocks * blk_bytes
+                               + self.n_slots * slot_bytes))
+        else:
+            counters["peak_kv_bytes"] = counters["dense_kv_bytes"]
         # throughput over the decode phase only: each request's first token
         # comes out of its prefill, whose wall time is accounted as TTFT
         n_decoded = sum(max(len(r.tokens) - 1, 0) for r in results.values())
         return ServeSummary(results=results, n_steps=n_steps,
                             decode_s=decode_s, total_s=total_s,
                             tokens_per_s=(n_decoded / decode_s
-                                          if decode_s > 0 else 0.0))
+                                          if decode_s > 0 else 0.0),
+                            counters=counters)

@@ -72,6 +72,9 @@ class Scheduler:
         self._queue: deque = deque()           # WAITING states, FCFS
         self.running: dict = {}                # slot -> RequestState
         self.states: dict = {}                 # rid -> RequestState
+        # backpressure signal: times the arrived queue head was held back by
+        # the engine's resource gate (e.g. not enough free KV blocks)
+        self.blocked_admissions = 0
 
     def submit(self, req: Request) -> RequestState:
         assert req.rid not in self.states, f"duplicate rid {req.rid}"
@@ -88,10 +91,20 @@ class Scheduler:
         """Earliest arrival among waiting requests (None if queue empty)."""
         return min((st.request.arrival for st in self._queue), default=None)
 
-    def pop_admissible(self, now: int) -> Optional[RequestState]:
-        """FCFS: the head of the queue, iff it has arrived by ``now``."""
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    def pop_admissible(self, now: int, can_admit=None) -> Optional[RequestState]:
+        """FCFS: the head of the queue, iff it has arrived by ``now`` and the
+        resource gate accepts it. ``can_admit(request) -> bool`` is the
+        engine's admission predicate (e.g. enough free KV blocks); a gated
+        head blocks the whole queue — no skip-ahead — and that head-of-line
+        wait is counted in ``blocked_admissions``."""
         if self._queue and self._queue[0].request.arrival <= now:
-            return self._queue.popleft()
+            if can_admit is None or can_admit(self._queue[0].request):
+                return self._queue.popleft()
+            self.blocked_admissions += 1
         return None
 
     def start(self, st: RequestState, slot: int, first_token: int,
