@@ -4,9 +4,14 @@ one-shot baseline under a mixed (staggered) request arrival pattern.
 Emits (via common.emit) tokens/s and per-request TTFT for both engines, with
 and without the IP-solved MP plan — plus the KV-cache memory economics the
 paged refactor exists for: peak block occupancy and KV HBM bytes per live
-token, paged vs the dense-slot baseline at the same batch pressure. The run
-fails if paged bytes/live-token is not strictly below dense, or if any
-engine pair disagrees on greedy tokens.
+token, paged vs the dense-slot baseline at the same batch pressure, and the
+chunked/bucketed prefill economics: compiled prefill programs (buckets) vs
+distinct prompt lengths, and the p50/p99 decode-step stall injected while a
+deliberately long prompt prefills in chunks. The run fails if paged
+bytes/live-token is not strictly below dense, if bucketing does not cut
+prefill compilations by at least 2x on the mixed-length stream, if the
+decode stall exceeds the chunk budget, or if any engine pair disagrees on
+greedy tokens.
 
 The one-shot baseline must wait for the whole batch to arrive before
 prefilling (batch-formation latency), so its effective TTFT for early
@@ -137,6 +142,71 @@ def main():
             raise SystemExit(
                 f"paging regression ({tag}): paged KV bytes/live-token "
                 f"{bpl['paged']:.1f} not below dense {bpl['dense']:.1f}")
+
+    chunked_prefill_economics(model, params, data, args)
+
+
+def chunked_prefill_economics(model, params, data, args):
+    """Mixed-length stream + one deliberately long prompt through chunked
+    prefill: compile economy (buckets vs distinct lengths) and the decode
+    stall the chunk arbitration bounds."""
+    chunk_len = max(args.prompt_len // 2, 8)
+    lens = [max(args.prompt_len - (i % max(args.requests - 1, 1)), 1)
+            for i in range(args.requests)]
+    # the long prompt, clamped to what the synthetic stream can supply
+    stream_len = int(data.batch_at(70_000)["tokens"].shape[1])
+    lens[0] = min(2 * args.prompt_len, stream_len)
+    reqs = [Request(rid=i,
+                    tokens=np.asarray(
+                        data.batch_at(70_000 + i)["tokens"][0, :lens[i]],
+                        np.int32),
+                    max_new_tokens=args.new_tokens,
+                    arrival=i * args.arrival_every)
+            for i in range(args.requests)]
+    for r, n in zip(reqs, lens):
+        assert r.prompt_len == n, (r.prompt_len, n)   # no silent truncation
+    max_len = max(lens) + args.new_tokens
+    eng = ContinuousBatchingEngine(model, n_slots=args.n_slots,
+                                   max_len=max_len, paged=True,
+                                   block_size=args.block_size,
+                                   chunk_len=chunk_len, chunk_budget=1)
+    eng.serve(params, [reqs[0]])                # warmup (compile)
+    out = eng.serve(params, reqs)
+    c = out.counters
+    emit("serve_chunked_prefill_chunks", c["prefill_chunks"],
+         f"chunk_len {chunk_len}, long prompt {lens[0]} tokens")
+    emit("serve_chunked_decode_stall_p50_us",
+         c.get("decode_stall_p50_s", 0.0) * 1e6,
+         "prefill time injected between decode steps (median)")
+    emit("serve_chunked_decode_stall_p99_us",
+         c.get("decode_stall_p99_s", 0.0) * 1e6,
+         f"longest stall run {c['max_decode_stall_run']} chunk steps "
+         f"(budget 1)")
+    emit("serve_prefill_compile_buckets", c["prefill_buckets"],
+         f"vs {c['distinct_prompt_lens']} distinct prompt lengths")
+    # parity guard: chunked + bucketed prefill must not change tokens
+    ref = ServeEngine(model, donate=False)
+    for r in reqs:
+        want = np.asarray(ref.generate(
+            params, {"tokens": jnp.asarray(r.tokens)[None]},
+            max_new_tokens=args.new_tokens).tokens)[0]
+        if not np.array_equal(out.results[r.rid].tokens, want):
+            raise SystemExit(
+                f"token-parity violation (chunked): rid {r.rid} diverged "
+                f"from the one-shot reference")
+    # acceptance: >= 2x fewer prefill compilations than distinct lengths
+    # (only meaningful when the stream actually mixes lengths), and the
+    # decode stall stays within the chunk budget
+    if c["distinct_prompt_lens"] >= 4 \
+            and 2 * c["prefill_buckets"] > c["distinct_prompt_lens"]:
+        raise SystemExit(
+            f"bucketing regression: {c['prefill_buckets']} compiled prefill "
+            f"buckets for only {c['distinct_prompt_lens']} distinct lengths "
+            f"(need >= 2x fewer)")
+    if c["max_decode_stall_run"] > 1:
+        raise SystemExit(
+            f"stall regression: a decode slot waited "
+            f"{c['max_decode_stall_run']} chunk steps (budget 1)")
 
 
 if __name__ == "__main__":

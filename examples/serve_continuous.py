@@ -5,7 +5,8 @@ monolithic rings).
 
     PYTHONPATH=src python examples/serve_continuous.py \
         [--tau 0.01] [--n-slots 4] [--requests 8] [--new-tokens 12] \
-        [--block-size 8] [--n-blocks 24] [--no-mp]
+        [--block-size 8] [--n-blocks 24] [--no-mp] \
+        [--chunk-len 16 --chunk-budget 1 --long-prompt-len 96]
 
 Pipeline shown here (the full plan->engine handoff):
   1. ``CalibrationBundle.solve`` runs the IP (here from the shared benchmark
@@ -14,11 +15,16 @@ Pipeline shown here (the full plan->engine handoff):
      prefill/decode steps from the plan (``core.mpconfig.as_assignment``);
   3. requests with different prompts/arrival times share one decode batch,
      each cache slot advancing at its own sequence depth, KV blocks
-     allocated as each sequence crosses a block boundary.
+     allocated as each prefill chunk lands / each sequence crosses a block
+     boundary. Prefill is length-bucketed; ``--chunk-len`` additionally
+     splits long prompts into chunks interleaved with decode steps
+     (``--long-prompt-len`` makes request 0 deliberately long to show the
+     bounded-stall interleave).
 
-Exits non-zero unless every request completes AND the continuous engine's
-greedy tokens exactly match the one-shot reference — the contract the CI
-serve-smoke job enforces.
+Exits non-zero unless every request completes, the continuous engine's
+greedy tokens exactly match the one-shot reference, AND — when chunking is
+on — no decode slot ever stalled more than ``--chunk-budget`` chunk steps.
+This is the contract the CI serve-smoke job enforces.
 """
 import argparse
 
@@ -39,6 +45,14 @@ def main():
     ap.add_argument("--arrival-every", type=int, default=2)
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--n-blocks", type=int, default=None)
+    ap.add_argument("--chunk-len", type=int, default=None,
+                    help="split prompts into prefill chunks of this many "
+                         "tokens, interleaved with decode steps (paged only)")
+    ap.add_argument("--chunk-budget", type=int, default=1,
+                    help="max prefill chunk steps between decode steps")
+    ap.add_argument("--long-prompt-len", type=int, default=None,
+                    help="make request 0 this long to demo bounded-stall "
+                         "chunked prefill")
     ap.add_argument("--dense-slots", action="store_true",
                     help="monolithic per-slot rings instead of paged blocks")
     ap.add_argument("--no-mp", action="store_true",
@@ -53,15 +67,17 @@ def main():
         print(f"MP plan quantizes {plan.n_quantized}/{plan.meta['n_ops']} ops\n")
         configs.append(("mp-fp8", plan))
 
+    lens = [args.prompt_len] * args.requests
+    if args.long_prompt_len:
+        lens[0] = args.long_prompt_len
     reqs = [Request(rid=i,
                     tokens=np.asarray(
-                        data.batch_at(50_000 + i)["tokens"][0,
-                                                            :args.prompt_len],
+                        data.batch_at(50_000 + i)["tokens"][0, :lens[i]],
                         np.int32),
                     max_new_tokens=args.new_tokens,
                     arrival=i * args.arrival_every)
             for i in range(args.requests)]
-    max_len = args.prompt_len + args.new_tokens
+    max_len = max(lens) + args.new_tokens
 
     outs = {}
     for tag, mp in configs:
@@ -69,7 +85,9 @@ def main():
                                        max_len=max_len, mp=mp,
                                        paged=not args.dense_slots,
                                        block_size=args.block_size,
-                                       n_blocks=args.n_blocks)
+                                       n_blocks=args.n_blocks,
+                                       chunk_len=args.chunk_len,
+                                       chunk_budget=args.chunk_budget)
         eng.serve(params, [reqs[0]])          # warmup (compile)
         out = eng.serve(params, reqs)
         outs[tag] = out
@@ -84,22 +102,41 @@ def main():
                   f"{c['block_size']}), peak KV {c['peak_kv_bytes']/1e6:.2f} "
                   f"MB vs dense-slot {c['dense_kv_bytes']/1e6:.2f} MB, "
                   f"{c['blocked_admissions']} blocked admissions")
+        print(f"{'':8s} prefill: {c['prefill_chunks']} chunk steps over "
+              f"{c['prefill_buckets']} compile buckets "
+              f"({c['distinct_prompt_lens']} distinct prompt lengths); "
+              f"decode stalls: {c['decode_stall_steps']} chunk steps "
+              f"mid-decode, longest run {c['max_decode_stall_run']}")
 
         # contract checks: completion + exact greedy parity vs one-shot
-        # (prompts share a length, so one batched generate covers all rids)
         missing = [r.rid for r in reqs if r.rid not in out.results]
         if missing:
             raise SystemExit(f"{tag}: requests never completed: {missing}")
+        # one batched generate per distinct prompt length (usually one
+        # group, plus the --long-prompt-len outlier)
         ref_eng = ServeEngine(model, mp=mp, donate=False)
-        ref = ref_eng.generate(
-            params, {"tokens": jnp.asarray(np.stack([r.tokens for r in reqs]))},
-            max_new_tokens=args.new_tokens)
-        ref_toks = np.asarray(ref.tokens)
-        for j, r in enumerate(reqs):
-            if not np.array_equal(out.results[r.rid].tokens, ref_toks[j]):
-                raise SystemExit(
-                    f"{tag}: rid {r.rid} diverged from the one-shot "
-                    f"reference — paged/continuous decode is broken")
+        by_len = {}
+        for r in reqs:
+            by_len.setdefault(len(r.tokens), []).append(r)
+        for group in by_len.values():
+            ref = ref_eng.generate(
+                params,
+                {"tokens": jnp.asarray(np.stack([r.tokens for r in group]))},
+                max_new_tokens=args.new_tokens)
+            ref_toks = np.asarray(ref.tokens)
+            for j, r in enumerate(group):
+                if not np.array_equal(out.results[r.rid].tokens, ref_toks[j]):
+                    raise SystemExit(
+                        f"{tag}: rid {r.rid} diverged from the one-shot "
+                        f"reference — chunked/paged/continuous decode is "
+                        f"broken")
+        # the stall bound the chunk arbitration exists to enforce
+        if args.chunk_len is not None \
+                and c["max_decode_stall_run"] > args.chunk_budget:
+            raise SystemExit(
+                f"{tag}: a decode slot stalled "
+                f"{c['max_decode_stall_run']} chunk steps "
+                f"(> budget {args.chunk_budget})")
         print(f"{'':8s} all {len(reqs)} requests completed, greedy tokens "
               f"== one-shot reference\n")
 

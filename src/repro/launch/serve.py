@@ -106,6 +106,14 @@ def main():
     ap.add_argument("--n-blocks", type=int, default=None,
                     help="paged KV pool size incl. the trash block "
                          "(default: worst case, never backpressures)")
+    ap.add_argument("--chunk-len", type=int, default=None,
+                    help="split prompts into prefill chunks of this many "
+                         "tokens, interleaved with decode steps (continuous "
+                         "paged mode; prompts are length-bucketed either way)")
+    ap.add_argument("--chunk-budget", type=int, default=1,
+                    help="max prefill chunk steps between decode steps "
+                         "(bounds per-request decode stall while a long "
+                         "prompt prefills)")
     ap.add_argument("--dense-slots", action="store_true",
                     help="use monolithic per-slot rings instead of paged "
                          "KV blocks (continuous mode)")
@@ -145,7 +153,9 @@ def main():
                                        max_len=max_len, mp=plan,
                                        paged=not args.dense_slots,
                                        block_size=args.block_size,
-                                       n_blocks=args.n_blocks)
+                                       n_blocks=args.n_blocks,
+                                       chunk_len=args.chunk_len,
+                                       chunk_budget=args.chunk_budget)
         rng = np.random.default_rng(1)
         reqs = [Request(rid=i,
                         tokens=rng.integers(0, model.cfg.vocab_size,
@@ -167,6 +177,11 @@ def main():
                   f"peak | peak KV {c['peak_kv_bytes'] / 1e6:.2f} MB vs dense "
                   f"{c['dense_kv_bytes'] / 1e6:.2f} MB | "
                   f"{c['blocked_admissions']} blocked admissions")
+        print(f"[serve] prefill: {c['prefill_chunks']} chunk steps | "
+              f"{c['prefill_buckets']} compile buckets for "
+              f"{c['distinct_prompt_lens']} prompt lengths | "
+              f"{c['decode_stall_steps']} decode-stall chunk steps "
+              f"(longest run {c['max_decode_stall_run']})")
     else:
         eng = ServeEngine(model, mp=plan, donate=False)
         prompt = {"tokens": jax.random.randint(jax.random.key(1),

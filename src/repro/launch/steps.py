@@ -15,7 +15,8 @@ from repro.quant.qops import QuantContext
 from repro.train import optim
 
 __all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
-           "make_paged_decode_step", "make_eval_step"]
+           "make_paged_decode_step", "make_eval_step",
+           "make_bucketed_prefill_step", "make_chunked_prefill_step"]
 
 
 def _split_micro(batch: dict, n_micro: int) -> dict:
@@ -76,12 +77,13 @@ def make_eval_step(model, mp: Optional[dict] = None):
 
 
 def _serving_ctx(mp) -> QuantContext:
-    """One QuantContext policy for every serving step (prefill, dense and
-    paged decode): per-sequence activation scales so co-batched requests are
-    quantized independently (continuous batching keeps exact greedy parity).
-    Shared so the paged and dense decode twins can never diverge."""
+    """One QuantContext policy for every serving step (prefill — one-shot,
+    bucketed and chunked — plus dense and paged decode): per-*token*
+    activation scales, so greedy tokens depend neither on which requests
+    share the batch, nor on how a prompt is split into prefill chunks, nor
+    on bucket padding. Shared so no two serving steps can ever diverge."""
     mp = as_assignment(mp)
-    return (QuantContext(mode="mp", mp=mp, act_scale_axis=0) if mp
+    return (QuantContext(mode="mp", mp=mp, act_scale_token=True) if mp
             else QuantContext())
 
 
@@ -99,6 +101,42 @@ def make_prefill_step(model, mp: Optional[dict] = None):
         def prefill_step(params, caches, batch):
             return model.prefill(params, batch["tokens"], caches, ctx,
                                  prefix_embeds=batch.get("prefix_embeds"))
+    return prefill_step
+
+
+def make_bucketed_prefill_step(model, mp: Optional[dict] = None):
+    """(params, caches, tokens, start, valid) -> (last-valid logits, caches).
+
+    Dense bucketed prefill: ``tokens`` (B, Lb) is padded to a power-of-two
+    bucket, ``valid`` (B,) counts real tokens per row, ``start`` (B,) is 0
+    for rows being prefilled (nonzero rows pass through untouched). Compiled
+    once per bucket length — shared by the one-shot engine and the dense
+    continuous engine, which both used to compile per distinct prompt length.
+    """
+    ctx = _serving_ctx(mp)
+
+    def prefill_step(params, caches, tokens, start, valid):
+        return model.prefill_chunk(params, tokens, caches, ctx,
+                                   start_pos=start, valid_len=valid)
+
+    return prefill_step
+
+
+def make_chunked_prefill_step(model, mp: Optional[dict] = None):
+    """(params, caches, tokens, start, valid, block_tables) -> (logits, caches).
+
+    The paged twin of :func:`make_bucketed_prefill_step`: the chunk's K/V is
+    written straight into the pool's physical blocks (paged prefill) and a
+    prompt longer than the chunk budget resumes at ``start`` on the next
+    call, attending over every earlier chunk through the block tables.
+    """
+    ctx = _serving_ctx(mp)
+
+    def prefill_step(params, caches, tokens, start, valid, block_tables):
+        return model.prefill_chunk(params, tokens, caches, ctx,
+                                   start_pos=start, valid_len=valid,
+                                   block_tables=block_tables)
+
     return prefill_step
 
 

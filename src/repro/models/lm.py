@@ -132,6 +132,7 @@ class LMConfig:
 class LM:
     # serving capability flags (engines dispatch on these, not on isinstance)
     cache_needs_enc_len = False
+    supports_prefill_chunk = True        # bucketed/chunked prefill available
 
     def __init__(self, cfg: LMConfig):
         self.cfg = cfg
@@ -224,45 +225,65 @@ class LM:
                h: jax.Array, positions: jax.Array, *,
                window="cfg", cache: Optional[dict] = None,
                cache_pos=None, decode: bool = False,
-               block_tables: Optional[jax.Array] = None):
+               block_tables: Optional[jax.Array] = None,
+               chunk_valid: Optional[jax.Array] = None,
+               chunk_start: Optional[jax.Array] = None):
         cfg = self.cfg
         block, is_moe = sig
         new_cache = cache
         hn = L.apply_norm(p["attn_norm"], h, cfg.norm)
         aux = jnp.zeros((), jnp.float32)
+        resume = None if chunk_start is None else chunk_start > 0
+        # paged decode: a block-table row of -1 marks a vacant or mid-prefill
+        # slot — its SSM state must pass through the step untouched, exactly
+        # like its K/V writes go to the trash block
+        row_valid = (block_tables[:, 0] >= 0
+                     if decode and block_tables is not None else None)
         if block == "attn":
             y, new_cache = L.attention(p["attn"], ctx, f"{scope}/attn",
                                        cfg.attn_cfg, hn, positions,
                                        cache=cache, cache_pos=cache_pos,
                                        block_tables=block_tables,
+                                       chunk_valid=chunk_valid,
+                                       chunk_start=chunk_start,
                                        window=window)
         elif block == "mla":
             y, new_cache = L.mla_attention(p["attn"], ctx, f"{scope}/attn",
                                            cfg.mla_cfg, hn, positions,
                                            cache=cache, cache_pos=cache_pos,
-                                           block_tables=block_tables)
+                                           block_tables=block_tables,
+                                           chunk_valid=chunk_valid,
+                                           chunk_start=chunk_start)
         elif block == "mamba":
             if decode:
                 y, new_cache = M.apply_mamba_decode(p["mamba"], ctx,
                                                     f"{scope}/mamba", cfg.ssm,
-                                                    hn, cache)
+                                                    hn, cache,
+                                                    row_valid=row_valid)
             else:
                 y, new_cache = M.apply_mamba(p["mamba"], ctx, f"{scope}/mamba",
-                                             cfg.ssm, hn, cache)
+                                             cfg.ssm, hn, cache,
+                                             chunk_valid=chunk_valid,
+                                             resume=resume)
         elif block == "hybrid":
             a_cache = None if cache is None else cache.get("attn")
             m_cache = None if cache is None else cache.get("mamba")
             ya, a_new = L.attention(p["attn"], ctx, f"{scope}/attn",
                                     cfg.attn_cfg, hn, positions,
                                     cache=a_cache, cache_pos=cache_pos,
-                                    block_tables=block_tables, window=window)
+                                    block_tables=block_tables,
+                                    chunk_valid=chunk_valid,
+                                    chunk_start=chunk_start, window=window)
             if decode:
                 ym, m_new = M.apply_mamba_decode(p["mamba"], ctx,
                                                  f"{scope}/mamba", cfg.ssm,
-                                                 hn, m_cache)
+                                                 hn, m_cache,
+                                                 row_valid=row_valid)
             else:
                 ym, m_new = M.apply_mamba(p["mamba"], ctx, f"{scope}/mamba",
-                                          cfg.ssm, hn, m_cache)
+                                          cfg.ssm, hn, m_cache,
+                                          chunk_valid=chunk_valid,
+                                          resume=resume)
             y = 0.5 * (ya + ym)
             if cache is not None:
                 new_cache = {"attn": a_new, "mamba": m_new}
@@ -283,7 +304,9 @@ class LM:
     def _backbone(self, params: dict, ctx: QuantContext, h: jax.Array,
                   positions: jax.Array, *, caches: Optional[dict] = None,
                   cache_pos=None, decode: bool = False,
-                  block_tables: Optional[jax.Array] = None):
+                  block_tables: Optional[jax.Array] = None,
+                  chunk_valid: Optional[jax.Array] = None,
+                  chunk_start: Optional[jax.Array] = None):
         """Run all layers. caches: {"layers/i" or "segments/s": cache pytree}."""
         from repro.distributed.sharding import shard_hint
         cfg = self.cfg
@@ -307,7 +330,8 @@ class LM:
                     h_, c_new, aux_i = self._block(
                         p_i, ctx, f"segments/{s}", sig, h_, positions,
                         window=win_i, cache=cache_i, cache_pos=cache_pos,
-                        decode=decode, block_tables=block_tables)
+                        decode=decode, block_tables=block_tables,
+                        chunk_valid=chunk_valid, chunk_start=chunk_start)
                     return (h_, aux_ + aux_i), c_new
 
                 if cfg.remat:
@@ -353,7 +377,9 @@ class LM:
                                        positions, window=cfg.window_for(i),
                                        cache=cache_i_, cache_pos=cache_pos,
                                        decode=decode,
-                                       block_tables=block_tables)
+                                       block_tables=block_tables,
+                                       chunk_valid=chunk_valid,
+                                       chunk_start=chunk_start)
 
                 if cfg.remat:
                     body = jax.checkpoint(body)
@@ -611,6 +637,47 @@ class LM:
         h, positions = self._embed(params, tokens, prefix_embeds)
         h, caches, _ = self._backbone(params, ctx, h, positions, caches=caches)
         logits = self._head(params, ctx, h[:, -1:])
+        return logits, caches
+
+    def prefill_chunk(self, params: dict, tokens: jax.Array, caches: dict,
+                      ctx: QuantContext, *, start_pos: jax.Array,
+                      valid_len: jax.Array,
+                      block_tables: Optional[jax.Array] = None):
+        """Process one (possibly padded) prompt chunk for every cache row.
+
+        The batched/bucketed twin of :meth:`prefill`: every row of
+        ``tokens`` (B, Lb) is padded to a shared bucket length, so engines
+        compile one program per bucket instead of one per distinct prompt
+        length, and B matches the decode batch so the step is shape-stable.
+
+        * ``start_pos`` (B,): absolute position of ``tokens[:, 0]``. 0 marks
+          a first chunk — it resets the row's ring ``pos`` entries (dense)
+          and SSM state, so slot reuse cannot leak the previous occupant.
+          Engines pass a nonzero start for vacant/decoding rows.
+        * ``valid_len`` (B,): real token count per row; 0 = inactive row
+          (its caches/state pass through bit-unchanged, its writes go to the
+          trash block / are dropped).
+        * ``block_tables`` (B, max_blocks): paged mode — the chunk's K/V is
+          written straight into physical blocks ("paged prefill") and
+          attention runs over the gathered logical layout, so prompts longer
+          than a chunk resume exactly where the previous chunk stopped.
+          None = dense bucketed single-shot prefill into the row's ring.
+
+        Returns (logits (B, 1, V) at each row's last valid position, caches).
+        """
+        B, T = tokens.shape
+        start = jnp.asarray(start_pos, jnp.int32)
+        valid = jnp.asarray(valid_len, jnp.int32)
+        emb = jnp.take(params["embed"]["w"], tokens, axis=0).astype(self.dtype)
+        positions = start[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+        chunk_valid = jnp.arange(T, dtype=jnp.int32)[None] < valid[:, None]
+        h, caches, _ = self._backbone(params, ctx, emb, positions,
+                                      caches=caches, chunk_valid=chunk_valid,
+                                      chunk_start=start,
+                                      block_tables=block_tables)
+        idx = jnp.maximum(valid - 1, 0)          # inactive rows: garbage out
+        h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)
+        logits = self._head(params, ctx, h_last)
         return logits, caches
 
     def decode_step(self, params: dict, token: jax.Array, pos: jax.Array,

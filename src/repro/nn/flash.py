@@ -64,8 +64,10 @@ def flash_attention(ctx: QuantContext, scope: str, q: jax.Array, k: jax.Array,
 
     qk_fmt = _mp_fmt(ctx, f"{scope}/qk_matmul")
     av_fmt = _mp_fmt(ctx, f"{scope}/av_matmul")
-    # q/k/v are activations: honor per-sequence scales (serving contexts)
-    axes = act_quant_axes(ctx, 4)
+    # q/k/v are activations: honor per-sequence / per-token scales (serving
+    # contexts). Token-granular: (B, T, H, D) keeps (B, T), reduces (H, D) —
+    # the same slices qeinsum derives for the reference path's qk operands.
+    axes = (2, 3) if ctx.act_scale_token else act_quant_axes(ctx, 4)
     if qk_fmt is not None:
         q = qtensor.fake_quant(q, qk_fmt, axis=axes)
         k = qtensor.fake_quant(k, qk_fmt, axis=axes)
@@ -124,10 +126,13 @@ def flash_attention(ctx: QuantContext, scope: str, q: jax.Array, k: jax.Array,
             l_new = l * corr + jnp.sum(p, axis=-1)
             pq = p.astype(vv.dtype)
             if av_fmt is not None:
-                # per-sequence scales here too, else co-batched rows couple
-                # through the block-probability amax (batch axis is 0)
-                pq = qtensor.fake_quant(pq, av_fmt,
-                                        axis=act_quant_axes(ctx, pq.ndim))
+                # per-sequence/per-token scales here too, else co-batched
+                # rows couple through the block-probability amax. pq is
+                # (B, Hkv, G, blk_q, blk_k): token-granular keeps (B, blk_q)
+                pq = qtensor.fake_quant(
+                    pq, av_fmt,
+                    axis=((1, 2, 4) if ctx.act_scale_token
+                          else act_quant_axes(ctx, pq.ndim)))
             pv = jnp.einsum("BKGTS,BSKD->BKGTD", pq, vv,
                             preferred_element_type=jnp.float32)
             acc_new = acc * corr[..., None] + pv

@@ -25,7 +25,10 @@ KV cache — two layouts share the attention math:
   logical position <= the query position is fresh by construction and the
   causal mask alone separates live keys from stale block contents. Block 0
   is a trash block (never allocated) that absorbs writes from vacant decode
-  rows, whose block tables are all -1.
+  rows, whose block tables are all -1. Blocks are written one token per
+  decode step (``paged_write``) or a whole prefill chunk at a time
+  (``paged_write_chunk`` — the "paged prefill" path, which also routes
+  bucket-padding writes to the trash block).
 """
 from __future__ import annotations
 
@@ -209,6 +212,29 @@ def kv_page_spec(cfg: AttnConfig, n_blocks: int, block_size: int,
     }
 
 
+def paged_write_chunk(cache: dict, tensors: dict, block_tables: jax.Array,
+                      positions: jax.Array, valid: jax.Array) -> dict:
+    """Scatter a whole prefill chunk into each row's physical blocks (the
+    "paged prefill" path: blocks are written directly, no dense-then-scatter).
+
+    ``positions``: (B, T) absolute positions of the chunk's tokens;
+    ``valid``: (B, T) bool — padded tail entries and vacant rows are routed
+    to the trash block 0, as are positions whose page is unallocated (-1).
+    Valid entries land at unique (page, offset) pairs because the pool owns
+    blocks exclusively and writes them contiguously.
+    """
+    bs = next(iter(cache.values())).shape[1]
+    nb = block_tables.shape[1]
+    page_idx = jnp.clip(positions // bs, 0, nb - 1)
+    page = jnp.take_along_axis(block_tables, page_idx, axis=1)     # (B, T)
+    page = jnp.maximum(jnp.where(valid, page, -1), 0)
+    off = positions % bs
+    new = dict(cache)
+    for name, t in tensors.items():
+        new[name] = cache[name].at[page, off].set(t.astype(cache[name].dtype))
+    return new
+
+
 def paged_write(cache: dict, tensors: dict, block_tables: jax.Array,
                 cache_pos: jax.Array) -> dict:
     """Scatter one new token per decode row into its physical block.
@@ -246,6 +272,44 @@ def paged_gather(cache: dict, block_tables: jax.Array, dtype) -> tuple:
 
 def _split_heads(x: jax.Array, n: int, d: int) -> jax.Array:
     return x.reshape(*x.shape[:-1], n, d)
+
+
+def _cache_roundtrip(t: jax.Array, cache_leaf: jax.Array, dtype) -> jax.Array:
+    """Pass fresh prefill K/V through the cache storage dtype before
+    attending, so prefill attention sees exactly the values every later read
+    of the cache sees (fp8 caches: the first token is computed from
+    fp8-rounded K/V — the invariant that makes chunked prefill, which attends
+    *through* the cache, bit-identical to one-shot prefill)."""
+    if cache_leaf.dtype == t.dtype:
+        return t
+    return t.astype(cache_leaf.dtype).astype(dtype)
+
+
+def _cache_write_chunk(cache: dict, tensors: dict, positions: jax.Array,
+                       valid: jax.Array, start: jax.Array) -> dict:
+    """Masked bucketed-prefill write into the dense ring.
+
+    ``positions``: (B, T) absolute positions (``start[:, None] + arange``);
+    ``valid``: (B, T) bool marking real tokens (padding sits at the tail);
+    ``start``: (B,) — rows with start == 0 get their ``pos`` ring reset to -1
+    first (slot reuse must not leak the previous occupant's keys), rows with
+    no valid entries (co-batched decoding/vacant slots) are left untouched.
+    Ring semantics: only each row's last W valid entries are kept.
+    """
+    B, T = positions.shape
+    W = cache["pos"].shape[1]
+    end = start + jnp.sum(valid, axis=1).astype(jnp.int32)         # (B,)
+    keep = valid & (positions >= (end - W)[:, None])
+    slot = jnp.where(keep, positions % W, W)         # W = out of bounds: drop
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, T))
+    new = dict(cache)
+    pos0 = jnp.where((start == 0)[:, None], -1, cache["pos"])
+    new["pos"] = pos0.at[bidx, slot].set(positions.astype(jnp.int32),
+                                         mode="drop")
+    for name, t in tensors.items():
+        new[name] = cache[name].at[bidx, slot].set(
+            t.astype(cache[name].dtype), mode="drop")
+    return new
 
 
 def _cache_write(cache: dict, tensors: dict, positions: jax.Array,
@@ -312,6 +376,8 @@ def attention(p: dict, ctx: QuantContext, scope: str, cfg: AttnConfig,
               cache: Optional[dict] = None,
               cache_pos: Optional[jax.Array] = None,
               block_tables: Optional[jax.Array] = None,
+              chunk_valid: Optional[jax.Array] = None,
+              chunk_start: Optional[jax.Array] = None,
               window: Union[None, int, jax.Array] = "cfg",
               cross: bool = False):
     """Returns (y, new_cache).
@@ -321,6 +387,13 @@ def attention(p: dict, ctx: QuantContext, scope: str, cfg: AttnConfig,
     * paged decode: ``block_tables`` given with a block-major ``cache`` —
       the new token is scattered into its row's page and K/V are gathered
       back into logical order before the (identical) attention math.
+    * chunked/bucketed prefill: ``chunk_valid`` (B, T) marks real tokens in
+      a padded chunk starting at ``chunk_start`` (B,). Paged: the chunk is
+      written straight into physical blocks and attention runs over the
+      gathered logical layout (so a continuation chunk sees every earlier
+      chunk's keys). Dense: masked ring write + local attention (single-shot
+      bucketed prefill; dense rings cannot serve continuation chunks of a
+      windowed arch, so engines only split prompts in paged mode).
     * cross-attention: ``cross=True``; K/V from ``kv_x`` (encoder output) or
       from a pre-computed ``cache`` {"k","v"}; bidirectional, no RoPE.
     * ``window``: "cfg" -> use cfg.window; else override (may be traced).
@@ -361,7 +434,25 @@ def attention(p: dict, ctx: QuantContext, scope: str, cfg: AttnConfig,
             sin, cos = rope_table(positions, D, cfg.rope_theta)
             q = apply_rope(q, sin, cos)
             k = apply_rope(k, sin, cos)
-        if cache is not None and block_tables is not None:
+        if cache is not None and chunk_valid is not None:
+            if block_tables is not None:
+                # paged prefill chunk: write blocks directly, attend over the
+                # gathered logical layout (continuation sees earlier chunks)
+                new_cache = paged_write_chunk(cache, {"k": k, "v": v},
+                                              block_tables, positions,
+                                              chunk_valid)
+                g, kp = paged_gather(new_cache, block_tables, x.dtype)
+                k, v = g["k"], g["v"]
+            else:
+                # dense bucketed prefill: masked ring write, local attention
+                # over the cache-dtype-rounded fresh K/V (flash-capable)
+                new_cache = _cache_write_chunk(cache, {"k": k, "v": v},
+                                               positions, chunk_valid,
+                                               chunk_start)
+                k = _cache_roundtrip(k, cache["k"], x.dtype)
+                v = _cache_roundtrip(v, cache["v"], x.dtype)
+                kp = positions
+        elif cache is not None and block_tables is not None:
             assert cache_pos is not None, "paged attention is decode-only"
             new_cache = paged_write(cache, {"k": k, "v": v}, block_tables,
                                     cache_pos)
@@ -375,7 +466,10 @@ def attention(p: dict, ctx: QuantContext, scope: str, cfg: AttnConfig,
                 v = new_cache["v"].astype(x.dtype)
                 kp = new_cache["pos"]
             else:
-                # prefill from an empty cache: attend locally (flash-capable)
+                # prefill from an empty cache: attend locally (flash-capable),
+                # through the cache storage dtype (see _cache_roundtrip)
+                k = _cache_roundtrip(k, cache["k"], x.dtype)
+                v = _cache_roundtrip(v, cache["v"], x.dtype)
                 kp = positions
         else:
             kp = positions
@@ -383,8 +477,13 @@ def attention(p: dict, ctx: QuantContext, scope: str, cfg: AttnConfig,
 
     # flash for self-attention prefill/training, and for unmasked
     # cross-attention (encoder-decoder at long frame counts)
+    # chunked/bucketed prefill never flashes: bucket padding must not flip a
+    # prompt across flash_min_seq into a different summation order than its
+    # unpadded reference (engines route bucket >= flash_min_seq prompts to
+    # the legacy per-length prefill instead)
     use_flash = (cache_pos is None and T >= cfg.flash_min_seq
-                 and ctx.mode != "probe"
+                 and ctx.mode != "probe" and block_tables is None
+                 and chunk_valid is None
                  and ((not cross and T == k.shape[1])
                       or (cross and kv_x is not None and kv_valid is None)))
     if use_flash:
@@ -504,8 +603,13 @@ def mla_attention(p: dict, ctx: QuantContext, scope: str, cfg: MLAConfig,
                   x: jax.Array, positions: jax.Array, *,
                   cache: Optional[dict] = None,
                   cache_pos: Optional[jax.Array] = None,
-                  block_tables: Optional[jax.Array] = None):
-    """MLA; latent KV cache {"ckv","kr","pos"}; returns (y, new_cache)."""
+                  block_tables: Optional[jax.Array] = None,
+                  chunk_valid: Optional[jax.Array] = None,
+                  chunk_start: Optional[jax.Array] = None):
+    """MLA; latent KV cache {"ckv","kr","pos"}; returns (y, new_cache).
+    ``chunk_valid``/``chunk_start`` select chunked/bucketed prefill (see
+    :func:`attention`); chunk attention always uses the expanded (non-
+    absorbed) path, matching one-shot prefill."""
     B, T, _ = x.shape
     H = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -525,7 +629,19 @@ def mla_attention(p: dict, ctx: QuantContext, scope: str, cfg: MLAConfig,
     kr = apply_rope(kr[:, :, None, :], sin, cos)[:, :, 0, :]
 
     new_cache = cache
-    if cache is not None and block_tables is not None:
+    if cache is not None and chunk_valid is not None:
+        if block_tables is not None:
+            new_cache = paged_write_chunk(cache, {"ckv": ckv, "kr": kr},
+                                          block_tables, positions, chunk_valid)
+            g, kp = paged_gather(new_cache, block_tables, x.dtype)
+            ckv, kr = g["ckv"], g["kr"]
+        else:
+            new_cache = _cache_write_chunk(cache, {"ckv": ckv, "kr": kr},
+                                           positions, chunk_valid, chunk_start)
+            ckv = _cache_roundtrip(ckv, cache["ckv"], x.dtype)
+            kr = _cache_roundtrip(kr, cache["kr"], x.dtype)
+            kp = positions
+    elif cache is not None and block_tables is not None:
         assert cache_pos is not None, "paged MLA is decode-only"
         new_cache = paged_write(cache, {"ckv": ckv, "kr": kr}, block_tables,
                                 cache_pos)
@@ -545,7 +661,11 @@ def mla_attention(p: dict, ctx: QuantContext, scope: str, cfg: MLAConfig,
                 return _mla_decode_absorbed(p, ctx, scope, cfg, qn, qr, ckv,
                                             kr, positions, kp, new_cache)
         else:
-            kp = positions  # prefill from empty cache: attend locally
+            # prefill from empty cache: attend locally, through the cache
+            # storage dtype (see _cache_roundtrip)
+            ckv = _cache_roundtrip(ckv, cache["ckv"], x.dtype)
+            kr = _cache_roundtrip(kr, cache["kr"], x.dtype)
+            kp = positions
     else:
         kp = positions
 
@@ -565,7 +685,8 @@ def mla_attention(p: dict, ctx: QuantContext, scope: str, cfg: MLAConfig,
     kf = jnp.concatenate([kn, jnp.broadcast_to(kr[:, :, None, :], (B, S, H, dr))],
                          axis=-1)
     kf = shard_hint(kf, ("pod", "data"), None, "model", None)
-    use_flash = (cache_pos is None and T >= cfg.flash_min_seq and T == S)
+    use_flash = (cache_pos is None and T >= cfg.flash_min_seq and T == S
+                 and block_tables is None and chunk_valid is None)
     if use_flash:
         from repro.nn.flash import flash_attention
         y = flash_attention(ctx, scope, qf, kf, v, positions, causal=True,

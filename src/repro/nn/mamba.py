@@ -71,10 +71,16 @@ def _split_proj(cfg: SSMConfig, zxbcdt: jax.Array):
     return z, xbc, dt
 
 
-def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
-    """Depthwise causal conv over time. xbc: (B,T,Cc); w: (k,Cc)."""
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 hist: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv over time. xbc: (B,T,Cc); w: (k,Cc).
+    ``hist``: (B, k-1, Cc) left context from a previous prefill chunk (zeros
+    reproduce the plain zero-padded conv bit-for-bit)."""
     k = w.shape[0]
-    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    if hist is None:
+        pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([hist.astype(xbc.dtype), xbc], axis=1)
     out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
     return jax.nn.silu((out + b).astype(jnp.float32)).astype(xbc.dtype)
 
@@ -149,21 +155,47 @@ def _ssd_chunked(ctx: QuantContext, scope: str, cfg: SSMConfig,
 
 
 def apply_mamba(p: dict, ctx: QuantContext, scope: str, cfg: SSMConfig,
-                x: jax.Array, cache: Optional[dict] = None):
-    """Full-sequence SSD. Returns (y, new_cache)."""
+                x: jax.Array, cache: Optional[dict] = None, *,
+                chunk_valid: Optional[jax.Array] = None,
+                resume: Optional[jax.Array] = None):
+    """Full-sequence SSD. Returns (y, new_cache).
+
+    Chunked/bucketed prefill: ``chunk_valid`` (B, T) marks real tokens in a
+    padded chunk and ``resume`` (B,) selects rows continuing an earlier
+    chunk — those seed the causal conv with the cached (d_conv-1)-token tail
+    and the SSD recurrence with the cached state. Padded positions get
+    dt = 0, which makes them exact identities in the state recurrence (decay
+    exp(0) = 1, contribution 0), so rows with no valid tokens (co-batched
+    decoding slots) pass their state through bit-unchanged. Bit-exact resume
+    additionally needs chunk boundaries aligned to multiples of ``chunk``
+    (the engine enforces chunk_len % cfg.chunk == 0): the SSD decomposition
+    is then identical to the one-shot computation.
+    """
     B, T, _ = x.shape
     H, P, G, N = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
     zxbcdt = qops.linear(ctx, f"{scope}/in_proj", x, p["in_proj"]["w"])
     z, xbc_raw, dt = _split_proj(cfg, zxbcdt)
-    xbc = _causal_conv(xbc_raw, p["conv"]["w"], p["conv"]["b"])
+    hist = None
+    if chunk_valid is not None:
+        assert cache is not None and resume is not None
+        hist = jnp.where(resume[:, None, None],
+                         cache["conv"].astype(xbc_raw.dtype), 0)
+    xbc = _causal_conv(xbc_raw, p["conv"]["w"], p["conv"]["b"], hist=hist)
     xs, B_, C_ = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + G * N], axis=-1)
     xs = xs.reshape(B, T, H, P)
     B_ = B_.reshape(B, T, G, N)
     C_ = C_.reshape(B, T, G, N)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if chunk_valid is not None:
+        dt = jnp.where(chunk_valid[..., None], dt, 0.0)
     A = -jnp.exp(p["A_log"])
 
-    y, state = _ssd_chunked(ctx, scope, cfg, xs, dt, B_, C_, A)
+    init_state = None
+    if chunk_valid is not None:
+        init_state = jnp.where(resume[:, None, None, None],
+                               cache["state"].astype(jnp.float32), 0.0)
+    y, state = _ssd_chunked(ctx, scope, cfg, xs, dt, B_, C_, A,
+                            init_state=init_state)
     y = y + xs * p["D"][:, None].astype(x.dtype)
     y = y.reshape(B, T, cfg.d_inner)
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
@@ -172,11 +204,21 @@ def apply_mamba(p: dict, ctx: QuantContext, scope: str, cfg: SSMConfig,
 
     new_cache = None
     if cache is not None:
-        # store the last (d_conv-1) pre-conv features + final SSM state
-        tail = xbc_raw[:, -(cfg.d_conv - 1):, :]
-        padt = cfg.d_conv - 1 - tail.shape[1]
-        if padt > 0:
-            tail = jnp.pad(tail, ((0, 0), (padt, 0), (0, 0)))
+        if chunk_valid is not None:
+            # per-row tail: the last (d_conv-1) features *before* each row's
+            # padding, crossing into the carried history when the chunk is
+            # shorter than the conv window
+            ext = jnp.concatenate([hist, xbc_raw], axis=1)
+            vlen = jnp.sum(chunk_valid, axis=1).astype(jnp.int32)
+            idx = vlen[:, None] + jnp.arange(cfg.d_conv - 1,
+                                             dtype=jnp.int32)[None]
+            tail = jnp.take_along_axis(ext, idx[:, :, None], axis=1)
+        else:
+            # store the last (d_conv-1) pre-conv features + final SSM state
+            tail = xbc_raw[:, -(cfg.d_conv - 1):, :]
+            padt = cfg.d_conv - 1 - tail.shape[1]
+            if padt > 0:
+                tail = jnp.pad(tail, ((0, 0), (padt, 0), (0, 0)))
         new_cache = dict(cache, conv=tail.astype(cache["conv"].dtype),
                          state=state.astype(cache["state"].dtype))
     return out, new_cache
@@ -193,8 +235,12 @@ def mamba_cache_spec(cfg: SSMConfig, batch: int, dtype=jnp.bfloat16) -> dict:
 
 
 def apply_mamba_decode(p: dict, ctx: QuantContext, scope: str, cfg: SSMConfig,
-                       x: jax.Array, cache: dict):
-    """Single-token recurrent update. x: (B, 1, C). Returns (y, new_cache)."""
+                       x: jax.Array, cache: dict,
+                       row_valid: Optional[jax.Array] = None):
+    """Single-token recurrent update. x: (B, 1, C). Returns (y, new_cache).
+    ``row_valid`` (B,) bool: rows marked False keep their conv history and
+    SSM state bit-unchanged (vacant or mid-prefill slots in a continuous
+    decode batch — their garbage token must not advance real state)."""
     B = x.shape[0]
     H, P, G, N = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
     zxbcdt = qops.linear(ctx, f"{scope}/in_proj", x, p["in_proj"]["w"])
@@ -223,6 +269,12 @@ def apply_mamba_decode(p: dict, ctx: QuantContext, scope: str, cfg: SSMConfig,
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
     y = apply_norm(p["norm"], y)
     out = qops.linear(ctx, f"{scope}/out_proj", y, p["out_proj"]["w"])
-    new_cache = dict(cache, conv=conv_hist[:, 1:].astype(cache["conv"].dtype),
+    new_conv = conv_hist[:, 1:]
+    if row_valid is not None:
+        state = jnp.where(row_valid[:, None, None, None], state,
+                          cache["state"].astype(jnp.float32))
+        new_conv = jnp.where(row_valid[:, None, None], new_conv,
+                             cache["conv"].astype(new_conv.dtype))
+    new_cache = dict(cache, conv=new_conv.astype(cache["conv"].dtype),
                      state=state.astype(cache["state"].dtype))
     return out, new_cache

@@ -70,6 +70,16 @@ class QuantContext:
     # where greedy tokens must not depend on which other requests share the
     # decode batch. Weights keep per-tensor scales (batch-invariant anyway).
     act_scale_axis: Optional[int] = None
+    # Serving default since the chunked-prefill refactor: per-*token* scales.
+    # Each activation operand keeps every batch/token einsum axis and reduces
+    # only feature/head axes, so a token's quantization grid depends on that
+    # token's features alone. Strictly finer than per-sequence scales, this
+    # keeps greedy tokens independent of (a) which requests share the batch,
+    # (b) how a prompt is split into prefill chunks, and (c) bucket padding —
+    # the invariances the chunked/bucketed prefill parity tests pin down.
+    # It also gives expert-grouped GEMMs per-(expert, token) scales, closing
+    # most of the MoE batch-composition caveat from PR 1.
+    act_scale_token: bool = False
 
     def format_for(self, name: str) -> str:
         if self.mp is None:
@@ -118,9 +128,36 @@ def _quantize_operand(x: jax.Array, fmt_name: str, impl: str,
     return qtensor.fake_quant(x, fmt_name, axis=axis, scale=scale)
 
 
+# Einsum labels that index batch or token positions in this codebase's op
+# specs (layers/mamba/moe): B/T/S (batch, q-tokens, k-tokens), E/N (expert,
+# token-within-expert) and lowercase b/c/q/k (SSD batch, chunk, within-chunk
+# positions). Per-token quantization keeps these axes and reduces the rest
+# (heads, head_dim, features), making every token's scale a function of that
+# token's own features only.
+#
+# CONTRACT: these letters are reserved for batch/token axes across every
+# qeinsum/bgemm spec in the repo. A new op spec that reuses one of them for
+# a feature/head/state axis would silently get per-(token, feature) scales
+# under the serving policy — pick a different letter (free: A F I J L M O P
+# Q R U W X Y Z and most lowercase), and extend the serving parity matrix in
+# tests/test_serve.py if the op runs at serve time.
+_TOKEN_LABELS = frozenset("BTSENbcqk")
+
+
+def _token_scale_axes(labels: str) -> tuple:
+    """Reduce axes for an activation operand's per-token scale. May be the
+    empty tuple (an operand whose axes are all batch/token labels then gets
+    a per-element scale) — never None: falling back to a per-tensor amax
+    would couple tokens through the shared scale, the exact failure mode
+    token granularity exists to prevent."""
+    return tuple(i for i, ch in enumerate(labels) if ch not in _TOKEN_LABELS)
+
+
 def act_quant_axes(ctx: QuantContext, ndim: int) -> Optional[tuple]:
     """Scale-reduction axes for an activation operand: everything except the
-    per-sequence axis (None -> per-tensor scale)."""
+    per-sequence axis (None -> per-tensor scale). Token-granular contexts
+    (``act_scale_token``) are handled in :func:`qeinsum` via the einsum spec;
+    callers without a spec (flash attention) special-case it themselves."""
     if ctx.act_scale_axis is None:
         return None
     keep = ctx.act_scale_axis % ndim
@@ -150,13 +187,19 @@ def qeinsum(ctx: QuantContext, name: str, spec: str, lhs: jax.Array,
                 from repro.kernels import ops as kops  # lazy: optional dep
                 return kops.fp8_linear(lhs, rhs, spec=spec, fmt_name=fmt_name,
                                        out_dtype=out_dtype)
-            # activations may use per-sequence scales (serving); the weight
-            # of a linear op is batch-invariant and keeps a per-tensor scale
-            lhs = _quantize_operand(lhs, fmt_name, ctx.impl, s_lhs,
-                                    act_quant_axes(ctx, lhs.ndim))
+            # activations may use per-sequence or per-token scales (serving);
+            # the weight of a linear op is batch-invariant and keeps a
+            # per-tensor scale
+            if ctx.act_scale_token:
+                a_l, b_l = spec.split("->")[0].split(",")
+                lhs_axes = _token_scale_axes(a_l)
+                rhs_axes = _token_scale_axes(b_l)
+            else:
+                lhs_axes = act_quant_axes(ctx, lhs.ndim)
+                rhs_axes = act_quant_axes(ctx, rhs.ndim)
+            lhs = _quantize_operand(lhs, fmt_name, ctx.impl, s_lhs, lhs_axes)
             rhs = _quantize_operand(rhs, fmt_name, ctx.impl, s_rhs,
-                                    act_quant_axes(ctx, rhs.ndim)
-                                    if kind == KIND_BGEMM else None)
+                                    rhs_axes if kind == KIND_BGEMM else None)
 
     out = jnp.einsum(spec, lhs, rhs, preferred_element_type=accum_dtype)
     out = out.astype(out_dtype)

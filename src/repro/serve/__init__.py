@@ -2,10 +2,10 @@ from repro.serve.cache_pool import (CachePool, PagedCachePool,
                                     dense_slot_bytes, paged_block_bytes,
                                     paged_slot_bytes)
 from repro.serve.engine import (ContinuousBatchingEngine, GenResult,
-                                ServeEngine, ServeSummary)
+                                ServeEngine, ServeSummary, prefill_bucket)
 from repro.serve.scheduler import Request, RequestResult, Scheduler
 
 __all__ = ["CachePool", "ContinuousBatchingEngine", "GenResult",
            "PagedCachePool", "Request", "RequestResult", "Scheduler",
            "ServeEngine", "ServeSummary", "dense_slot_bytes",
-           "paged_block_bytes", "paged_slot_bytes"]
+           "paged_block_bytes", "paged_slot_bytes", "prefill_bucket"]

@@ -108,7 +108,10 @@ class CachePool:
 
     # ---- device-side slot contents ----
     def insert(self, slot: int, request_cache: dict) -> None:
-        """Scatter a batch=1 cache tree into ``slot`` (overwrites the row)."""
+        """Scatter a batch=1 cache tree into ``slot`` (overwrites the row).
+        Not on the engine's serving path since the chunked-prefill rewrite
+        (dense prefill now writes the pool row in place); kept as the
+        generic cache-injection API and covered by the pool tests."""
         self.caches = _scatter_slot(self.caches, request_cache,
                                     jnp.asarray(slot, jnp.int32))
 
@@ -226,11 +229,28 @@ class PagedCachePool:
         if off == 0 and self.block_tables[slot, page] < 0:
             self.block_tables[slot, page] = self._alloc_block(slot)
 
+    def ensure_range(self, slot: int, start: int, end: int) -> None:
+        """Materialize every page covering logical positions [start, end) —
+        chunked prefill's incremental reservation: blocks appear chunk by
+        chunk (each drawing on the admission-time reservation) instead of
+        the whole prompt's worth at once, so blocks a later chunk will fill
+        stay in the free pool until that chunk actually runs."""
+        assert 0 <= start < end, (start, end)
+        last = -(-int(end) // self.block_size)
+        for page in range(int(start) // self.block_size, last):
+            if self.block_tables[slot, page] < 0:
+                self.block_tables[slot, page] = self._alloc_block(slot)
+
     # ---- device-side contents ----
     def insert(self, slot: int, request_cache: dict, prompt_len: int) -> None:
         """Allocate the prompt's blocks and scatter a batch=1 dense prefill
         cache into them (the prefill cache must be sized to exactly
-        ``blocks_for(prompt_len) * block_size``)."""
+        ``blocks_for(prompt_len) * block_size``).
+
+        Not on the engine's serving path since the chunked-prefill rewrite
+        (prefill now writes blocks in place via ``paged_write_chunk``); kept
+        as the generic externally-prefilled-cache injection API and covered
+        by the pool tests."""
         nb = self.blocks_for(prompt_len)
         ids = [self._alloc_block(slot) for _ in range(nb)]
         self.block_tables[slot, :nb] = ids

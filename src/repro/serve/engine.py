@@ -23,6 +23,23 @@ decode step takes the per-slot block tables. ``paged=False`` keeps the dense
 per-slot rings for comparison. Token parity with the dense/one-shot path is
 exact either way: the paged gather reproduces the dense key layout in
 logical order, and the causal mask hides everything else.
+
+Prefill is **length-bucketed** in both engines: prompts are padded to a
+power-of-two bucket with masked attention/state updates, so admission
+compiles O(#buckets) programs instead of O(#distinct prompt lengths). In
+paged mode it is additionally **chunked** (``chunk_len``): a prompt longer
+than the chunk budget is split into fixed-size chunks written straight into
+the slot's paged blocks ("paged prefill" — no dense-then-scatter), each
+chunk interleaved with decode steps under a TTFT-aware arbitration budget
+(``chunk_budget`` chunk steps per decode step at most), so a long prompt
+consumes bounded per-step latency and never head-of-line-blocks decoding
+slots. Greedy tokens stay bit-identical to the one-shot engine for prompts
+whose bucket stays below ``flash_min_seq``: the serving quant policy uses
+per-token activation scales and prefill attends through the KV-cache
+storage dtype, making the math invariant to batching, padding and chunk
+splits. (At or past ``flash_min_seq`` the one-shot engine takes the
+blocked flash kernel, whose summation order differs from the reference
+path the chunked step always uses — see the serve README.)
 """
 from __future__ import annotations
 
@@ -35,15 +52,30 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.mpconfig import as_assignment
-from repro.launch.steps import (make_decode_step, make_paged_decode_step,
-                                make_prefill_step)
+from repro.launch.steps import (make_bucketed_prefill_step,
+                                make_chunked_prefill_step, make_decode_step,
+                                make_paged_decode_step, make_prefill_step)
 from repro.serve.cache_pool import (CachePool, PagedCachePool,
                                     dense_slot_bytes, paged_block_bytes,
                                     paged_slot_bytes)
 from repro.serve.scheduler import Request, Scheduler
 
 __all__ = ["ServeEngine", "ContinuousBatchingEngine", "GenResult",
-           "ServeSummary"]
+           "ServeSummary", "prefill_bucket"]
+
+
+def prefill_bucket(n: int, chunk_len: Optional[int] = None,
+                   min_bucket: int = 8) -> int:
+    """Padded length for a prefill chunk of ``n`` real tokens: the next
+    power of two (>= ``min_bucket``), clamped to ``chunk_len`` when chunking
+    is on. Admission compiles one prefill program per bucket instead of one
+    per distinct prompt length."""
+    assert n >= 1, n
+    b = max(min_bucket, 1 << (n - 1).bit_length())
+    if chunk_len is not None:
+        assert n <= chunk_len, (n, chunk_len)
+        b = min(b, chunk_len)
+    return b
 
 
 @dataclasses.dataclass
@@ -76,7 +108,14 @@ class ServeSummary:
 
 
 class ServeEngine:
-    """One-shot batch serving: prefill + lock-step greedy decode."""
+    """One-shot batch serving: prefill + lock-step greedy decode.
+
+    Prefill is length-bucketed for decoder-only LMs on plain token prompts:
+    the prompt is padded to a power-of-two bucket and masked, so the compile
+    cache is keyed by bucket (the same bucketed step the continuous engine
+    uses in dense mode) instead of by distinct prompt length. Multimodal
+    prefixes and encoder-decoder models keep the legacy per-length step.
+    """
 
     def __init__(self, model, mp=None, mesh=None, donate: bool = True):
         self.model = model
@@ -87,6 +126,15 @@ class ServeEngine:
                                     donate_argnums=d)
         self.decode_step = jax.jit(make_decode_step(model, mp=self.mp),
                                    donate_argnums=d)
+        self._bucketed = getattr(model, "supports_prefill_chunk", False)
+        if self._bucketed:
+            self.bucketed_prefill_step = jax.jit(
+                make_bucketed_prefill_step(model, mp=self.mp),
+                donate_argnums=d)
+        # compile-economy bookkeeping: which prefill programs this engine
+        # needed vs how many distinct prompt lengths it served
+        self.prefill_compile_keys: set = set()
+        self.prompt_lens_seen: set = set()
 
     # ------------------------------------------------------------------
     def init_caches(self, batch: int, max_len: int, enc_len: int = 0):
@@ -97,16 +145,47 @@ class ServeEngine:
             return self.model.init_cache(batch, max_len, enc_len)
         return self.model.init_cache(batch, max_len)
 
+    def _prefill(self, params, caches, batch: dict):
+        """Dispatch prefill: bucketed (compiled per power-of-two bucket) when
+        the model supports it and the batch is plain tokens; the legacy
+        per-length step otherwise. Returns (last-token logits, caches)."""
+        tokens = batch["tokens"]
+        B, T0 = tokens.shape
+        self.prompt_lens_seen.add(int(T0))
+        Lb = prefill_bucket(T0)
+        # legacy per-length step for multimodal/enc-dec batches, and for
+        # prompts whose *bucket* reaches flash_min_seq: the bucketed step
+        # never flashes (padding must not change the summation order), so
+        # long prompts keep the flash-capable pre-bucketing path — and its
+        # exact pre-bucketing numerics — at per-length compile cost
+        if (not self._bucketed or "frames" in batch
+                or batch.get("prefix_embeds") is not None
+                or Lb >= getattr(self.model.cfg, "flash_min_seq", 1 << 30)):
+            self.prefill_compile_keys.add(("legacy", int(T0)))
+            return self.prefill_step(params, caches, batch)
+        self.prefill_compile_keys.add(Lb)
+        tok = jnp.pad(jnp.asarray(tokens, jnp.int32),
+                      ((0, 0), (0, Lb - T0)))
+        start = jnp.zeros((B,), jnp.int32)
+        valid = jnp.full((B,), T0, jnp.int32)
+        return self.bucketed_prefill_step(params, caches, tok, start, valid)
+
     def ttft(self, params, batch: dict, max_len: int, n_iters: int = 5,
              n_warmup: int = 2) -> float:
-        """Median prefill wall time (the paper averages 5 iterations)."""
+        """Median prefill wall time (the paper averages 5 iterations).
+
+        Measures the *serving* prefill path: short prompts run the bucketed
+        step, so the cost includes pow-2 bucket padding (that is what a
+        deployment executes); prompts at or beyond flash_min_seq run the
+        legacy unpadded flash-capable step, keeping long-context TTFT
+        comparable with pre-bucketing measurements."""
         B = batch["tokens"].shape[0]
         enc_len = batch["frames"].shape[1] if "frames" in batch else 0
         times = []
         for i in range(n_warmup + n_iters):
             caches = self.init_caches(B, max_len, enc_len)
             t0 = time.perf_counter()
-            logits, caches = self.prefill_step(params, caches, batch)
+            logits, caches = self._prefill(params, caches, batch)
             jax.block_until_ready(logits)
             if i >= n_warmup:
                 times.append(time.perf_counter() - t0)
@@ -126,7 +205,7 @@ class ServeEngine:
         caches = self.init_caches(B, max_len, enc_len)
 
         t0 = time.perf_counter()
-        logits, caches = self.prefill_step(params, caches, batch)
+        logits, caches = self._prefill(params, caches, batch)
         jax.block_until_ready(logits)
         ttft = time.perf_counter() - t0
 
@@ -157,17 +236,31 @@ class ContinuousBatchingEngine:
        slot, which the next tick's admission phase can immediately reuse.
 
     Vacant slots decode garbage rows; their outputs are ignored and their
-    cache rows (dense) are fully overwritten at the next insert — or their
-    writes land in the paged pool's trash block — so they cost FLOPs but
-    never correctness. Prefill compiles once per distinct prompt length in
-    both layouts (the token operand's shape is per-length even though the
-    paged prefill cache is block-rounded) — bucket prompts upstream if that
-    matters.
+    cache rows (dense) are fully reset at the next first-chunk prefill — or
+    their writes land in the paged pool's trash block — so they cost FLOPs
+    but never correctness.
+
+    Prefill runs *in place* on the pool's caches with the decode batch
+    width: each prefill-chunk step carries (tokens, start, valid) vectors
+    over all ``n_slots`` rows, co-batching every prefilling slot whose next
+    chunk shares a bucket while decoding/vacant rows pass through untouched
+    (valid = 0). Paged mode writes the chunk straight into the slot's
+    physical blocks (allocated incrementally per chunk); dense mode buckets
+    whole prompts into the slot's ring. Compile cost is O(#buckets).
+
+    ``chunk_len`` (paged only) splits prompts longer than the budget into
+    fixed-size chunks; the step loop then interleaves at most
+    ``chunk_budget`` chunk steps per decode step, so no decoding slot ever
+    waits more than ``chunk_budget`` steps while a long prompt prefills
+    (``ServeSummary.counters``: ``prefill_chunks``, ``decode_stall_steps``,
+    ``max_decode_stall_run``, stall percentiles).
     """
 
     def __init__(self, model, n_slots: int = 4, max_len: int = 512,
                  mp=None, donate: bool = False, paged: bool = True,
-                 block_size: int = 16, n_blocks: Optional[int] = None):
+                 block_size: int = 16, n_blocks: Optional[int] = None,
+                 chunk_len: Optional[int] = None, chunk_budget: int = 1,
+                 min_bucket: int = 8):
         if getattr(model, "cache_needs_enc_len", False):
             raise NotImplementedError(
                 "continuous batching currently serves decoder-only LMs")
@@ -178,13 +271,39 @@ class ContinuousBatchingEngine:
         if not paged and n_blocks is not None:
             raise ValueError("n_blocks only applies to paged mode; drop it "
                              "or remove paged=False")
+        if chunk_len is not None:
+            if not paged:
+                raise ValueError(
+                    "chunked prefill writes paged KV blocks; dense mode "
+                    "buckets whole prompts (drop chunk_len or use "
+                    "paged=True)")
+            assert chunk_len >= 1, chunk_len
+            ssm = getattr(model.cfg, "ssm", None)
+            if ssm is not None and chunk_len % ssm.chunk != 0:
+                raise ValueError(
+                    f"chunk_len {chunk_len} must be a multiple of the SSD "
+                    f"chunk ({ssm.chunk}): engine chunk boundaries must "
+                    f"align with the SSD state recurrence for bit-exact "
+                    f"resume (override cfg.ssm.chunk or pick another "
+                    f"chunk_len)")
+        assert chunk_budget >= 1, chunk_budget
         self.paged = paged
         self.block_size = block_size
         self.n_blocks = n_blocks
+        self.chunk_len = chunk_len
+        self.chunk_budget = chunk_budget
+        self.min_bucket = min_bucket
         d = (1,) if donate else ()
-        self.prefill_step = jax.jit(make_prefill_step(model, mp=self.mp))
+        mk_prefill = (make_chunked_prefill_step if paged
+                      else make_bucketed_prefill_step)
+        self.prefill_chunk_step = jax.jit(mk_prefill(model, mp=self.mp))
         mk = make_paged_decode_step if paged else make_decode_step
         self.decode_step = jax.jit(mk(model, mp=self.mp), donate_argnums=d)
+        # compile-economy bookkeeping (persists across serve() calls, like
+        # the jit compile cache it mirrors)
+        self.prefill_compile_keys: set = set()
+        self.prompt_lens_seen: set = set()
+        self._warned_flash = False
 
     # ------------------------------------------------------------------
     def _make_pool(self):
@@ -196,6 +315,8 @@ class ContinuousBatchingEngine:
 
     def _admit(self, params, pool, sched: Scheduler,
                results: dict, now: int) -> None:
+        """Claim slots for admissible requests and emit prefill work items;
+        no device work happens here — the step loop drives the chunks."""
         gate = None
         if self.paged:
             def gate(r):
@@ -215,33 +336,80 @@ class ContinuousBatchingEngine:
             assert req.prompt_len + req.max_new_tokens <= self.max_len, (
                 f"request {req.rid}: {req.prompt_len}+{req.max_new_tokens} "
                 f"exceeds pool max_len {self.max_len}")
-            tokens = jnp.asarray(np.asarray(req.tokens, np.int32))[None]
+            self.prompt_lens_seen.add(req.prompt_len)
+            # documented parity boundary, enforced with a one-time warning:
+            # the chunked/bucketed step never flashes, so once a chunk
+            # bucket reaches flash_min_seq, greedy tokens may differ from a
+            # flash-capable one-shot reference in low-order summation bits
+            flash_min = getattr(self.model.cfg, "flash_min_seq", 1 << 30)
+            biggest = min(req.prompt_len, self.chunk_len or req.prompt_len)
+            if (not self._warned_flash
+                    and prefill_bucket(biggest, self.chunk_len,
+                                       self.min_bucket) >= flash_min):
+                self._warned_flash = True
+                print(f"[serve] warning: prefill bucket >= flash_min_seq "
+                      f"({flash_min}); chunked prefill uses the reference "
+                      f"attention path, so bit-parity with a flash one-shot "
+                      f"reference is not guaranteed at these lengths")
             if self.paged:
+                # reservation only — blocks materialize chunk by chunk
                 slot = pool.alloc_slot(req.prompt_len, req.max_new_tokens)
-                # prefill into a dense batch=1 cache sized to the prompt's
-                # block span, then scatter it into freshly allocated blocks;
-                # ring_window=False keeps full-width K/V rows so the block
-                # reshape is exact even when the prompt exceeds a sliding
-                # window (the window is enforced by the mask either way)
-                plen = pool.blocks_for(req.prompt_len) * pool.block_size
-                cache1 = self.model.init_cache(1, plen, ring_window=False)
             else:
                 slot = pool.alloc()
-                cache1 = self.model.init_cache(1, self.max_len)
-            t0 = time.perf_counter()
-            logits, cache1 = self.prefill_step(params, cache1,
-                                               {"tokens": tokens})
-            jax.block_until_ready(logits)
-            ttft = time.perf_counter() - t0
+            sched.start_prefill(st, slot, now)
+            st.wall_admitted = time.perf_counter()
+
+    def _prefill_tick(self, params, pool, sched: Scheduler,
+                      results: dict, now: int) -> float:
+        """Run one compiled prefill-chunk step: co-batch the next chunk of
+        every prefilling slot whose bucket matches the FCFS head's, padded
+        to the bucket, over the full ``n_slots`` batch (inactive rows pass
+        through with valid = 0). Returns the step's wall time."""
+        items = []
+        bucket = None
+        for slot, st in sched.prefilling.items():
+            start = st.prefill_pos
+            take = st.request.prompt_len - start
+            if self.chunk_len is not None:
+                take = min(take, self.chunk_len)
+            b = prefill_bucket(take, self.chunk_len, self.min_bucket)
+            if bucket is None:
+                bucket = b
+            if b == bucket:
+                items.append((slot, st, start, take))
+        self.prefill_compile_keys.add(bucket)
+        tok = np.zeros((self.n_slots, bucket), np.int32)
+        start_v = np.ones((self.n_slots,), np.int32)   # >0: leave row alone
+        valid_v = np.zeros((self.n_slots,), np.int32)  # 0: inactive row
+        for slot, st, start, take in items:
+            tok[slot, :take] = np.asarray(st.request.tokens,
+                                          np.int32)[start:start + take]
+            start_v[slot] = start
+            valid_v[slot] = take
             if self.paged:
-                pool.insert(slot, cache1, req.prompt_len)
-            else:
-                pool.insert(slot, cache1)
-            first = int(jnp.argmax(logits[0, -1]))
-            sched.start(st, slot, first, ttft, now)
-            if st.done:                      # max_new_tokens == 1
-                results[req.rid] = sched.finish(st, now)
-                pool.free_slot(slot)
+                pool.ensure_range(slot, start, start + take)
+        t0 = time.perf_counter()
+        if self.paged:
+            logits, pool.caches = self.prefill_chunk_step(
+                params, pool.caches, jnp.asarray(tok), jnp.asarray(start_v),
+                jnp.asarray(valid_v), pool.block_tables_device())
+        else:
+            logits, pool.caches = self.prefill_chunk_step(
+                params, pool.caches, jnp.asarray(tok), jnp.asarray(start_v),
+                jnp.asarray(valid_v))
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        dt = time.perf_counter() - t0
+        for slot, st, start, take in items:
+            st = sched.prefill_advance(slot, take, dt)
+            if st.prefill_pos == st.request.prompt_len:
+                st = sched.finish_prefill(slot, int(nxt[slot]), now)
+                # honest TTFT: wall time since admission, which includes the
+                # decode steps interleaved between this request's chunks
+                st.ttft_s = time.perf_counter() - st.wall_admitted
+                if st.done:                  # max_new_tokens == 1
+                    results[st.request.rid] = sched.finish(st, now)
+                    pool.free_slot(slot)
+        return dt
 
     def serve(self, params, requests: Sequence[Request]) -> ServeSummary:
         """Drain ``requests`` (any arrival order) and return all results."""
@@ -257,10 +425,32 @@ class ContinuousBatchingEngine:
         n_steps = 0
         decode_s = 0.0
         peak_queue = peak_live = peak_blocks = peak_slots = 0
+        prefill_chunks = decode_stall_steps = max_stall_run = stall_run = 0
+        stall_s_run = 0.0
+        stall_s: list = []            # per-decode-step injected prefill time
         t_start = time.perf_counter()
         while sched.has_work():
             self._admit(params, pool, sched, results, now)
             peak_queue = max(peak_queue, sched.queue_depth)
+            # prefill phase — TTFT-aware arbitration: prefill freely while
+            # nothing is decoding, else at most chunk_budget chunk steps per
+            # decode step so no decode slot stalls unboundedly
+            chunks_this_tick = 0
+            while sched.prefilling and (not sched.running
+                                        or chunks_this_tick
+                                        < self.chunk_budget):
+                was_decoding = bool(sched.running)
+                dt = self._prefill_tick(params, pool, sched, results, now)
+                prefill_chunks += 1
+                chunks_this_tick += 1
+                if was_decoding:
+                    decode_stall_steps += 1
+                    stall_run += 1
+                    max_stall_run = max(max_stall_run, stall_run)
+                    stall_s_run += dt
+                # a finished 1-token request frees its slot immediately:
+                # let a queued request claim it this same tick
+                self._admit(params, pool, sched, results, now)
             if sched.running:
                 tok_host[:] = 0
                 pos_host[:] = 0
@@ -278,9 +468,17 @@ class ContinuousBatchingEngine:
                     peak_blocks = max(peak_blocks, pool.blocks_in_use)
                 t0 = time.perf_counter()
                 if self.paged:
+                    # decode sees block tables only for *running* rows: a
+                    # slot mid-prefill owns real blocks, and the vacant-row
+                    # garbage write must go to the trash block, not into
+                    # K/V its earlier chunks already wrote
+                    bt = pool.block_tables.copy()
+                    for s in range(self.n_slots):
+                        if s not in sched.running:
+                            bt[s] = -1
                     logits, pool.caches = self.decode_step(
                         params, pool.caches, jnp.asarray(tok_host),
-                        jnp.asarray(pos_host), pool.block_tables_device())
+                        jnp.asarray(pos_host), jnp.asarray(bt))
                 else:
                     logits, pool.caches = self.decode_step(
                         params, pool.caches, jnp.asarray(tok_host),
@@ -288,13 +486,16 @@ class ContinuousBatchingEngine:
                 nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
                 decode_s += time.perf_counter() - t0
                 n_steps += 1
+                stall_s.append(stall_s_run)
+                stall_s_run = 0.0
+                stall_run = 0
                 for slot in list(sched.running):
                     st = sched.record_token(slot, int(nxt[slot]))
                     if st.done:
                         results[st.request.rid] = sched.finish(st, now)
                         pool.free_slot(slot)
                 now += 1
-            else:
+            elif not sched.prefilling:
                 # idle: jump the clock to the next arrival instead of spinning
                 nxt_arrival = sched.next_arrival()
                 if nxt_arrival is None:
@@ -310,7 +511,18 @@ class ContinuousBatchingEngine:
             "peak_slots_in_use": peak_slots,
             "dense_kv_bytes": self.n_slots * dense_slot_bytes(self.model,
                                                               self.max_len),
+            # chunked/bucketed prefill economics + decode-stall signals
+            "prefill_chunks": prefill_chunks,
+            "decode_stall_steps": decode_stall_steps,
+            "max_decode_stall_run": max_stall_run,
+            "prefill_buckets": len(self.prefill_compile_keys),
+            "distinct_prompt_lens": len(self.prompt_lens_seen),
         }
+        if stall_s:
+            arr = np.sort(np.asarray(stall_s, np.float64))
+            counters["decode_stall_p50_s"] = float(arr[len(arr) // 2])
+            counters["decode_stall_p99_s"] = float(
+                arr[min(len(arr) - 1, int(0.99 * len(arr)))])
         if self.paged:
             blk_bytes = paged_block_bytes(self.model, pool.block_size)
             # slot-major SSM state is allocated per slot up front in paged

@@ -1,11 +1,18 @@
 """Continuous-batching request scheduler (FCFS admission).
 
 The scheduler is pure host-side bookkeeping: it owns the waiting queue and
-the per-request decode state, and decides *which* request may enter a cache
-slot at a given engine clock tick. All device work (prefill, slot scatter,
+the per-request prefill/decode state, and decides *which* request may enter
+a cache slot at a given engine clock tick. All device work (prefill chunks,
 batched decode) stays in the engine, so scheduling policy can evolve —
-priority classes, preemption, chunked prefill — without touching compiled
-code.
+priority classes, preemption — without touching compiled code.
+
+Admission emits *prefill work items* rather than running prefill inline: a
+popped request parks in ``prefilling`` (slot -> state) with a
+``prefill_pos`` cursor, the engine advances it chunk by chunk
+(``prefill_advance``), and the final chunk's greedy token promotes it to
+``running`` (``finish_prefill``). The engine's step loop arbitrates chunk
+steps against decode steps under a TTFT-aware budget, so a long prompt
+never head-of-line-blocks in-flight decodes.
 
 The clock is abstract: the engine advances it once per decode step, and a
 request becomes admissible when ``arrival <= now``. Driving admission off a
@@ -23,6 +30,7 @@ import numpy as np
 __all__ = ["Request", "RequestState", "RequestResult", "Scheduler"]
 
 WAITING = "waiting"
+PREFILLING = "prefilling"
 RUNNING = "running"
 DONE = "done"
 
@@ -47,6 +55,8 @@ class RequestState:
     status: str = WAITING
     slot: int = -1
     next_pos: int = 0                 # cache position of the next decode write
+    prefill_pos: int = 0              # prompt tokens already prefilled
+    wall_admitted: float = 0.0        # engine-set perf_counter at admission
     last_token: int = 0
     out_tokens: list = dataclasses.field(default_factory=list)
     ttft_s: float = 0.0
@@ -70,6 +80,7 @@ class RequestResult:
 class Scheduler:
     def __init__(self):
         self._queue: deque = deque()           # WAITING states, FCFS
+        self.prefilling: dict = {}             # slot -> RequestState (FCFS order)
         self.running: dict = {}                # slot -> RequestState
         self.states: dict = {}                 # rid -> RequestState
         # backpressure signal: times the arrived queue head was held back by
@@ -85,7 +96,8 @@ class Scheduler:
 
     # ---- admission ----
     def has_work(self) -> bool:
-        return bool(self._queue) or bool(self.running)
+        return (bool(self._queue) or bool(self.prefilling)
+                or bool(self.running))
 
     def next_arrival(self) -> Optional[int]:
         """Earliest arrival among waiting requests (None if queue empty)."""
@@ -107,17 +119,42 @@ class Scheduler:
             self.blocked_admissions += 1
         return None
 
-    def start(self, st: RequestState, slot: int, first_token: int,
-              ttft_s: float, now: int) -> None:
-        """Mark a prefilled request as occupying ``slot``."""
-        st.status = RUNNING
+    # ---- chunked prefill lifecycle ----
+    def start_prefill(self, st: RequestState, slot: int, now: int) -> None:
+        """Claim ``slot`` for a request whose prompt will be prefilled in one
+        or more chunk steps; the engine's step loop drives the chunks."""
+        st.status = PREFILLING
         st.slot = slot
+        st.prefill_pos = 0
+        st.ttft_s = 0.0
+        st.admitted_step = now
+        self.prefilling[slot] = st
+
+    def prefill_advance(self, slot: int, n_tokens: int,
+                        dt_s: float) -> RequestState:
+        """Record one completed chunk (``n_tokens`` prompt tokens) and fold
+        its wall time into the request's TTFT. The engine overwrites
+        ``ttft_s`` with the admission-to-first-token wall time when the
+        final chunk lands (which also counts the decode steps interleaved
+        between chunks); the chunk-dt sum here is the fallback for
+        host-only scheduler use."""
+        st = self.prefilling[slot]
+        st.prefill_pos += n_tokens
+        assert st.prefill_pos <= st.request.prompt_len, (
+            st.prefill_pos, st.request.prompt_len)
+        st.ttft_s += dt_s
+        return st
+
+    def finish_prefill(self, slot: int, first_token: int,
+                       now: int) -> RequestState:
+        """The final chunk produced the first greedy token: move to decode."""
+        st = self.prefilling.pop(slot)
+        st.status = RUNNING
         st.last_token = first_token
         st.out_tokens.append(first_token)
         st.next_pos = st.request.prompt_len
-        st.ttft_s = ttft_s
-        st.admitted_step = now
         self.running[slot] = st
+        return st
 
     # ---- decode bookkeeping ----
     def record_token(self, slot: int, token: int) -> RequestState:

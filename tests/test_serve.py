@@ -1,6 +1,8 @@
 """Serving subsystem: continuous batching vs one-shot token parity, mid-decode
 admission, slot/block pool invariants, paged-KV allocator + backpressure,
-scheduler policy, and the MPPlan handoff."""
+scheduler policy, the MPPlan handoff, and the chunked + length-bucketed
+prefill parity/property matrix (bit-exact greedy tokens across archs x KV
+dtypes x MP plans, bounded decode stall, incremental block reservation)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,9 +10,16 @@ import pytest
 
 from repro.core.mpconfig import MPPlan, as_assignment
 from repro.models.registry import get_model
+from repro.nn.mamba import SSMConfig
 from repro.quant.qops import QuantContext
 from repro.serve import (CachePool, ContinuousBatchingEngine, PagedCachePool,
-                         Request, Scheduler, ServeEngine)
+                         Request, Scheduler, ServeEngine, prefill_bucket)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - exercised on minimal images
+    HAS_HYPOTHESIS = False
 
 MP_ASSIGNMENT = {
     "layers/0/attn/q_proj": "fp8_e4m3",
@@ -374,6 +383,296 @@ def test_impossible_request_fails_fast(model, params, prompts):
 
 
 # ---------------------------------------------------------------------------
+# chunked + length-bucketed prefill (tentpole)
+# ---------------------------------------------------------------------------
+
+# one arch per block family; SSD chunk is shrunk to the engine chunk length
+# so engine chunk boundaries align with the SSD recurrence (bit-exact resume)
+CHUNK_LEN = 8
+ARCH_BUILD = {
+    "attn": ("llama3_1b", {}),
+    "mla": ("deepseek_v3_671b", dict(moe_layers=(), mtp_depth=0)),
+    "mamba": ("mamba2_370m",
+              dict(ssm=SSMConfig(d_model=128, d_inner=256, d_state=32,
+                                 head_dim=32, chunk=CHUNK_LEN))),
+    "hybrid": ("hymba_1p5b",
+               dict(ssm=SSMConfig(d_model=128, d_inner=256, d_state=16,
+                                  head_dim=32, chunk=CHUNK_LEN))),
+}
+
+
+@pytest.fixture(scope="module")
+def arch_cache():
+    """(arch, kv_dtype) -> (model, params), built once per module."""
+    cache = {}
+
+    def get(arch, kv):
+        if (arch, kv) not in cache:
+            name, ov = ARCH_BUILD[arch]
+            m = get_model(name, smoke=True, kv_cache_dtype=kv, **ov)
+            cache[(arch, kv)] = (m, m.init(jax.random.key(1)))
+        return cache[(arch, kv)]
+
+    return get
+
+
+def _auto_mp(model, params):
+    """A small arch-valid MP assignment touching an attention/SSD BGEMM and
+    two linears — the ops whose quantization scales are most sensitive to
+    batching/padding/chunk splits."""
+    registry = []
+    ctx = QuantContext(mode="plain", registry=registry)
+    toks = jax.ShapeDtypeStruct((1, 8), jnp.int32)
+    caches = model.init_cache(1, 16, abstract=True)
+    jax.eval_shape(lambda p, t, c: model.prefill(p, t, c, ctx),
+                   params, toks, caches)
+    names = [op.name for op in registry]
+    pick = [n for n in names
+            if n.endswith("qk_matmul") or n.endswith("cb_matmul")][:1]
+    pick += [n for n in names if "proj" in n][:2] + ["lm_head"]
+    return {n: "fp8_e4m3" for n in pick}
+
+
+# prompt lengths: 20 > CHUNK_LEN (multi-chunk), 11 straddles the 8-bucket
+# boundary, 7 fits the smallest bucket
+_MATRIX_LENS = (20, 11, 7)
+
+
+@pytest.mark.parametrize("arch", list(ARCH_BUILD))
+@pytest.mark.parametrize("kv", ["bfloat16", "fp8_e4m3"])
+@pytest.mark.parametrize("with_mp", [False, True],
+                         ids=["no_plan", "mp_plan"])
+def test_chunked_bucketed_prefill_parity(arch_cache, arch, kv, with_mp):
+    """Greedy tokens from chunked + bucketed prefill are bit-identical to
+    the one-shot engine across {attn, MLA, mamba, hybrid} x {bf16, fp8 KV
+    cache} x {no plan, MP plan}."""
+    model, params = arch_cache(arch, kv)
+    mp = _auto_mp(model, params) if with_mp else None
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, 200, size=n).astype(np.int32)
+               for n in _MATRIX_LENS]
+    ref_eng = ServeEngine(model, mp=mp, donate=False)
+    refs = {i: np.asarray(ref_eng.generate(
+                params, {"tokens": jnp.asarray(p)[None]},
+                max_new_tokens=4).tokens)[0]
+            for i, p in enumerate(prompts)}
+    eng = ContinuousBatchingEngine(model, n_slots=2, max_len=40,
+                                   block_size=4, chunk_len=CHUNK_LEN, mp=mp)
+    reqs = [Request(rid=i, tokens=p, max_new_tokens=4, arrival=i)
+            for i, p in enumerate(prompts)]
+    summ = eng.serve(params, reqs)
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(summ.results[i].tokens, refs[i],
+                                      err_msg=f"{arch}/{kv}/mp={with_mp}")
+    c = summ.counters
+    # the 20-token prompt alone needs ceil(20/8) = 3 chunk steps
+    assert c["prefill_chunks"] >= 3
+    # buckets {8, 16} at most for lengths (20->8+8+4, 11->8+3, 7)
+    assert c["prefill_buckets"] <= 2 < len(_MATRIX_LENS) + 1
+
+
+def test_long_prompt_does_not_starve_decodes(model, params):
+    """One long prompt + several short decoding requests: no decode slot
+    waits more than chunk_budget chunk steps between advances, and the
+    prefill_chunks / decode_stall_steps counters record the interleave."""
+    rng = np.random.default_rng(11)
+    shorts = [rng.integers(0, 500, size=6).astype(np.int32) for _ in range(3)]
+    long_p = rng.integers(0, 500, size=40).astype(np.int32)
+    prompts = shorts + [long_p]
+    ref = _oneshot_reference(model, params, prompts, max_new=8)
+    eng = ContinuousBatchingEngine(model, n_slots=4, max_len=64,
+                                   block_size=8, chunk_len=8, chunk_budget=1)
+    reqs = [Request(rid=i, tokens=p, max_new_tokens=8) for i, p in
+            enumerate(shorts)]
+    # the long prompt arrives while the shorts are mid-decode
+    reqs.append(Request(rid=3, tokens=long_p, max_new_tokens=8, arrival=2))
+    summ = eng.serve(params, reqs)
+    for i in range(4):
+        np.testing.assert_array_equal(summ.results[i].tokens, ref[i])
+    c = summ.counters
+    assert c["prefill_chunks"] >= 5          # 40 tokens / chunk_len 8
+    assert c["decode_stall_steps"] >= 4      # long prefill ran mid-decode
+    # the stall bound: at most chunk_budget chunk steps between decode steps
+    assert c["max_decode_stall_run"] <= 1
+    assert c["decode_stall_p99_s"] >= c["decode_stall_p50_s"] >= 0.0
+    # the long request was admitted mid-decode and finished last
+    assert summ.results[3].admitted_step >= 2
+    assert summ.results[3].finished_step == max(
+        r.finished_step for r in summ.results.values())
+
+
+def test_bucketed_prefill_compile_economy(model, params):
+    """Satellite: both engines key prefill compilation by bucket, not by
+    distinct prompt length (>= 2x fewer compiled programs here)."""
+    rng = np.random.default_rng(3)
+    lens = list(range(9, 17))                   # 8 lengths, all bucket 16
+    one = ServeEngine(model, donate=False)
+    for L in lens:
+        one.generate(params, {"tokens": jnp.asarray(
+            rng.integers(0, 500, size=L).astype(np.int32))[None]},
+            max_new_tokens=2)
+    assert len(one.prompt_lens_seen) == len(lens)
+    assert one.prefill_compile_keys == {16}
+    assert 2 * len(one.prefill_compile_keys) <= len(one.prompt_lens_seen)
+
+    # prompts whose bucket reaches flash_min_seq keep the legacy unpadded
+    # flash-capable step (bucket padding must not change flash numerics)
+    flashy = get_model("llama3_1b", smoke=True, flash_min_seq=16)
+    fe = ServeEngine(flashy, donate=False)
+    fp = flashy.init(jax.random.key(0))
+    fe.generate(fp, {"tokens": jnp.asarray(
+        rng.integers(0, 500, size=12).astype(np.int32))[None]},
+        max_new_tokens=2)                       # bucket 16 -> legacy
+    fe.generate(fp, {"tokens": jnp.asarray(
+        rng.integers(0, 500, size=7).astype(np.int32))[None]},
+        max_new_tokens=2)                       # bucket 8 -> bucketed
+    assert fe.prefill_compile_keys == {("legacy", 12), 8}
+
+    # dense continuous reuses the same bucketed step: same keying
+    dense = ContinuousBatchingEngine(model, n_slots=2, max_len=32,
+                                     paged=False)
+    reqs = [Request(rid=i, tokens=rng.integers(0, 500, size=L).astype(
+        np.int32), max_new_tokens=2) for i, L in enumerate(lens)]
+    summ = dense.serve(params, reqs)
+    assert summ.counters["distinct_prompt_lens"] == len(lens)
+    assert summ.counters["prefill_buckets"] == 1
+    ref = _oneshot_reference(model, params, [r.tokens for r in reqs],
+                             max_new=2)
+    for i in range(len(lens)):
+        np.testing.assert_array_equal(summ.results[i].tokens, ref[i])
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis optional, deterministic fallbacks)
+# ---------------------------------------------------------------------------
+
+
+def _check_bucket_props(n, chunk_len):
+    """Chunk sizing never exceeds the per-step budget; buckets are a small
+    power-of-two family."""
+    take = min(n, chunk_len) if chunk_len else n
+    assert take <= (chunk_len or n)
+    b = prefill_bucket(take, chunk_len)
+    assert b >= take                            # padding, never truncation
+    if chunk_len:
+        assert b <= max(chunk_len, 8)           # bounded per-step work
+    assert b == chunk_len or (b & (b - 1)) == 0  # pow2 (or the chunk cap)
+    # bucket count over all lengths 1..n is logarithmic, not linear
+    buckets = {prefill_bucket(min(m, chunk_len) if chunk_len else m,
+                              chunk_len) for m in range(1, n + 1)}
+    assert len(buckets) <= max(1, int(np.log2(max(n, 2))) + 1)
+
+
+@pytest.mark.parametrize("n,chunk_len", [(1, None), (7, 8), (9, 8), (40, 8),
+                                         (17, None), (64, 16), (3, 4)])
+def test_bucket_props_cases(n, chunk_len):
+    _check_bucket_props(n, chunk_len)
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(1, 200),
+           st.one_of(st.none(), st.integers(1, 64)))
+    def test_bucket_props(n, chunk_len):
+        _check_bucket_props(n, chunk_len)
+
+
+def _check_incremental_reservation(model, plen, max_new, chunk_len,
+                                   block_size):
+    """Chunk-by-chunk block materialization never exceeds the worst-case
+    admission reservation and never strands blocks or reservations."""
+    pool = PagedCachePool(model, n_slots=1, max_len=plen + max_new,
+                          block_size=block_size)
+    worst = pool.blocks_for_request(plen, max_new)
+    slot = pool.alloc_slot(plen, max_new)
+    for start in range(0, plen, chunk_len):
+        end = min(start + chunk_len, plen)
+        pool.ensure_range(slot, start, end)
+        assert pool.blocks_in_use == pool.blocks_for(end)  # exactly covered
+        assert pool.blocks_in_use <= worst
+        # reservation + materialized blocks never exceed the worst case
+        assert pool.blocks_in_use + pool._slot_reserve[slot] == worst
+    for pos in range(plen, plen + max_new - 1):
+        pool.ensure_block(slot, pos)
+        assert pool.blocks_in_use <= worst
+    pool.free_slot(slot)
+    assert pool.blocks_in_use == 0 and pool._reserved == 0
+
+
+@pytest.mark.parametrize("plen,max_new,chunk_len,block_size",
+                         [(20, 5, 8, 4), (7, 1, 8, 4), (33, 9, 8, 8),
+                          (16, 4, 4, 4), (9, 2, 3, 2)])
+def test_incremental_reservation_cases(model, plen, max_new, chunk_len,
+                                       block_size):
+    _check_incremental_reservation(model, plen, max_new, chunk_len,
+                                   block_size)
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 64), st.integers(1, 16), st.integers(1, 16),
+           st.integers(1, 8))
+    def test_incremental_reservation(plen, max_new, chunk_len, block_size):
+        m = get_model("llama3_1b", smoke=True)
+        _check_incremental_reservation(m, plen, max_new, chunk_len,
+                                       block_size)
+
+
+def _check_padding_no_leak(model, params, plen):
+    """Bucket padding never leaks into logits: the padded/masked bucketed
+    prefill produces bit-identical last-token logits to the unpadded
+    reference prefill."""
+    ctx = QuantContext()
+    rng = np.random.default_rng(plen)
+    toks = jnp.asarray(rng.integers(0, 500, size=(1, plen)), jnp.int32)
+    caches = model.init_cache(1, 64)
+    ref, _ = model.prefill(params, toks, caches, ctx)
+    Lb = prefill_bucket(plen)
+    caches2 = model.init_cache(1, 64)
+    padded = jnp.pad(toks, ((0, 0), (0, Lb - plen)))
+    got, _ = model.prefill_chunk(params, padded, caches2, ctx,
+                                 start_pos=jnp.zeros((1,), jnp.int32),
+                                 valid_len=jnp.full((1,), plen, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(ref[:, -1], np.float32),
+                                  np.asarray(got[:, -1], np.float32))
+
+
+@pytest.mark.parametrize("plen", [1, 5, 8, 9, 16, 17, 23])
+def test_padding_no_leak_cases(model, params, plen):
+    _check_padding_no_leak(model, params, plen)
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(1, 30))
+    def test_padding_no_leak(plen):
+        m = get_model("llama3_1b", smoke=True)
+        p = m.init(jax.random.key(0))
+        _check_padding_no_leak(m, p, plen)
+
+
+def test_random_mix_respects_chunk_budget(model, params):
+    """Property (deterministic device run): a random prompt-length mix never
+    exceeds the per-step chunk budget and keeps exact parity."""
+    rng = np.random.default_rng(19)
+    lens = rng.integers(1, 30, size=6)
+    prompts = [rng.integers(0, 500, size=int(n)).astype(np.int32)
+               for n in lens]
+    ref = _oneshot_reference(model, params, prompts, max_new=3)
+    eng = ContinuousBatchingEngine(model, n_slots=3, max_len=40,
+                                   block_size=4, chunk_len=8, chunk_budget=2)
+    reqs = [Request(rid=i, tokens=p, max_new_tokens=3,
+                    arrival=int(rng.integers(0, 4)))
+            for i, p in enumerate(prompts)]
+    summ = eng.serve(params, reqs)
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(summ.results[i].tokens, ref[i])
+    assert summ.counters["max_decode_stall_run"] <= 2
+    assert summ.counters["prefill_chunks"] >= sum(
+        -(-int(n) // 8) for n in lens) / 3   # co-batching can merge, not skip
+
+
+# ---------------------------------------------------------------------------
 # scheduler policy
 # ---------------------------------------------------------------------------
 
@@ -410,7 +709,14 @@ def test_scheduler_lifecycle_bookkeeping():
     s = Scheduler()
     st = s.submit(_req(7, max_new=3))
     st = s.pop_admissible(0)
-    s.start(st, slot=0, first_token=11, ttft_s=0.5, now=0)
+    s.start_prefill(st, slot=0, now=0)
+    assert s.prefilling[0] is st and s.has_work()
+    assert st.admitted_step == 0
+    s.prefill_advance(0, 3, 0.3)                 # chunked: 3 + 1 tokens
+    st = s.prefill_advance(0, 1, 0.2)
+    assert st.prefill_pos == 4                   # == prompt_len
+    st = s.finish_prefill(0, first_token=11, now=0)
+    assert not s.prefilling
     assert s.running[0] is st and st.out_tokens == [11]
     assert st.next_pos == 4                      # == prompt_len
     s.record_token(0, 12)
