@@ -7,11 +7,14 @@ paged refactor exists for: peak block occupancy and KV HBM bytes per live
 token, paged vs the dense-slot baseline at the same batch pressure, and the
 chunked/bucketed prefill economics: compiled prefill programs (buckets) vs
 distinct prompt lengths, and the p50/p99 decode-step stall injected while a
-deliberately long prompt prefills in chunks. The run fails if paged
-bytes/live-token is not strictly below dense, if bucketing does not cut
-prefill compilations by at least 2x on the mixed-length stream, if the
-decode stall exceeds the chunk budget, or if any engine pair disagrees on
-greedy tokens.
+deliberately long prompt prefills in chunks — and, since the fused
+paged-attention kernel, the per-decode-step attention KV bytes read:
+live-token-proportional for the fused kernel vs capacity-proportional for
+the gather reference path. The run fails if paged bytes/live-token is not
+strictly below dense, if fused attention reads are not strictly below
+gather at <= 50% occupancy, if bucketing does not cut prefill compilations
+by at least 2x on the mixed-length stream, if the decode stall exceeds the
+chunk budget, or if any engine pair disagrees on greedy tokens.
 
 The one-shot baseline must wait for the whole batch to arrive before
 prefilling (batch-formation latency), so its effective TTFT for early
@@ -43,13 +46,15 @@ def _requests(data, n, prompt_len, new_tokens, arrival_every):
 
 
 def run_continuous(model, params, reqs, n_slots, max_len, mp, tag,
-                   paged=True, block_size=16):
+                   paged=True, block_size=16, paged_attn=None):
     eng = ContinuousBatchingEngine(model, n_slots=n_slots, max_len=max_len,
-                                   mp=mp, paged=paged, block_size=block_size)
+                                   mp=mp, paged=paged, block_size=block_size,
+                                   paged_attn=paged_attn)
     eng.serve(params, [reqs[0]])              # warmup (compile)
     out = eng.serve(params, reqs)
     ttfts = np.array(sorted(r.ttft_s for r in out.results.values()))
-    layout = "paged" if paged else "dense"
+    layout = ("paged" if paged_attn in (None, "fused") else "paged_gather") \
+        if paged else "dense"
     emit(f"serve_continuous_{layout}_{tag}_tok_s", out.tokens_per_s,
          f"{out.n_steps} steps, {len(reqs)} reqs, {n_slots} slots")
     emit(f"serve_continuous_{layout}_{tag}_ttft_p50_us",
@@ -117,10 +122,20 @@ def main():
         paged = run_continuous(model, params, reqs, args.n_slots, max_len,
                                mp, tag, paged=True,
                                block_size=args.block_size)
+        engines = [("dense", dense), ("paged", paged)]
+        if tag == "bf16":
+            # gather reference engine: same drain, capacity-proportional
+            # attention reads — the traffic baseline the fused kernel beats
+            gather = run_continuous(model, params, reqs, args.n_slots,
+                                    max_len, mp, tag, paged=True,
+                                    block_size=args.block_size,
+                                    paged_attn="gather")
+            engines.append(("paged_gather", gather))
+            attn_read_economics(paged, gather)
         # parity guard: the benchmark is only meaningful if all engines
         # generate the same greedy continuations
         batch_toks = np.asarray(one.tokens)
-        for name, cont in (("dense", dense), ("paged", paged)):
+        for name, cont in engines:
             agree = np.mean([
                 np.array_equal(cont.results[i].tokens, batch_toks[i])
                 for i in range(args.requests)])
@@ -144,6 +159,33 @@ def main():
                 f"{bpl['paged']:.1f} not below dense {bpl['dense']:.1f}")
 
     chunked_prefill_economics(model, params, data, args)
+
+
+def attn_read_economics(paged, gather):
+    """Per-decode-step attention KV HBM bytes read: the fused kernel's reads
+    scale with live tokens, the gather path's with provisioned capacity.
+    Fails unless fused is strictly lower while mean occupancy is <= 50%
+    (the benchmark provisions 2x the request span, so it is)."""
+    cf, cg = paged.counters, gather.counters
+    assert cf["paged_attn"] == "fused" and cg["paged_attn"] == "gather"
+    steps_f = max(paged.n_steps, 1)
+    steps_g = max(gather.n_steps, 1)
+    fused_step = cf["decode_attn_bytes_read"] / steps_f
+    gather_step = cg["decode_attn_bytes_read"] / steps_g
+    occupancy = (cf["decode_live_token_steps"]
+                 / max(cf["decode_capacity_token_steps"], 1))
+    emit("serve_decode_attn_bytes_per_step_fused", fused_step,
+         f"live-token-proportional reads at {occupancy:.1%} mean occupancy")
+    emit("serve_decode_attn_bytes_per_step_gather", gather_step,
+         f"capacity-proportional: full block table materialized per layer")
+    print(f"# decode attention KV reads/step: fused {fused_step:.0f} B vs "
+          f"gather {gather_step:.0f} B ({fused_step / gather_step:.1%}) at "
+          f"{occupancy:.1%} occupancy")
+    if occupancy <= 0.5 and fused_step >= gather_step:
+        raise SystemExit(
+            f"fused-attention regression: {fused_step:.0f} attention bytes "
+            f"per decode step not below the gather path's "
+            f"{gather_step:.0f} at {occupancy:.1%} occupancy")
 
 
 def chunked_prefill_economics(model, params, data, args):

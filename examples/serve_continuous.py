@@ -6,7 +6,8 @@ monolithic rings).
     PYTHONPATH=src python examples/serve_continuous.py \
         [--tau 0.01] [--n-slots 4] [--requests 8] [--new-tokens 12] \
         [--block-size 8] [--n-blocks 24] [--no-mp] \
-        [--chunk-len 16 --chunk-budget 1 --long-prompt-len 96]
+        [--chunk-len 16 --chunk-budget 1 --long-prompt-len 96] \
+        [--paged-attn fused|gather] [--dump-tokens toks.json]
 
 Pipeline shown here (the full plan->engine handoff):
   1. ``CalibrationBundle.solve`` runs the IP (here from the shared benchmark
@@ -55,6 +56,13 @@ def main():
                          "chunked prefill")
     ap.add_argument("--dense-slots", action="store_true",
                     help="monolithic per-slot rings instead of paged blocks")
+    ap.add_argument("--paged-attn", default=None,
+                    choices=("fused", "gather"),
+                    help="paged decode attention: fused Pallas kernel "
+                         "(default) vs the gather reference path")
+    ap.add_argument("--dump-tokens", default=None,
+                    help="write {rid: greedy tokens} json here (CI diffs "
+                         "fused-vs-gather runs)")
     ap.add_argument("--no-mp", action="store_true",
                     help="skip bundle calibration / MP plan (bf16 only; "
                          "fast path for CI smoke)")
@@ -87,7 +95,8 @@ def main():
                                        block_size=args.block_size,
                                        n_blocks=args.n_blocks,
                                        chunk_len=args.chunk_len,
-                                       chunk_budget=args.chunk_budget)
+                                       chunk_budget=args.chunk_budget,
+                                       paged_attn=args.paged_attn)
         eng.serve(params, [reqs[0]])          # warmup (compile)
         out = eng.serve(params, reqs)
         outs[tag] = out
@@ -139,6 +148,15 @@ def main():
                 f"(> budget {args.chunk_budget})")
         print(f"{'':8s} all {len(reqs)} requests completed, greedy tokens "
               f"== one-shot reference\n")
+
+    if args.dump_tokens:
+        import json
+        first = next(iter(outs.values()))
+        with open(args.dump_tokens, "w") as f:
+            json.dump({str(r.rid): np.asarray(
+                first.results[r.rid].tokens).tolist() for r in reqs},
+                f, indent=0, sort_keys=True)
+        print(f"greedy tokens written to {args.dump_tokens}")
 
     if "mp-fp8" in outs:
         agree = np.mean([

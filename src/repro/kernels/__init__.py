@@ -1,7 +1,8 @@
 from repro.kernels import ops, ref
 from repro.kernels.fp8_matmul import fp8_matmul
 from repro.kernels.mp_attention import mp_flash_attention
+from repro.kernels.paged_attention import paged_decode_attention
 from repro.kernels.quant_cast import amax, quantize_fp8, scale_cast
 
-__all__ = ["ops", "ref", "fp8_matmul", "mp_flash_attention", "amax",
-           "quantize_fp8", "scale_cast"]
+__all__ = ["ops", "ref", "fp8_matmul", "mp_flash_attention",
+           "paged_decode_attention", "amax", "quantize_fp8", "scale_cast"]

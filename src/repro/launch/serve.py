@@ -117,6 +117,12 @@ def main():
     ap.add_argument("--dense-slots", action="store_true",
                     help="use monolithic per-slot rings instead of paged "
                          "KV blocks (continuous mode)")
+    ap.add_argument("--paged-attn", default=None,
+                    choices=("fused", "gather"),
+                    help="paged decode attention: 'fused' (default) attends "
+                         "block-major KV in place via the Pallas kernel; "
+                         "'gather' keeps the reference path that "
+                         "materializes logical (B, S) K/V per layer")
     args = ap.parse_args()
 
     model = get_model(args.arch, smoke=args.smoke)
@@ -155,7 +161,8 @@ def main():
                                        block_size=args.block_size,
                                        n_blocks=args.n_blocks,
                                        chunk_len=args.chunk_len,
-                                       chunk_budget=args.chunk_budget)
+                                       chunk_budget=args.chunk_budget,
+                                       paged_attn=args.paged_attn)
         rng = np.random.default_rng(1)
         reqs = [Request(rid=i,
                         tokens=rng.integers(0, model.cfg.vocab_size,
@@ -177,6 +184,13 @@ def main():
                   f"peak | peak KV {c['peak_kv_bytes'] / 1e6:.2f} MB vs dense "
                   f"{c['dense_kv_bytes'] / 1e6:.2f} MB | "
                   f"{c['blocked_admissions']} blocked admissions")
+            if out.n_steps:
+                print(f"[serve] decode attention ({c['paged_attn']}): "
+                      f"{c['decode_attn_bytes_read'] / max(out.n_steps, 1) / 1e6:.3f} "
+                      f"MB/step KV read (fused model "
+                      f"{c['decode_attn_bytes_fused_model'] / 1e6:.2f} MB vs "
+                      f"gather {c['decode_attn_bytes_gather_model'] / 1e6:.2f}"
+                      f" MB over the drain)")
         print(f"[serve] prefill: {c['prefill_chunks']} chunk steps | "
               f"{c['prefill_buckets']} compile buckets for "
               f"{c['distinct_prompt_lens']} prompt lengths | "

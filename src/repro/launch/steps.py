@@ -155,17 +155,28 @@ def make_decode_step(model, mp: Optional[dict] = None):
     return decode_step
 
 
-def make_paged_decode_step(model, mp: Optional[dict] = None):
+def make_paged_decode_step(model, mp: Optional[dict] = None,
+                           paged_attn: str = "fused"):
     """(params, caches, token, pos, block_tables) -> (logits, caches).
 
     The paged twin of :func:`make_decode_step`: ``caches`` hold block-major
     attention K/V owned by a ``PagedCachePool`` and ``block_tables`` is the
     (B, max_blocks) int32 map from each decode row's logical pages to
-    physical blocks (-1 = unallocated; vacant rows are all -1)."""
+    physical blocks (-1 = unallocated; vacant rows are all -1). Per-row
+    lengths are derived inside the model from the ``pos`` vector (pos + 1).
+
+    ``paged_attn`` selects the paged attention implementation: ``"fused"``
+    (default) attends block-major K/V in place via the Pallas
+    paged-attention kernel — per-step attention HBM traffic proportional to
+    live tokens; ``"gather"`` keeps the reference path that materializes
+    the logical (B, max_blocks * block_size) K/V per layer. Layers whose
+    attention BGEMMs carry an MP format always use gather (exact quantized
+    semantics) regardless of this switch."""
     ctx = _serving_ctx(mp)
 
     def decode_step(params, caches, token, pos, block_tables):
         return model.decode_step(params, token, pos, caches, ctx,
-                                 block_tables=block_tables)
+                                 block_tables=block_tables,
+                                 paged_attn=paged_attn)
 
     return decode_step

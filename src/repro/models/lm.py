@@ -227,7 +227,8 @@ class LM:
                cache_pos=None, decode: bool = False,
                block_tables: Optional[jax.Array] = None,
                chunk_valid: Optional[jax.Array] = None,
-               chunk_start: Optional[jax.Array] = None):
+               chunk_start: Optional[jax.Array] = None,
+               paged_attn: str = "fused"):
         cfg = self.cfg
         block, is_moe = sig
         new_cache = cache
@@ -246,14 +247,15 @@ class LM:
                                        block_tables=block_tables,
                                        chunk_valid=chunk_valid,
                                        chunk_start=chunk_start,
-                                       window=window)
+                                       window=window, paged_attn=paged_attn)
         elif block == "mla":
             y, new_cache = L.mla_attention(p["attn"], ctx, f"{scope}/attn",
                                            cfg.mla_cfg, hn, positions,
                                            cache=cache, cache_pos=cache_pos,
                                            block_tables=block_tables,
                                            chunk_valid=chunk_valid,
-                                           chunk_start=chunk_start)
+                                           chunk_start=chunk_start,
+                                           paged_attn=paged_attn)
         elif block == "mamba":
             if decode:
                 y, new_cache = M.apply_mamba_decode(p["mamba"], ctx,
@@ -273,7 +275,8 @@ class LM:
                                     cache=a_cache, cache_pos=cache_pos,
                                     block_tables=block_tables,
                                     chunk_valid=chunk_valid,
-                                    chunk_start=chunk_start, window=window)
+                                    chunk_start=chunk_start, window=window,
+                                    paged_attn=paged_attn)
             if decode:
                 ym, m_new = M.apply_mamba_decode(p["mamba"], ctx,
                                                  f"{scope}/mamba", cfg.ssm,
@@ -306,7 +309,8 @@ class LM:
                   cache_pos=None, decode: bool = False,
                   block_tables: Optional[jax.Array] = None,
                   chunk_valid: Optional[jax.Array] = None,
-                  chunk_start: Optional[jax.Array] = None):
+                  chunk_start: Optional[jax.Array] = None,
+                  paged_attn: str = "fused"):
         """Run all layers. caches: {"layers/i" or "segments/s": cache pytree}."""
         from repro.distributed.sharding import shard_hint
         cfg = self.cfg
@@ -331,7 +335,8 @@ class LM:
                         p_i, ctx, f"segments/{s}", sig, h_, positions,
                         window=win_i, cache=cache_i, cache_pos=cache_pos,
                         decode=decode, block_tables=block_tables,
-                        chunk_valid=chunk_valid, chunk_start=chunk_start)
+                        chunk_valid=chunk_valid, chunk_start=chunk_start,
+                        paged_attn=paged_attn)
                     return (h_, aux_ + aux_i), c_new
 
                 if cfg.remat:
@@ -379,7 +384,8 @@ class LM:
                                        decode=decode,
                                        block_tables=block_tables,
                                        chunk_valid=chunk_valid,
-                                       chunk_start=chunk_start)
+                                       chunk_start=chunk_start,
+                                       paged_attn=paged_attn)
 
                 if cfg.remat:
                     body = jax.checkpoint(body)
@@ -682,12 +688,16 @@ class LM:
 
     def decode_step(self, params: dict, token: jax.Array, pos: jax.Array,
                     caches: dict, ctx: QuantContext, *,
-                    block_tables: Optional[jax.Array] = None):
+                    block_tables: Optional[jax.Array] = None,
+                    paged_attn: str = "fused"):
         """One token for every sequence. token: (B,1); pos: scalar int32 for
         a lock-step batch, or (B,) int32 with one position per sequence
         (continuous batching: every cache slot decodes at its own depth).
         ``block_tables`` (B, max_blocks) switches attention caches to the
-        paged layout (shared across layers; SSM state stays slot-major)."""
+        paged layout (shared across layers; SSM state stays slot-major);
+        each row's per-row length is its position + 1, which the default
+        fused paged-attention kernel masks against — ``paged_attn="gather"``
+        selects the reference gather-then-attend path instead."""
         emb = jnp.take(params["embed"]["w"], token, axis=0).astype(self.dtype)
         B = token.shape[0]
         pos = jnp.asarray(pos, jnp.int32)
@@ -697,7 +707,8 @@ class LM:
             positions = jnp.broadcast_to(pos[None, None], (B, 1))
         h, caches, _ = self._backbone(params, ctx, emb, positions,
                                       caches=caches, cache_pos=pos,
-                                      decode=True, block_tables=block_tables)
+                                      decode=True, block_tables=block_tables,
+                                      paged_attn=paged_attn)
         logits = self._head(params, ctx, h)
         return logits, caches
 

@@ -270,6 +270,76 @@ def paged_gather(cache: dict, block_tables: jax.Array, dtype) -> tuple:
     return out, kp
 
 
+def use_fused_paged(ctx: QuantContext, scope: str, paged_attn: str) -> bool:
+    """THE paged-decode kernel switch: every call site (attention and MLA)
+    funnels through this one predicate, so gather-vs-fused policy lives in
+    exactly one place.
+
+    The fused kernel replaces the reference path's two quantizable BGEMMs
+    (``qk_matmul`` / ``av_matmul``) with in-kernel math, so it only serves
+    layers where those ops run at full precision; a layer whose attention
+    BGEMMs carry an MP format keeps the gather path and its exact
+    quantization semantics. Probe mode and op-inventory traces also need the
+    ``qops`` entry points (probe injection / OpInfo registration), so they
+    stay on the reference path too.
+    """
+    assert paged_attn in ("fused", "gather"), paged_attn
+    if paged_attn != "fused":
+        return False
+    if ctx.mode == "probe" or ctx.registry is not None:
+        return False
+    if ctx.mode == "mp":
+        from repro.quant.formats import get_format
+        for op in ("qk_matmul", "av_matmul"):
+            if get_format(ctx.format_for(f"{scope}/{op}")).is_quantized:
+                return False
+    return True
+
+
+def paged_update_attend(cache: dict, tensors: dict, block_tables: jax.Array,
+                        positions: jax.Array, cache_pos, chunk_valid,
+                        dtype, *, fused: bool) -> tuple:
+    """Single entry point for every paged-cache attention interaction.
+
+    Writes the fresh K/V — one decode token (``cache_pos``) or a whole
+    prefill chunk (``chunk_valid``) — into physical blocks, then either
+    gathers the logical ``(B, S)`` layout (returns ``(new_cache, g, kp)``)
+    or, for a fused decode step, returns ``(new_cache, None, None)`` so the
+    caller attends block-major KV in place via the Pallas kernel. The
+    chunked-prefill continuation always gathers: its multi-token queries
+    must attend every earlier chunk through the logical layout.
+    """
+    if chunk_valid is not None:
+        new_cache = paged_write_chunk(cache, tensors, block_tables,
+                                      positions, chunk_valid)
+    else:
+        assert cache_pos is not None, "paged attention is decode-only"
+        new_cache = paged_write(cache, tensors, block_tables, cache_pos)
+        if fused:
+            return new_cache, None, None
+    g, kp = paged_gather(new_cache, block_tables, dtype)
+    return new_cache, g, kp
+
+
+def _fused_paged_attention(cfg: AttnConfig, q: jax.Array, cache: dict,
+                           block_tables: jax.Array, positions: jax.Array,
+                           window) -> jax.Array:
+    """GQA decode against block-major K/V: one kernel call per layer, no
+    ``(B, S)`` gather. ``window`` may be None, int, or a traced scalar
+    (scan-mode per-layer windows). Returns (B, 1, H, Dv)."""
+    from repro.kernels.paged_attention import paged_decode_attention
+    B, T, H, D = q.shape
+    assert T == 1, "fused paged attention is single-query decode"
+    Hkv = cfg.n_kv_heads
+    qk = q.reshape(B, Hkv, H // Hkv, D)
+    lengths = positions[:, 0] + 1
+    o = paged_decode_attention(
+        qk, cache["k"], cache["v"], block_tables, lengths, window=window,
+        scale=math.sqrt(D), scale_mode="div", score_dtype=q.dtype,
+        probs_dtype=q.dtype, out_dtype=q.dtype)
+    return o.reshape(B, 1, H, o.shape[-1])
+
+
 def _split_heads(x: jax.Array, n: int, d: int) -> jax.Array:
     return x.reshape(*x.shape[:-1], n, d)
 
@@ -379,14 +449,21 @@ def attention(p: dict, ctx: QuantContext, scope: str, cfg: AttnConfig,
               chunk_valid: Optional[jax.Array] = None,
               chunk_start: Optional[jax.Array] = None,
               window: Union[None, int, jax.Array] = "cfg",
-              cross: bool = False):
+              cross: bool = False, paged_attn: str = "fused"):
     """Returns (y, new_cache).
 
     * self-attention:  default. K/V come from ``x`` and are written into
       ``cache`` when given (prefill: cache_pos None; decode: scalar pos).
     * paged decode: ``block_tables`` given with a block-major ``cache`` —
-      the new token is scattered into its row's page and K/V are gathered
-      back into logical order before the (identical) attention math.
+      the new token is scattered into its row's page and, with
+      ``paged_attn="fused"`` (the default), attended *in place* by the
+      Pallas paged-attention kernel (block-table indirection in-kernel, HBM
+      traffic proportional to live tokens). ``paged_attn="gather"`` keeps
+      the reference path: K/V gathered back into logical ``(B, S)`` order
+      before the (identical) attention math. Layers whose attention BGEMMs
+      carry an MP format, probe/registry traces, and chunked-prefill
+      continuation always take the gather path (see
+      :func:`use_fused_paged`).
     * chunked/bucketed prefill: ``chunk_valid`` (B, T) marks real tokens in
       a padded chunk starting at ``chunk_start`` (B,). Paged: the chunk is
       written straight into physical blocks and attention runs over the
@@ -409,6 +486,7 @@ def attention(p: dict, ctx: QuantContext, scope: str, cfg: AttnConfig,
 
     new_cache = cache
     causal = cfg.causal
+    y_fused = None
     if cross:
         causal = False
         if kv_x is not None:
@@ -434,30 +512,32 @@ def attention(p: dict, ctx: QuantContext, scope: str, cfg: AttnConfig,
             sin, cos = rope_table(positions, D, cfg.rope_theta)
             q = apply_rope(q, sin, cos)
             k = apply_rope(k, sin, cos)
-        if cache is not None and chunk_valid is not None:
-            if block_tables is not None:
-                # paged prefill chunk: write blocks directly, attend over the
-                # gathered logical layout (continuation sees earlier chunks)
-                new_cache = paged_write_chunk(cache, {"k": k, "v": v},
-                                              block_tables, positions,
-                                              chunk_valid)
-                g, kp = paged_gather(new_cache, block_tables, x.dtype)
-                k, v = g["k"], g["v"]
+        if cache is not None and block_tables is not None:
+            # paged: a prefill chunk or decode token written straight into
+            # physical blocks. Decode attends them in place via the fused
+            # kernel when eligible; chunk continuation (and the gather
+            # fallback) attends the gathered logical layout, so a
+            # continuation chunk sees every earlier chunk's keys.
+            fused = (chunk_valid is None and causal
+                     and use_fused_paged(ctx, scope, paged_attn))
+            new_cache, g, kp = paged_update_attend(
+                cache, {"k": k, "v": v}, block_tables, positions, cache_pos,
+                chunk_valid, x.dtype, fused=fused)
+            if g is None:
+                y_fused = _fused_paged_attention(cfg, q, new_cache,
+                                                 block_tables, positions,
+                                                 window)
             else:
-                # dense bucketed prefill: masked ring write, local attention
-                # over the cache-dtype-rounded fresh K/V (flash-capable)
-                new_cache = _cache_write_chunk(cache, {"k": k, "v": v},
-                                               positions, chunk_valid,
-                                               chunk_start)
-                k = _cache_roundtrip(k, cache["k"], x.dtype)
-                v = _cache_roundtrip(v, cache["v"], x.dtype)
-                kp = positions
-        elif cache is not None and block_tables is not None:
-            assert cache_pos is not None, "paged attention is decode-only"
-            new_cache = paged_write(cache, {"k": k, "v": v}, block_tables,
-                                    cache_pos)
-            g, kp = paged_gather(new_cache, block_tables, x.dtype)
-            k, v = g["k"], g["v"]
+                k, v = g["k"], g["v"]
+        elif cache is not None and chunk_valid is not None:
+            # dense bucketed prefill: masked ring write, local attention
+            # over the cache-dtype-rounded fresh K/V (flash-capable)
+            new_cache = _cache_write_chunk(cache, {"k": k, "v": v},
+                                           positions, chunk_valid,
+                                           chunk_start)
+            k = _cache_roundtrip(k, cache["k"], x.dtype)
+            v = _cache_roundtrip(v, cache["v"], x.dtype)
+            kp = positions
         elif cache is not None:
             new_cache = _cache_write(cache, {"k": k, "v": v}, positions, cache_pos)
             if cache_pos is not None:
@@ -473,7 +553,8 @@ def attention(p: dict, ctx: QuantContext, scope: str, cfg: AttnConfig,
                 kp = positions
         else:
             kp = positions
-        mask = _mask_from_pos(positions, kp, causal, window, None)
+        mask = (None if y_fused is not None else
+                _mask_from_pos(positions, kp, causal, window, None))
 
     # flash for self-attention prefill/training, and for unmasked
     # cross-attention (encoder-decoder at long frame counts)
@@ -481,12 +562,15 @@ def attention(p: dict, ctx: QuantContext, scope: str, cfg: AttnConfig,
     # prompt across flash_min_seq into a different summation order than its
     # unpadded reference (engines route bucket >= flash_min_seq prompts to
     # the legacy per-length prefill instead)
-    use_flash = (cache_pos is None and T >= cfg.flash_min_seq
+    use_flash = (y_fused is None and cache_pos is None
+                 and T >= cfg.flash_min_seq
                  and ctx.mode != "probe" and block_tables is None
                  and chunk_valid is None
                  and ((not cross and T == k.shape[1])
                       or (cross and kv_x is not None and kv_valid is None)))
-    if use_flash:
+    if y_fused is not None:
+        y = y_fused
+    elif use_flash:
         from repro.nn.flash import flash_attention
         y = flash_attention(ctx, scope, q, k, v, positions,
                             causal=causal and not cross,
@@ -605,11 +689,15 @@ def mla_attention(p: dict, ctx: QuantContext, scope: str, cfg: MLAConfig,
                   cache_pos: Optional[jax.Array] = None,
                   block_tables: Optional[jax.Array] = None,
                   chunk_valid: Optional[jax.Array] = None,
-                  chunk_start: Optional[jax.Array] = None):
+                  chunk_start: Optional[jax.Array] = None,
+                  paged_attn: str = "fused"):
     """MLA; latent KV cache {"ckv","kr","pos"}; returns (y, new_cache).
     ``chunk_valid``/``chunk_start`` select chunked/bucketed prefill (see
     :func:`attention`); chunk attention always uses the expanded (non-
-    absorbed) path, matching one-shot prefill."""
+    absorbed) path, matching one-shot prefill. Paged *absorbed* decode takes
+    the fused kernel by default (``paged_attn="fused"``), scoring/attending
+    the block-major latents in place; the expanded decode path re-expands
+    per-head K/V over the whole cache and therefore always gathers."""
     B, T, _ = x.shape
     H = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -629,27 +717,28 @@ def mla_attention(p: dict, ctx: QuantContext, scope: str, cfg: MLAConfig,
     kr = apply_rope(kr[:, :, None, :], sin, cos)[:, :, 0, :]
 
     new_cache = cache
-    if cache is not None and chunk_valid is not None:
-        if block_tables is not None:
-            new_cache = paged_write_chunk(cache, {"ckv": ckv, "kr": kr},
-                                          block_tables, positions, chunk_valid)
-            g, kp = paged_gather(new_cache, block_tables, x.dtype)
-            ckv, kr = g["ckv"], g["kr"]
-        else:
-            new_cache = _cache_write_chunk(cache, {"ckv": ckv, "kr": kr},
-                                           positions, chunk_valid, chunk_start)
-            ckv = _cache_roundtrip(ckv, cache["ckv"], x.dtype)
-            kr = _cache_roundtrip(kr, cache["kr"], x.dtype)
-            kp = positions
-    elif cache is not None and block_tables is not None:
-        assert cache_pos is not None, "paged MLA is decode-only"
-        new_cache = paged_write(cache, {"ckv": ckv, "kr": kr}, block_tables,
-                                cache_pos)
-        g, kp = paged_gather(new_cache, block_tables, x.dtype)
+    if cache is not None and block_tables is not None:
+        # paged: fused absorbed decode scores the block-major latents in
+        # place; chunk continuation and the expanded/fallback paths gather
+        fused = (chunk_valid is None and cfg.absorb_decode
+                 and use_fused_paged(ctx, scope, paged_attn))
+        new_cache, g, kp = paged_update_attend(
+            cache, {"ckv": ckv, "kr": kr}, block_tables, positions,
+            cache_pos, chunk_valid, x.dtype, fused=fused)
+        if g is None:
+            return _mla_decode_absorbed_paged(p, ctx, scope, cfg, qn, qr,
+                                              new_cache, block_tables,
+                                              positions)
         ckv, kr = g["ckv"], g["kr"]
-        if cfg.absorb_decode:
+        if chunk_valid is None and cfg.absorb_decode:
             return _mla_decode_absorbed(p, ctx, scope, cfg, qn, qr, ckv,
                                         kr, positions, kp, new_cache)
+    elif cache is not None and chunk_valid is not None:
+        new_cache = _cache_write_chunk(cache, {"ckv": ckv, "kr": kr},
+                                       positions, chunk_valid, chunk_start)
+        ckv = _cache_roundtrip(ckv, cache["ckv"], x.dtype)
+        kr = _cache_roundtrip(kr, cache["kr"], x.dtype)
+        kp = positions
     elif cache is not None:
         new_cache = _cache_write(cache, {"ckv": ckv, "kr": kr}, positions,
                                  cache_pos)
@@ -729,6 +818,42 @@ def _mla_decode_absorbed(p, ctx, scope, cfg: MLAConfig, qn, qr, ckv, kr,
     # context in latent space, then expand through W_uv (av_matmul analogue)
     ctx_lat = qops.bgemm(ctx, f"{scope}/av_matmul", "BHTS,BSr->BTHr", probs,
                          ckv.astype(jnp.float32))
+    y = qops.qeinsum(ctx, f"{scope}/v_absorb", "BTHr,Hvr->BTHv", ctx_lat,
+                     w_uv, kind="linear")
+    y = y.reshape(B, T, H * dv).astype(qn.dtype)
+    y = qops.linear(ctx, f"{scope}/o_proj", y, p["o_proj"]["w"])
+    return y, new_cache
+
+
+def _mla_decode_absorbed_paged(p, ctx, scope, cfg: MLAConfig, qn, qr,
+                               new_cache, block_tables, positions):
+    """Fused-kernel twin of :func:`_mla_decode_absorbed`: the latent scores
+    (``q_lat . ckv + qr . kr``) and the latent context are computed directly
+    against the block-major latent cache — MQA-shaped (one shared KV "head",
+    H query heads), values taken from the same ``ckv`` blocks as the keys.
+    The absorb GEMMs (``q_absorb`` / ``v_absorb``) stay on ``qops`` so their
+    MP formats and op names are untouched; the in-kernel math mirrors the
+    reference bitwise up to f32 summation order."""
+    import math as _math
+    from repro.kernels.paged_attention import paged_decode_attention
+    B, T, H, dn = qn.shape
+    assert T == 1, "fused paged MLA is single-query decode"
+    r = cfg.kv_lora_rank
+    dv = cfg.v_head_dim
+    wkv = p["kv_b_proj"]["w"].reshape(H, dn + dv, r).astype(jnp.float32)
+    w_uk, w_uv = wkv[:, :dn, :], wkv[:, dn:, :]
+    q_lat = qops.qeinsum(ctx, f"{scope}/q_absorb", "BTHh,Hhr->BTHr",
+                         qn.astype(jnp.float32), w_uk, kind="linear")
+    lengths = positions[:, 0] + 1
+    ctx_lat = paged_decode_attention(
+        q_lat.reshape(B, 1, H, r),                      # (B, Hkv=1, G=H, r)
+        new_cache["ckv"][:, :, None, :], None,          # v = ckv (latent)
+        block_tables, lengths,
+        q2=qr.astype(jnp.float32).reshape(B, 1, H, cfg.qk_rope_dim),
+        k2=new_cache["kr"][:, :, None, :],
+        scale=1.0 / _math.sqrt(dn + cfg.qk_rope_dim), scale_mode="mul",
+        out_dtype=jnp.float32)
+    ctx_lat = ctx_lat.reshape(B, T, H, r)
     y = qops.qeinsum(ctx, f"{scope}/v_absorb", "BTHr,Hvr->BTHv", ctx_lat,
                      w_uv, kind="linear")
     y = y.reshape(B, T, H * dv).astype(qn.dtype)

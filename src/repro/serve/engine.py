@@ -20,9 +20,15 @@ attention caches are block-major (``PagedCachePool``), admission is
 block-budget-aware (a request only enters when its worst-case block need is
 coverable — otherwise it queues, the backpressure path), and the compiled
 decode step takes the per-slot block tables. ``paged=False`` keeps the dense
-per-slot rings for comparison. Token parity with the dense/one-shot path is
-exact either way: the paged gather reproduces the dense key layout in
-logical order, and the causal mask hides everything else.
+per-slot rings for comparison. Paged decode attention defaults to the
+**fused** Pallas kernel (``paged_attn="fused"``): block-table indirection is
+resolved in-kernel and each step reads only live KV blocks (fp8 caches
+dequantized in-register), instead of the ``paged_attn="gather"`` reference
+path that materializes the full ``(B, max_blocks * block_size)`` K/V per
+layer. Token parity with the dense/one-shot path is exact either way: the
+fused kernel reproduces the reference softmax numerics (two-phase, final
+max/denominator), the paged gather reproduces the dense key layout in
+logical order, and the causal mask / length masking hides everything else.
 
 Prefill is **length-bucketed** in both engines: prompts are padded to a
 power-of-two bucket with masked attention/state updates, so admission
@@ -254,13 +260,20 @@ class ContinuousBatchingEngine:
     waits more than ``chunk_budget`` steps while a long prompt prefills
     (``ServeSummary.counters``: ``prefill_chunks``, ``decode_stall_steps``,
     ``max_decode_stall_run``, stall percentiles).
+
+    ``paged_attn`` (paged only) selects the decode-attention implementation:
+    ``"fused"`` (default) runs the Pallas paged-attention kernel directly
+    over the block-major cache; ``"gather"`` keeps the reference
+    gather-then-attend path. Greedy tokens are identical; the counters
+    ``decode_attn_bytes_{read,fused_model,gather_model}`` expose the
+    live-vs-capacity HBM-read gap between the two.
     """
 
     def __init__(self, model, n_slots: int = 4, max_len: int = 512,
                  mp=None, donate: bool = False, paged: bool = True,
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  chunk_len: Optional[int] = None, chunk_budget: int = 1,
-                 min_bucket: int = 8):
+                 min_bucket: int = 8, paged_attn: Optional[str] = None):
         if getattr(model, "cache_needs_enc_len", False):
             raise NotImplementedError(
                 "continuous batching currently serves decoder-only LMs")
@@ -271,6 +284,15 @@ class ContinuousBatchingEngine:
         if not paged and n_blocks is not None:
             raise ValueError("n_blocks only applies to paged mode; drop it "
                              "or remove paged=False")
+        if paged_attn is not None and not paged:
+            raise ValueError("paged_attn selects the paged decode-attention "
+                             "implementation; drop it or remove paged=False")
+        if paged_attn is None:
+            paged_attn = "fused"
+        if paged_attn not in ("fused", "gather"):
+            raise ValueError(f"paged_attn must be 'fused' or 'gather', got "
+                             f"{paged_attn!r}")
+        self.paged_attn = paged_attn
         if chunk_len is not None:
             if not paged:
                 raise ValueError(
@@ -297,8 +319,12 @@ class ContinuousBatchingEngine:
         mk_prefill = (make_chunked_prefill_step if paged
                       else make_bucketed_prefill_step)
         self.prefill_chunk_step = jax.jit(mk_prefill(model, mp=self.mp))
-        mk = make_paged_decode_step if paged else make_decode_step
-        self.decode_step = jax.jit(mk(model, mp=self.mp), donate_argnums=d)
+        if paged:
+            step = make_paged_decode_step(model, mp=self.mp,
+                                          paged_attn=paged_attn)
+        else:
+            step = make_decode_step(model, mp=self.mp)
+        self.decode_step = jax.jit(step, donate_argnums=d)
         # compile-economy bookkeeping (persists across serve() calls, like
         # the jit compile cache it mirrors)
         self.prefill_compile_keys: set = set()
@@ -425,6 +451,13 @@ class ContinuousBatchingEngine:
         n_steps = 0
         decode_s = 0.0
         peak_queue = peak_live = peak_blocks = peak_slots = 0
+        # per-decode-step attention HBM read model (paged): the fused kernel
+        # fetches each running row's live pages (plus at most one trash-block
+        # fetch per row whose tail pages are dead — consecutive dead pages
+        # revisit block 0 and their copies are elided); the gather path
+        # materializes every table slot of every row, so its traffic scales
+        # with provisioned capacity
+        attn_pages_fused = attn_pages_gather = live_token_steps = 0
         prefill_chunks = decode_stall_steps = max_stall_run = stall_run = 0
         stall_s_run = 0.0
         stall_s: list = []            # per-decode-step injected prefill time
@@ -461,11 +494,19 @@ class ContinuousBatchingEngine:
                         pool.ensure_block(slot, st.next_pos)
                 # live tokens after this step: everything written so far
                 # (next_pos) plus the write this step performs
-                peak_live = max(peak_live, sum(
-                    st.next_pos + 1 for st in sched.running.values()))
+                live_now = sum(st.next_pos + 1
+                               for st in sched.running.values())
+                peak_live = max(peak_live, live_now)
                 peak_slots = max(peak_slots, len(sched.running))
                 if self.paged:
                     peak_blocks = max(peak_blocks, pool.blocks_in_use)
+                    live_token_steps += live_now
+                    pages = {s: -(-(st.next_pos + 1) // pool.block_size)
+                             for s, st in sched.running.items()}
+                    attn_pages_fused += sum(pages.values()) + sum(
+                        1 for s in range(self.n_slots)
+                        if pages.get(s, 0) < pool.max_blocks)
+                    attn_pages_gather += self.n_slots * pool.max_blocks
                 t0 = time.perf_counter()
                 if self.paged:
                     # decode sees block tables only for *running* rows: a
@@ -534,7 +575,22 @@ class ContinuousBatchingEngine:
                 free_blocks_final=pool.n_free_blocks,
                 kv_bytes_per_block=blk_bytes,
                 peak_kv_bytes=(peak_blocks * blk_bytes
-                               + self.n_slots * slot_bytes))
+                               + self.n_slots * slot_bytes),
+                # modeled per-drain attention K/V HBM reads across all
+                # decode steps: what the active path read, plus both models
+                # so one run exposes the fused-vs-gather ratio. Live tokens
+                # summed per step (vs the provisioned per-step capacity)
+                # give the occupancy these byte models scale with.
+                paged_attn=self.paged_attn,
+                decode_attn_bytes_read=(
+                    attn_pages_fused if self.paged_attn == "fused"
+                    else attn_pages_gather) * blk_bytes,
+                decode_attn_bytes_fused_model=attn_pages_fused * blk_bytes,
+                decode_attn_bytes_gather_model=attn_pages_gather * blk_bytes,
+                decode_live_token_steps=live_token_steps,
+                decode_capacity_token_steps=(n_steps * self.n_slots
+                                             * pool.max_blocks
+                                             * pool.block_size))
         else:
             counters["peak_kv_bytes"] = counters["dense_kv_bytes"]
         # throughput over the decode phase only: each request's first token

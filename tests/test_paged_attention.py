@@ -1,0 +1,332 @@
+"""Fused paged-attention decode kernel vs the gather reference.
+
+The masking invariant under test: the kernel must never *use* a key past a
+row's logical length — dead block-table entries (unallocated -1 or stale ids
+left by freed slots) and the garbage tail of the last live block must not
+leak into the output. Stale-referenced blocks are poisoned with huge finite
+garbage for cross-path comparisons (and with NaN for the kernel-only
+never-fetched test), so any out-of-length read that survives masking throws
+the comparison far outside tolerance.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.paged_attention import paged_decode_attention
+from repro.nn import layers as L
+from repro.quant.qops import QuantContext
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - exercised on minimal images
+    HAS_HYPOTHESIS = False
+
+
+def _random_paged_case(seed, *, B, n_pages, bs, dtype, vacant_row=True,
+                       stale_entries=True):
+    """Cache + block tables with every hazard the pool can produce: rows of
+    different lengths, unallocated (-1) entries, stale entries pointing at
+    NaN-poisoned blocks, and a vacant row (all -1, length 1 — the engine's
+    garbage-row shape, which must read only the trash block 0)."""
+    rng = np.random.default_rng(seed)
+    live_budget = B * n_pages
+    n_blocks = 1 + live_budget + 4          # trash + live + 4 poison blocks
+    lengths = rng.integers(1, n_pages * bs + 1, size=B).astype(np.int32)
+    if vacant_row:
+        lengths[-1] = 1
+    perm = rng.permutation(np.arange(1, 1 + live_budget))
+    poison = np.arange(1 + live_budget, n_blocks)
+    tables = np.full((B, n_pages), -1, np.int32)
+    c = 0
+    for b in range(B):
+        if vacant_row and b == B - 1:
+            continue                         # vacant: all entries stay -1
+        for pg in range(-(-int(lengths[b]) // bs)):
+            tables[b, pg] = perm[c]
+            c += 1
+        if stale_entries:                    # dead entries may be stale ids
+            for pg in range(-(-int(lengths[b]) // bs), n_pages):
+                if rng.random() < 0.5:
+                    tables[b, pg] = rng.choice(poison)
+    return n_blocks, jnp.asarray(tables), jnp.asarray(lengths), poison, rng
+
+
+POISON = 224.0   # huge-but-finite garbage, inside the fp8_e4m3 range: the
+# gather reference multiplies exactly-zero probs into gathered stale blocks
+# (0 * NaN would be NaN there), so cross-path comparisons need finite poison;
+# test_kernel_ignores_nan_in_unreferenced_blocks asserts the kernel's
+# stronger never-fetches-them property with real NaN.
+
+
+def _fill(rng, shape, dtype, poison_blocks, value=POISON):
+    x = rng.normal(size=shape).astype(np.float32)
+    if len(poison_blocks):
+        x[np.asarray(poison_blocks, np.int64)] = value
+    return jnp.asarray(x).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float8_e4m3fn])
+@pytest.mark.parametrize("window", [None, 7])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_kernel_matches_gather_reference(dtype, window, seed):
+    B, Hkv, G, Dk = 3, 2, 2, 32
+    n_pages, bs = 5, 4
+    n_blocks, bt, lengths, poison, rng = _random_paged_case(
+        seed, B=B, n_pages=n_pages, bs=bs, dtype=dtype)
+    k = _fill(rng, (n_blocks, bs, Hkv, Dk), dtype, poison)
+    v = _fill(rng, (n_blocks, bs, Hkv, Dk), dtype, poison)
+    q = jnp.asarray(rng.normal(size=(B, Hkv, G, Dk)), jnp.bfloat16)
+    kw = dict(window=window, scale=math.sqrt(Dk), scale_mode="div",
+              score_dtype=jnp.bfloat16, probs_dtype=jnp.bfloat16,
+              out_dtype=jnp.bfloat16)
+    got = paged_decode_attention(q, k, v, bt, lengths, interpret=True, **kw)
+    want = ref.paged_decode_attention_ref(q, k, v, bt, lengths, **kw)
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    assert np.all(np.isfinite(got)), "stale/dead entries leaked into output"
+    # f32-summation-order tolerance only: a masking leak shows up as NaN or
+    # a wildly wrong row, not a sub-percent wiggle (bitwise parity against
+    # the in-repo gather path is asserted in test_layer_fused_matches_gather)
+    np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-5)
+
+
+def test_kernel_ignores_nan_in_unreferenced_blocks():
+    """The kernel must never *fetch* a block that only stale/dead table
+    entries point at: with NaN in those blocks, its output is finite and
+    bit-identical to the same case with them zeroed. (The gather reference
+    cannot pass this — it materializes every table slot and 0 * NaN = NaN —
+    which is exactly the hazard the in-kernel clamp removes.)"""
+    dtype = jnp.bfloat16
+    B, Hkv, G, Dk, n_pages, bs = 3, 2, 2, 32, 5, 4
+    n_blocks, bt, lengths, poison, rng = _random_paged_case(
+        2, B=B, n_pages=n_pages, bs=bs, dtype=dtype)
+    kw = dict(scale=math.sqrt(Dk), scale_mode="div",
+              score_dtype=jnp.bfloat16, probs_dtype=jnp.bfloat16,
+              out_dtype=jnp.bfloat16)
+
+    def run(poison_value):
+        r = np.random.default_rng(99)
+        k = _fill(r, (n_blocks, bs, Hkv, Dk), dtype, poison, poison_value)
+        v = _fill(r, (n_blocks, bs, Hkv, Dk), dtype, poison, poison_value)
+        q = jnp.asarray(r.normal(size=(B, Hkv, G, Dk)), jnp.bfloat16)
+        return np.asarray(paged_decode_attention(
+            q, k, v, bt, lengths, interpret=True, **kw), np.float32)
+
+    with_nan = run(np.nan)
+    assert np.all(np.isfinite(with_nan)), "kernel fetched a stale/dead block"
+    np.testing.assert_array_equal(with_nan, run(0.0))
+
+
+def test_kernel_never_reads_past_length_exact_boundary():
+    """Length exactly at a page boundary, mid-page, and 1: the first masked
+    position sits in a NaN-free block's garbage tail as well as in poisoned
+    stale blocks — output must equal a reference computed from a cache whose
+    out-of-length entries were overwritten with a *different* value."""
+    B, Hkv, G, Dk, n_pages, bs = 3, 1, 2, 16, 4, 4
+    rng = np.random.default_rng(3)
+    n_blocks = 1 + B * n_pages
+    lengths = jnp.asarray([8, 5, 1], jnp.int32)    # boundary, mid-page, min
+    bt = np.full((B, n_pages), -1, np.int32)
+    ids = iter(range(1, n_blocks))
+    for b in range(B):
+        for pg in range(-(-int(lengths[b]) // bs)):
+            bt[b, pg] = next(ids)
+    bt = jnp.asarray(bt)
+    k = rng.normal(size=(n_blocks, bs, Hkv, Dk)).astype(np.float32)
+    v = rng.normal(size=(n_blocks, bs, Hkv, Dk)).astype(np.float32)
+    q = jnp.asarray(rng.normal(size=(B, Hkv, G, Dk)), jnp.bfloat16)
+    kw = dict(scale=math.sqrt(Dk), scale_mode="div",
+              score_dtype=jnp.bfloat16, probs_dtype=jnp.bfloat16,
+              out_dtype=jnp.bfloat16)
+
+    def run(karr, varr):
+        return np.asarray(paged_decode_attention(
+            q, jnp.asarray(karr, jnp.bfloat16), jnp.asarray(varr,
+            jnp.bfloat16), bt, lengths, interpret=True, **kw), np.float32)
+
+    base = run(k, v)
+    k2, v2 = k.copy(), v.copy()
+    for b in range(B):                       # scribble every dead position
+        for pos in range(int(lengths[b]), n_pages * bs):
+            pg, off = divmod(pos, bs)
+            blk = int(bt[b, pg])
+            if blk >= 0:
+                k2[blk, off] = 1e4
+                v2[blk, off] = -1e4
+    np.testing.assert_array_equal(base, run(k2, v2))
+
+
+def test_kernel_mla_shape_and_scales():
+    """MLA-absorbed shape: Hkv=1, H query heads, rope second operand,
+    v = k (latent), multiplied scale, f32 all the way. Plus the fp8
+    per-tensor dequant scales path (k_scale/v_scale != 1)."""
+    B, H, r, dr = 2, 4, 24, 8
+    n_pages, bs = 4, 4
+    n_blocks, bt, lengths, poison, rng = _random_paged_case(
+        7, B=B, n_pages=n_pages, bs=bs, dtype=jnp.bfloat16)
+    ckv = _fill(rng, (n_blocks, bs, 1, r), jnp.bfloat16, poison)
+    kr = _fill(rng, (n_blocks, bs, 1, dr), jnp.bfloat16, poison)
+    q1 = jnp.asarray(rng.normal(size=(B, 1, H, r)), jnp.float32)
+    q2 = jnp.asarray(rng.normal(size=(B, 1, H, dr)), jnp.float32)
+    kw = dict(q2=q2, k2=kr, scale=1.0 / math.sqrt(r + dr), scale_mode="mul",
+              out_dtype=jnp.float32)
+    got = paged_decode_attention(q1, ckv, None, bt, lengths, interpret=True,
+                                 **kw)
+    want = ref.paged_decode_attention_ref(q1, ckv, None, bt, lengths, **kw)
+    got = np.asarray(got, np.float32)
+    assert np.all(np.isfinite(got))
+    np.testing.assert_allclose(got, np.asarray(want, np.float32),
+                               rtol=1e-4, atol=1e-6)
+
+    # fp8 cache with real per-tensor dequant scales
+    kq = _fill(rng, (16, bs, 1, r), jnp.float8_e4m3fn, [])
+    btq = jnp.asarray(np.arange(1, 1 + B * n_pages).reshape(B, n_pages))
+    ln = jnp.asarray([n_pages * bs, 3], jnp.int32)
+    kw = dict(scale=math.sqrt(r), scale_mode="div", k_scale=0.25,
+              v_scale=2.0, out_dtype=jnp.float32)
+    got = paged_decode_attention(q1, kq, None, btq, ln, interpret=True, **kw)
+    want = ref.paged_decode_attention_ref(q1, kq, None, btq, ln, **kw)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-4, atol=1e-6)
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 10_000), st.integers(1, 4), st.integers(2, 6),
+           st.sampled_from([2, 4, 8]), st.one_of(st.none(),
+                                                 st.integers(1, 24)))
+    def test_kernel_matches_reference_property(seed, B, n_pages, bs, window):
+        Hkv, G, Dk = 2, 2, 16
+        n_blocks, bt, lengths, poison, rng = _random_paged_case(
+            seed, B=B, n_pages=n_pages, bs=bs, dtype=jnp.bfloat16)
+        k = _fill(rng, (n_blocks, bs, Hkv, Dk), jnp.bfloat16, poison)
+        v = _fill(rng, (n_blocks, bs, Hkv, Dk), jnp.bfloat16, poison)
+        q = jnp.asarray(rng.normal(size=(B, Hkv, G, Dk)), jnp.bfloat16)
+        kw = dict(window=window, scale=math.sqrt(Dk), scale_mode="div",
+                  score_dtype=jnp.bfloat16, probs_dtype=jnp.bfloat16,
+                  out_dtype=jnp.bfloat16)
+        got = np.asarray(paged_decode_attention(q, k, v, bt, lengths,
+                                                interpret=True, **kw),
+                         np.float32)
+        assert np.all(np.isfinite(got))
+        np.testing.assert_allclose(
+            got, np.asarray(ref.paged_decode_attention_ref(
+                q, k, v, bt, lengths, **kw), np.float32),
+            rtol=1e-2, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# layer-level dispatch: the kernel switch lives in use_fused_paged
+# ---------------------------------------------------------------------------
+
+
+def _layer_attention_case(paged_attn, ctx=None, window=None):
+    cfg = L.AttnConfig(d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+                       window=window)
+    rng = np.random.default_rng(11)
+    specs = L.attn_specs("attn", cfg)
+    key = jax.random.key(0)
+    params = {}
+    for path, ps in specs.items():
+        key, sub = jax.random.split(key)
+        node = params
+        parts = path.split("/")[1:]
+        for q in parts[:-1]:
+            node = node.setdefault(q, {})
+        node[parts[-1]] = (jax.random.normal(sub, ps.shape, jnp.float32)
+                           * 0.05).astype(jnp.bfloat16)
+    B, bs, n_pages = 2, 4, 4
+    n_blocks = 1 + B * n_pages
+    cache = {"k": jnp.asarray(rng.normal(size=(n_blocks, bs, 2, 16)),
+                              jnp.bfloat16),
+             "v": jnp.asarray(rng.normal(size=(n_blocks, bs, 2, 16)),
+                              jnp.bfloat16)}
+    bt = jnp.asarray(np.arange(1, 1 + B * n_pages).reshape(B, n_pages))
+    x = jnp.asarray(rng.normal(size=(B, 1, 64)), jnp.bfloat16)
+    positions = jnp.asarray([[9], [4]], jnp.int32)
+    ctx = ctx or QuantContext()
+    y, new_cache = L.attention(params, ctx, "attn", cfg, x, positions,
+                               cache=cache, cache_pos=positions[:, 0],
+                               block_tables=bt, paged_attn=paged_attn)
+    return np.asarray(y, np.float32), new_cache
+
+
+@pytest.mark.parametrize("window", [None, 6])
+def test_layer_fused_matches_gather(window):
+    yf, cf = _layer_attention_case("fused", window=window)
+    yg, cg = _layer_attention_case("gather", window=window)
+    np.testing.assert_array_equal(yf, yg)
+    for name in ("k", "v"):                  # identical cache writes too
+        np.testing.assert_array_equal(np.asarray(cf[name], np.float32),
+                                      np.asarray(cg[name], np.float32))
+
+
+def test_scan_mode_traced_window_fused_decode():
+    """Scan-mode segments feed the kernel a *traced* per-layer window (a
+    scanned-over int32 mixing the real window with the BIG_WINDOW sentinel
+    for global layers): fused and gather decode must still agree bitwise."""
+    from repro.models.registry import get_model
+    model = get_model("qwen2p5_3b", smoke=True, n_layers=2, scan_layers=True,
+                      sliding_window=6, global_attn_layers=(1,))
+    params = model.init(jax.random.key(0))
+    ctx = QuantContext()
+    rng = np.random.default_rng(31)
+    B, bs, nb = 2, 4, 16
+    caches = model.init_paged_cache(B, nb, bs)
+    bt = np.full((B, 4), -1, np.int32)
+    ids = iter(range(1, nb))
+    lens = [9, 5]
+    for b in range(B):
+        for pg in range(-(-lens[b] // bs)):
+            bt[b, pg] = next(ids)
+    toks = jnp.asarray(rng.integers(0, 200, (B, 12)), jnp.int32)
+    _, caches = model.prefill_chunk(
+        params, toks, caches, ctx, start_pos=jnp.zeros((B,), jnp.int32),
+        valid_len=jnp.asarray(lens, jnp.int32), block_tables=jnp.asarray(bt))
+    for b in range(B):
+        pg = lens[b] // bs
+        if bt[b, pg] < 0:
+            bt[b, pg] = next(ids)
+    tok = jnp.asarray(rng.integers(0, 200, (B, 1)), jnp.int32)
+    outs = {}
+    for pa in ("fused", "gather"):
+        lg, _ = model.decode_step(params, tok, jnp.asarray(lens, jnp.int32),
+                                  caches, ctx, block_tables=jnp.asarray(bt),
+                                  paged_attn=pa)
+        outs[pa] = np.asarray(lg, np.float32)
+    np.testing.assert_array_equal(outs["fused"], outs["gather"])
+
+
+def test_fused_dispatch_predicate():
+    """The single switch: MP formats on the attention BGEMMs, probe mode,
+    and registry traces all force the gather path."""
+    ctx = QuantContext()
+    assert L.use_fused_paged(ctx, "layers/0/attn", "fused")
+    assert not L.use_fused_paged(ctx, "layers/0/attn", "gather")
+    mp_ctx = QuantContext(mode="mp",
+                          mp={"layers/0/attn/qk_matmul": "fp8_e4m3"})
+    assert not L.use_fused_paged(mp_ctx, "layers/0/attn", "fused")
+    assert L.use_fused_paged(mp_ctx, "layers/1/attn", "fused")
+    mp_ctx2 = QuantContext(mode="mp",
+                           mp={"layers/0/attn/av_matmul": "fp8_e5m2"})
+    assert not L.use_fused_paged(mp_ctx2, "layers/0/attn", "fused")
+    assert not L.use_fused_paged(QuantContext(mode="probe"), "x", "fused")
+    assert not L.use_fused_paged(QuantContext(registry=[]), "x", "fused")
+    with pytest.raises(AssertionError):
+        L.use_fused_paged(ctx, "x", "flash")
+
+
+def test_layer_mp_on_bgemm_falls_back_to_gather():
+    """A layer whose qk_matmul carries an MP format must produce the exact
+    quantized reference output even when paged_attn='fused' is requested."""
+    mp = {"attn/qk_matmul": "fp8_e4m3"}
+    ctx_mp = QuantContext(mode="mp", mp=mp, act_scale_token=True)
+    yf, _ = _layer_attention_case("fused", ctx=ctx_mp)
+    yg, _ = _layer_attention_case("gather", ctx=ctx_mp)
+    np.testing.assert_array_equal(yf, yg)

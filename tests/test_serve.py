@@ -1,8 +1,11 @@
 """Serving subsystem: continuous batching vs one-shot token parity, mid-decode
 admission, slot/block pool invariants, paged-KV allocator + backpressure,
-scheduler policy, the MPPlan handoff, and the chunked + length-bucketed
-prefill parity/property matrix (bit-exact greedy tokens across archs x KV
-dtypes x MP plans, bounded decode stall, incremental block reservation)."""
+scheduler policy, the MPPlan handoff, the fused paged-attention decode
+kernel vs the gather reference (identical greedy tokens across KV dtypes and
+MP plans — the paged default is now the fused kernel, so every paged test
+here exercises it), and the chunked + length-bucketed prefill
+parity/property matrix (bit-exact greedy tokens across archs x KV dtypes x
+MP plans, bounded decode stall, incremental block reservation)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -380,6 +383,70 @@ def test_impossible_request_fails_fast(model, params, prompts):
     with pytest.raises(ValueError, match="KV blocks"):
         eng.serve(params, [Request(rid=0, tokens=prompts[0],
                                    max_new_tokens=6)])
+
+
+def test_paged_attn_arg_validation(model):
+    with pytest.raises(ValueError, match="paged_attn"):
+        ContinuousBatchingEngine(model, paged=False, paged_attn="gather")
+    with pytest.raises(ValueError, match="paged_attn"):
+        ContinuousBatchingEngine(model, paged_attn="flash")
+
+
+# ---------------------------------------------------------------------------
+# fused paged-attention kernel vs gather reference (tentpole parity bar)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv", ["bfloat16", "fp8_e4m3"])
+@pytest.mark.parametrize("with_mp", [False, True],
+                         ids=["no_plan", "mp_plan"])
+def test_fused_vs_gather_paged_parity(arch_cache, kv, with_mp):
+    """The fused paged-attention decode kernel and the gather reference path
+    produce identical greedy tokens — and both match the one-shot engine —
+    across KV dtypes and MP plans. The MP plan quantizes a qk_matmul, so one
+    layer exercises the in-matrix gather fallback while the rest run fused;
+    the modeled per-drain attention reads must still be strictly below the
+    capacity-proportional gather model."""
+    model, params = arch_cache("attn", kv)
+    mp = _auto_mp(model, params) if with_mp else None
+    rng = np.random.default_rng(23)
+    ps = [rng.integers(0, 200, size=n).astype(np.int32) for n in (14, 9, 5)]
+    ref = _oneshot_reference(model, params, ps, max_new=5, mp=mp)
+    outs = {}
+    for pa in ("gather", "fused"):
+        eng = ContinuousBatchingEngine(model, n_slots=2, max_len=32,
+                                       block_size=4, mp=mp, paged_attn=pa)
+        reqs = [Request(rid=i, tokens=p, max_new_tokens=5, arrival=i)
+                for i, p in enumerate(ps)]
+        outs[pa] = eng.serve(params, reqs)
+        for i in range(len(ps)):
+            np.testing.assert_array_equal(
+                outs[pa].results[i].tokens, ref[i],
+                err_msg=f"{pa}/{kv}/mp={with_mp}")
+    c_f, c_g = outs["fused"].counters, outs["gather"].counters
+    assert c_f["paged_attn"] == "fused" and c_g["paged_attn"] == "gather"
+    assert c_f["decode_attn_bytes_read"] < c_g["decode_attn_bytes_read"]
+
+
+def test_fused_mla_absorbed_engine_parity():
+    """MLA *absorbed* decode through the fused kernel (MQA-shaped latent
+    scores computed against block-major latents in place) matches both the
+    gather-absorbed path and the one-shot engine."""
+    model = get_model("deepseek_v3_671b", smoke=True, moe_layers=(),
+                      mtp_depth=0, mla_absorb_decode=True)
+    params = model.init(jax.random.key(2))
+    rng = np.random.default_rng(5)
+    ps = [rng.integers(0, 200, size=n).astype(np.int32) for n in (11, 6)]
+    ref = _oneshot_reference(model, params, ps, max_new=4)
+    for pa in ("gather", "fused"):
+        eng = ContinuousBatchingEngine(model, n_slots=2, max_len=24,
+                                       block_size=4, paged_attn=pa)
+        reqs = [Request(rid=i, tokens=p, max_new_tokens=4)
+                for i, p in enumerate(ps)]
+        summ = eng.serve(params, reqs)
+        for i in range(len(ps)):
+            np.testing.assert_array_equal(summ.results[i].tokens, ref[i],
+                                          err_msg=pa)
 
 
 # ---------------------------------------------------------------------------
