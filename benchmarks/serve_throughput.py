@@ -10,11 +10,17 @@ distinct prompt lengths, and the p50/p99 decode-step stall injected while a
 deliberately long prompt prefills in chunks — and, since the fused
 paged-attention kernel, the per-decode-step attention KV bytes read:
 live-token-proportional for the fused kernel vs capacity-proportional for
-the gather reference path. The run fails if paged bytes/live-token is not
-strictly below dense, if fused attention reads are not strictly below
-gather at <= 50% occupancy, if bucketing does not cut prefill compilations
-by at least 2x on the mixed-length stream, if the decode stall exceeds the
-chunk budget, or if any engine pair disagrees on greedy tokens.
+the gather reference path — and, since the pipelined drain, the host/device
+overlap economics: host-blocked seconds per decode step for the lockstep
+(sync) vs pipelined engine on the same stream, readback batching, and peak
+pipeline depth, written to ``BENCH_serve.json``. The run fails if paged
+bytes/live-token is not strictly below dense, if fused attention reads are
+not strictly below gather at <= 50% occupancy, if bucketing does not cut
+prefill compilations by at least 2x on the mixed-length stream, if the
+decode stall exceeds the chunk budget, if the pipelined drain does not
+block the host strictly less per decode step than the lockstep drain (with
+streamed tokens bit-identical to it), or if any engine pair disagrees on
+greedy tokens.
 
 The one-shot baseline must wait for the whole batch to arrive before
 prefilling (batch-formation latency), so its effective TTFT for early
@@ -27,6 +33,7 @@ request the moment a slot (and, paged, its block budget) frees up.
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax.numpy as jnp
 import numpy as np
@@ -105,6 +112,9 @@ def main():
                          "request span: engines are provisioned for their "
                          "longest admissible request, and paging only pays "
                          "for live tokens inside that ceiling)")
+    ap.add_argument("--json", default="BENCH_serve.json",
+                    help="where to write the host/device overlap counters "
+                         "(sync vs pipelined drain)")
     args = ap.parse_args()
 
     model, params, data, _ = bench_model()
@@ -159,6 +169,64 @@ def main():
                 f"{bpl['paged']:.1f} not below dense {bpl['dense']:.1f}")
 
     chunked_prefill_economics(model, params, data, args)
+    pipeline_overlap_economics(model, params, reqs, args, max_len)
+
+
+def pipeline_overlap_economics(model, params, reqs, args, max_len):
+    """Lockstep (sync) vs pipelined drain on the same request stream: the
+    pipelined producer dispatches steps ahead of the host and must block
+    strictly less per decode step than the lockstep loop, whose every step
+    waits out a device->host token readback. Streamed tokens (the on_token
+    callback) must be bit-identical to the sync engine's results — the
+    overlap is free parity-wise. Both drains' counters go to --json."""
+    eng = ContinuousBatchingEngine(model, n_slots=args.n_slots,
+                                   max_len=max_len,
+                                   block_size=args.block_size)
+    eng.serve(params, [reqs[0]])                       # warmup (compile)
+    sync_out = eng.serve(params, reqs, sync=True)
+    streamed = {r.rid: [] for r in reqs}
+    async_out = eng.serve(
+        params, reqs,
+        on_token=lambda rid, idx, tok: streamed[rid].append(tok))
+    for r in reqs:
+        if not np.array_equal(np.asarray(streamed[r.rid], np.int32),
+                              sync_out.results[r.rid].tokens):
+            raise SystemExit(
+                f"pipelined-drain parity violation: rid {r.rid} streamed "
+                f"tokens differ from the sync engine")
+    cs, ca = sync_out.counters, async_out.counters
+    emit("serve_host_blocked_per_step_sync_us",
+         cs["host_blocked_s_per_step"] * 1e6,
+         f"{cs['n_readbacks']} per-step readbacks over {sync_out.n_steps} "
+         f"steps")
+    emit("serve_host_blocked_per_step_pipelined_us",
+         ca["host_blocked_s_per_step"] * 1e6,
+         f"{ca['n_readbacks']} batched readbacks (mean batch "
+         f"{ca['readback_batch_mean']:.1f}), device "
+         f"{ca['steps_in_flight_peak']} steps ahead at peak")
+    keep = ("sync", "host_blocked_s", "host_blocked_s_per_step",
+            "drain_wait_s", "n_readbacks", "readback_batch_max",
+            "readback_batch_mean", "steps_in_flight_peak", "n_cancelled")
+    payload = {
+        "requests": len(reqs), "n_slots": args.n_slots,
+        "new_tokens": args.new_tokens,
+        "sync": {k: cs[k] for k in keep},
+        "pipelined": {k: ca[k] for k in keep},
+        "n_steps": {"sync": sync_out.n_steps, "pipelined": async_out.n_steps},
+        "tokens_per_s": {"sync": sync_out.tokens_per_s,
+                         "pipelined": async_out.tokens_per_s},
+    }
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# host/device overlap counters written to {args.json}")
+    # the acceptance bar the pipeline restructure exists for: taking the
+    # readback off the critical path must shrink per-step host-blocked time
+    if ca["host_blocked_s_per_step"] >= cs["host_blocked_s_per_step"]:
+        raise SystemExit(
+            f"pipelining regression: pipelined drain blocked the host "
+            f"{ca['host_blocked_s_per_step'] * 1e6:.1f} us/step, not below "
+            f"the lockstep drain's "
+            f"{cs['host_blocked_s_per_step'] * 1e6:.1f} us/step")
 
 
 def attn_read_economics(paged, gather):

@@ -5,7 +5,7 @@ monolithic rings).
 
     PYTHONPATH=src python examples/serve_continuous.py \
         [--tau 0.01] [--n-slots 4] [--requests 8] [--new-tokens 12] \
-        [--block-size 8] [--n-blocks 24] [--no-mp] \
+        [--block-size 8] [--n-blocks 24] [--no-mp] [--sync] \
         [--chunk-len 16 --chunk-budget 1 --long-prompt-len 96] \
         [--paged-attn fused|gather] [--dump-tokens toks.json]
 
@@ -22,10 +22,14 @@ Pipeline shown here (the full plan->engine handoff):
      (``--long-prompt-len`` makes request 0 deliberately long to show the
      bounded-stall interleave).
 
-Exits non-zero unless every request completes, the continuous engine's
-greedy tokens exactly match the one-shot reference, AND — when chunking is
-on — no decode slot ever stalled more than ``--chunk-budget`` chunk steps.
-This is the contract the CI serve-smoke job enforces.
+The drain is pipelined by default (the device runs ahead of the host; a
+consumer thread lands token values — ``--sync`` keeps the legacy lockstep
+loop that reads every step back before dispatching the next). Exits
+non-zero unless every request completes, the continuous engine's greedy
+tokens exactly match the one-shot reference, AND — when chunking is on —
+no decode slot ever stalled more than ``--chunk-budget`` chunk steps.
+This is the contract the CI serve-smoke job enforces (including at the
+seed-era divergence-report shape: 3 requests x 16-token prompts).
 """
 import argparse
 
@@ -66,6 +70,9 @@ def main():
     ap.add_argument("--no-mp", action="store_true",
                     help="skip bundle calibration / MP plan (bf16 only; "
                          "fast path for CI smoke)")
+    ap.add_argument("--sync", action="store_true",
+                    help="lockstep drain (read every step's tokens before "
+                         "the next step) instead of the pipelined default")
     args = ap.parse_args()
 
     model, params, data, _ = bench_model()
@@ -97,14 +104,18 @@ def main():
                                        chunk_len=args.chunk_len,
                                        chunk_budget=args.chunk_budget,
                                        paged_attn=args.paged_attn)
-        eng.serve(params, [reqs[0]])          # warmup (compile)
-        out = eng.serve(params, reqs)
+        eng.serve(params, [reqs[0]], sync=args.sync)   # warmup (compile)
+        out = eng.serve(params, reqs, sync=args.sync)
         outs[tag] = out
         ttfts = sorted(r.ttft_s for r in out.results.values())
         print(f"{tag:8s} {out.n_steps:4d} decode steps   "
               f"{out.tokens_per_s:8.1f} tok/s   "
               f"TTFT p50 {ttfts[len(ttfts)//2]*1e3:7.2f} ms")
         c = out.counters
+        print(f"{'':8s} drain: {'lockstep' if c['sync'] else 'pipelined'} "
+              f"({c['host_blocked_s_per_step']*1e6:.1f} us/step "
+              f"host-blocked, {c['n_readbacks']} readbacks, "
+              f"device {c['steps_in_flight_peak']} steps ahead at peak)")
         if c.get("paged"):
             print(f"{'':8s} paged KV: {c['peak_blocks_in_use']}/"
                   f"{c['n_blocks'] - 1} blocks at peak (block_size "

@@ -123,6 +123,11 @@ def main():
                          "block-major KV in place via the Pallas kernel; "
                          "'gather' keeps the reference path that "
                          "materializes logical (B, S) K/V per layer")
+    ap.add_argument("--sync-engine", action="store_true",
+                    help="lockstep drain: read every step's tokens back "
+                         "before dispatching the next (continuous mode; "
+                         "default is the pipelined drain that overlaps "
+                         "token transfer with decode)")
     args = ap.parse_args()
 
     model = get_model(args.arch, smoke=args.smoke)
@@ -170,14 +175,20 @@ def main():
                         max_new_tokens=args.new_tokens,
                         arrival=i * args.arrival_every)
                 for i in range(args.requests)]
-        eng.serve(params, reqs[:1])  # compile
-        out = eng.serve(params, reqs)
+        eng.serve(params, reqs[:1], sync=args.sync_engine)  # compile
+        out = eng.serve(params, reqs, sync=args.sync_engine)
         ttfts = sorted(r.ttft_s for r in out.results.values())
         p50 = f"{ttfts[len(ttfts)//2]*1e3:.2f} ms" if ttfts else "n/a"
         print(f"[serve] continuous: {args.requests} reqs via {args.n_slots} "
               f"slots | {out.n_steps} decode steps | "
               f"{out.tokens_per_s:.1f} tok/s | TTFT p50 {p50}")
         c = out.counters
+        mode = "sync (lockstep)" if c["sync"] else "pipelined"
+        print(f"[serve] host/device overlap [{mode}]: "
+              f"{c['host_blocked_s_per_step'] * 1e6:.1f} us/step host-blocked "
+              f"| {c['n_readbacks']} readbacks (batch mean "
+              f"{c['readback_batch_mean']:.1f}, max {c['readback_batch_max']})"
+              f" | device ran {c['steps_in_flight_peak']} steps ahead at peak")
         if c.get("paged"):
             print(f"[serve] paged KV: block_size {c['block_size']} | "
                   f"{c['peak_blocks_in_use']}/{c['n_blocks'] - 1} blocks at "

@@ -5,6 +5,8 @@ cleanly with explicit shardings.
 from __future__ import annotations
 
 import functools
+import threading
+import weakref
 from typing import Optional
 
 import jax
@@ -16,7 +18,8 @@ from repro.train import optim
 
 __all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
            "make_paged_decode_step", "make_eval_step",
-           "make_bucketed_prefill_step", "make_chunked_prefill_step"]
+           "make_bucketed_prefill_step", "make_chunked_prefill_step",
+           "get_serving_step", "greedy_next_token", "merge_first_tokens"]
 
 
 def _split_micro(batch: dict, n_micro: int) -> dict:
@@ -153,6 +156,81 @@ def make_decode_step(model, mp: Optional[dict] = None):
         return model.decode_step(params, token, pos, caches, ctx)
 
     return decode_step
+
+
+# ---------------------------------------------------------------------------
+# memoized serving-step compile cache
+# ---------------------------------------------------------------------------
+
+# model -> {(kind, mp_key, paged_attn, donate): jitted step}. Keyed weakly on
+# the model object so engines built over the same model (the common pattern in
+# tests: one module-scoped model, many engine instances) share one jitted
+# program per step flavor instead of re-jitting a fresh closure each time —
+# which re-ran the interpret-mode Pallas kernel compile in every paged serve
+# test and dominated the CPU suite's wall time.
+_SERVING_STEPS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+_SERVING_STEPS_LOCK = threading.Lock()
+
+
+def _mp_cache_key(mp):
+    mp = as_assignment(mp)
+    return None if mp is None else tuple(sorted(mp.items()))
+
+
+def get_serving_step(model, kind: str, mp=None,
+                     paged_attn: Optional[str] = None, donate: bool = False):
+    """Memoized ``jax.jit`` of a serving step for ``model``.
+
+    ``kind`` is one of ``prefill`` / ``bucketed_prefill`` /
+    ``chunked_prefill`` / ``decode`` / ``paged_decode``. Steps are cached per
+    (model, kind, MP assignment, paged_attn, donation) so every engine over
+    the same model reuses one compiled program per input shape. ``mp`` may be
+    an assignment dict or an ``MPPlan``.
+    """
+    builders = {
+        "prefill": make_prefill_step,
+        "bucketed_prefill": make_bucketed_prefill_step,
+        "chunked_prefill": make_chunked_prefill_step,
+        "decode": make_decode_step,
+        "paged_decode": make_paged_decode_step,
+    }
+    if kind not in builders:
+        raise ValueError(f"unknown serving step kind {kind!r}")
+    if paged_attn is not None and kind != "paged_decode":
+        raise ValueError("paged_attn only applies to kind='paged_decode'")
+    key = (kind, _mp_cache_key(mp), paged_attn, bool(donate))
+    with _SERVING_STEPS_LOCK:
+        cache = _SERVING_STEPS.setdefault(model, {})
+        fn = cache.get(key)
+        if fn is None:
+            if kind == "paged_decode":
+                raw = make_paged_decode_step(model, mp=mp,
+                                             paged_attn=paged_attn or "fused")
+            else:
+                raw = builders[kind](model, mp=mp)
+            fn = jax.jit(raw, donate_argnums=(1,) if donate else ())
+            cache[key] = fn
+    return fn
+
+
+@jax.jit
+def greedy_next_token(logits):
+    """(B, T, V) logits -> (B,) int32 greedy next token from the last step.
+
+    Jitted separately from the model step on purpose: the argmax runs as its
+    own XLA program over the step's *output* logits, so moving it on-device
+    (the async engine's no-readback path) cannot perturb the step's numerics
+    — the tokens are bit-identical to a host-side ``np.argmax`` readback.
+    """
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+
+@jax.jit
+def merge_first_tokens(cur_tok, new_tok, mask):
+    """Scatter freshly-prefilled rows' first tokens into the device-resident
+    decode input: rows where ``mask`` is set take ``new_tok``, others keep
+    ``cur_tok``. (B, 1) int32, stays on device."""
+    return jnp.where(mask[:, None], new_tok[:, None], cur_tok)
 
 
 def make_paged_decode_step(model, mp: Optional[dict] = None,

@@ -157,6 +157,14 @@ class AttnConfig:
     window: Optional[int] = None            # sliding-window size
     flash_min_seq: int = 4096               # blocked attention above this q_len
     flash_block: int = 1024
+    # per-tensor dequant multipliers for *paged* KV-cache reads (e.g. an fp8
+    # cache carrying a calibration scale): ((cache_entry, scale), ...) pairs
+    # — a tuple, not a dict, so the frozen config stays hashable. One source
+    # of truth for both paged read paths: the fused kernel dequantizes
+    # in-register and the gather fallback applies the identical
+    # f32-multiply-then-cast, so greedy tokens cannot depend on which path a
+    # layer takes. Unit scales cost nothing on either path.
+    kv_dequant_scales: Optional[tuple] = None
 
 
 def attn_specs(prefix: str, cfg: AttnConfig) -> dict:
@@ -255,17 +263,29 @@ def paged_write(cache: dict, tensors: dict, block_tables: jax.Array,
     return new
 
 
-def paged_gather(cache: dict, block_tables: jax.Array, dtype) -> tuple:
+def paged_gather(cache: dict, block_tables: jax.Array, dtype,
+                 scales: Optional[dict] = None) -> tuple:
     """Gather each row's blocks into logical order: (B, S, ...) tensors plus
     the (B, S) logical key positions (S = max_blocks * block_size). Entries
     beyond a row's written length read stale/trash data; they sit at logical
-    positions > the row's query position, so the causal mask removes them."""
+    positions > the row's query position, so the causal mask removes them.
+
+    ``scales`` maps cache-entry names to per-tensor dequant multipliers,
+    applied with exactly the fused kernel's ``_dequant`` semantics (f32
+    multiply, cast to ``dtype``; a 1.0 scale is a plain upcast so the
+    unscaled path stays bit-identical to the legacy gather)."""
     bs = next(iter(cache.values())).shape[1]
     B, nb = block_tables.shape
     bt = jnp.maximum(block_tables, 0)
-    out = {name: jnp.take(arr, bt, axis=0)
-           .reshape(B, nb * bs, *arr.shape[2:]).astype(dtype)
-           for name, arr in cache.items()}
+
+    def deq(name, arr):
+        g = jnp.take(arr, bt, axis=0).reshape(B, nb * bs, *arr.shape[2:])
+        s = 1.0 if scales is None else float(scales.get(name, 1.0))
+        if s == 1.0:
+            return g.astype(dtype)
+        return (g.astype(jnp.float32) * s).astype(dtype)
+
+    out = {name: deq(name, arr) for name, arr in cache.items()}
     kp = jnp.broadcast_to(jnp.arange(nb * bs, dtype=jnp.int32)[None], (B, nb * bs))
     return out, kp
 
@@ -298,7 +318,8 @@ def use_fused_paged(ctx: QuantContext, scope: str, paged_attn: str) -> bool:
 
 def paged_update_attend(cache: dict, tensors: dict, block_tables: jax.Array,
                         positions: jax.Array, cache_pos, chunk_valid,
-                        dtype, *, fused: bool) -> tuple:
+                        dtype, *, fused: bool,
+                        scales: Optional[dict] = None) -> tuple:
     """Single entry point for every paged-cache attention interaction.
 
     Writes the fresh K/V — one decode token (``cache_pos``) or a whole
@@ -308,6 +329,10 @@ def paged_update_attend(cache: dict, tensors: dict, block_tables: jax.Array,
     caller attends block-major KV in place via the Pallas kernel. The
     chunked-prefill continuation always gathers: its multi-token queries
     must attend every earlier chunk through the logical layout.
+
+    ``scales`` (per-entry dequant multipliers) reaches the gather through
+    :func:`paged_gather`; callers taking the fused return must hand the
+    *same* mapping to the kernel so both read paths dequantize identically.
     """
     if chunk_valid is not None:
         new_cache = paged_write_chunk(cache, tensors, block_tables,
@@ -317,26 +342,30 @@ def paged_update_attend(cache: dict, tensors: dict, block_tables: jax.Array,
         new_cache = paged_write(cache, tensors, block_tables, cache_pos)
         if fused:
             return new_cache, None, None
-    g, kp = paged_gather(new_cache, block_tables, dtype)
+    g, kp = paged_gather(new_cache, block_tables, dtype, scales)
     return new_cache, g, kp
 
 
 def _fused_paged_attention(cfg: AttnConfig, q: jax.Array, cache: dict,
                            block_tables: jax.Array, positions: jax.Array,
-                           window) -> jax.Array:
+                           window, scales: Optional[dict] = None) -> jax.Array:
     """GQA decode against block-major K/V: one kernel call per layer, no
     ``(B, S)`` gather. ``window`` may be None, int, or a traced scalar
-    (scan-mode per-layer windows). Returns (B, 1, H, Dv)."""
+    (scan-mode per-layer windows). ``scales`` carries the same per-entry
+    dequant multipliers the gather fallback applies, handed to the kernel
+    as its in-register ``k_scale``/``v_scale``. Returns (B, 1, H, Dv)."""
     from repro.kernels.paged_attention import paged_decode_attention
     B, T, H, D = q.shape
     assert T == 1, "fused paged attention is single-query decode"
     Hkv = cfg.n_kv_heads
     qk = q.reshape(B, Hkv, H // Hkv, D)
     lengths = positions[:, 0] + 1
+    sc = scales or {}
     o = paged_decode_attention(
         qk, cache["k"], cache["v"], block_tables, lengths, window=window,
         scale=math.sqrt(D), scale_mode="div", score_dtype=q.dtype,
-        probs_dtype=q.dtype, out_dtype=q.dtype)
+        probs_dtype=q.dtype, k_scale=float(sc.get("k", 1.0)),
+        v_scale=float(sc.get("v", 1.0)), out_dtype=q.dtype)
     return o.reshape(B, 1, H, o.shape[-1])
 
 
@@ -520,13 +549,16 @@ def attention(p: dict, ctx: QuantContext, scope: str, cfg: AttnConfig,
             # continuation chunk sees every earlier chunk's keys.
             fused = (chunk_valid is None and causal
                      and use_fused_paged(ctx, scope, paged_attn))
+            # one mapping feeds both read paths: the kernel's in-register
+            # dequant and the gather fallback can never disagree on scales
+            kv_scales = dict(cfg.kv_dequant_scales or ())
             new_cache, g, kp = paged_update_attend(
                 cache, {"k": k, "v": v}, block_tables, positions, cache_pos,
-                chunk_valid, x.dtype, fused=fused)
+                chunk_valid, x.dtype, fused=fused, scales=kv_scales)
             if g is None:
                 y_fused = _fused_paged_attention(cfg, q, new_cache,
                                                  block_tables, positions,
-                                                 window)
+                                                 window, scales=kv_scales)
             else:
                 k, v = g["k"], g["v"]
         elif cache is not None and chunk_valid is not None:
@@ -635,6 +667,12 @@ class MLAConfig:
     # per-head K/V over the whole cache every step. Off by default =
     # paper-faithful baseline; enabled as a §Perf iteration.
     absorb_decode: bool = False
+    # paged KV-read dequant multipliers, as in AttnConfig.kv_dequant_scales
+    # (entries: "ckv", "kr"). Applied on the gather read path; the fused
+    # absorbed-decode kernel rejects non-unit scales (its f32 dequant point
+    # differs from the gather path's bf16 rounding, so bitwise parity is
+    # impossible) — fail fast instead of silently diverging.
+    kv_dequant_scales: Optional[tuple] = None
 
 
 def mla_specs(prefix: str, cfg: MLAConfig) -> dict:
@@ -722,13 +760,14 @@ def mla_attention(p: dict, ctx: QuantContext, scope: str, cfg: MLAConfig,
         # place; chunk continuation and the expanded/fallback paths gather
         fused = (chunk_valid is None and cfg.absorb_decode
                  and use_fused_paged(ctx, scope, paged_attn))
+        kv_scales = dict(cfg.kv_dequant_scales or ())
         new_cache, g, kp = paged_update_attend(
             cache, {"ckv": ckv, "kr": kr}, block_tables, positions,
-            cache_pos, chunk_valid, x.dtype, fused=fused)
+            cache_pos, chunk_valid, x.dtype, fused=fused, scales=kv_scales)
         if g is None:
             return _mla_decode_absorbed_paged(p, ctx, scope, cfg, qn, qr,
                                               new_cache, block_tables,
-                                              positions)
+                                              positions, scales=kv_scales)
         ckv, kr = g["ckv"], g["kr"]
         if chunk_valid is None and cfg.absorb_decode:
             return _mla_decode_absorbed(p, ctx, scope, cfg, qn, qr, ckv,
@@ -826,7 +865,8 @@ def _mla_decode_absorbed(p, ctx, scope, cfg: MLAConfig, qn, qr, ckv, kr,
 
 
 def _mla_decode_absorbed_paged(p, ctx, scope, cfg: MLAConfig, qn, qr,
-                               new_cache, block_tables, positions):
+                               new_cache, block_tables, positions,
+                               scales: Optional[dict] = None):
     """Fused-kernel twin of :func:`_mla_decode_absorbed`: the latent scores
     (``q_lat . ckv + qr . kr``) and the latent context are computed directly
     against the block-major latent cache — MQA-shaped (one shared KV "head",
@@ -845,6 +885,15 @@ def _mla_decode_absorbed_paged(p, ctx, scope, cfg: MLAConfig, qn, qr,
     q_lat = qops.qeinsum(ctx, f"{scope}/q_absorb", "BTHh,Hhr->BTHr",
                          qn.astype(jnp.float32), w_uk, kind="linear")
     lengths = positions[:, 0] + 1
+    sc = scales or {}
+    if any(float(sc.get(n, 1.0)) != 1.0 for n in ("ckv", "kr")):
+        # the kernel dequantizes to the f32 query dtype while the gather
+        # path rounds the scaled latents through the bf16 activation dtype,
+        # so non-unit scales cannot stay bit-identical between the two —
+        # refuse rather than silently diverge
+        raise ValueError(
+            f"{scope}: fused absorbed MLA decode does not support non-unit "
+            f"kv_dequant_scales (got {sc}); use paged_attn='gather'")
     ctx_lat = paged_decode_attention(
         q_lat.reshape(B, 1, H, r),                      # (B, Hkv=1, G=H, r)
         new_cache["ckv"][:, :, None, :], None,          # v = ckv (latent)
@@ -852,6 +901,7 @@ def _mla_decode_absorbed_paged(p, ctx, scope, cfg: MLAConfig, qn, qr,
         q2=qr.astype(jnp.float32).reshape(B, 1, H, cfg.qk_rope_dim),
         k2=new_cache["kr"][:, :, None, :],
         scale=1.0 / _math.sqrt(dn + cfg.qk_rope_dim), scale_mode="mul",
+        k_scale=1.0, v_scale=1.0,  # non-unit scales rejected above
         out_dtype=jnp.float32)
     ctx_lat = ctx_lat.reshape(B, T, H, r)
     y = qops.qeinsum(ctx, f"{scope}/v_absorb", "BTHr,Hvr->BTHv", ctx_lat,

@@ -259,4 +259,9 @@ class PagedCachePool:
                                       jnp.asarray(slot, jnp.int32))
 
     def block_tables_device(self) -> jax.Array:
-        return jnp.asarray(self.block_tables)
+        # hand jax a private copy: on CPU, jnp.asarray(host_array) may be
+        # zero-copy, and the pool mutates block_tables in place
+        # (ensure_block/ensure_range/free_slot) — under the pipelined engine
+        # a dispatched step may still be reading the aliased buffer when the
+        # next tick's allocation rewrites it
+        return jnp.asarray(self.block_tables.copy())

@@ -50,21 +50,23 @@ path the chunked step always uses — see the serve README.)
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 import time
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.mpconfig import as_assignment
-from repro.launch.steps import (make_bucketed_prefill_step,
-                                make_chunked_prefill_step, make_decode_step,
-                                make_paged_decode_step, make_prefill_step)
+from repro.launch.steps import (get_serving_step, greedy_next_token,
+                                merge_first_tokens)
 from repro.serve.cache_pool import (CachePool, PagedCachePool,
                                     dense_slot_bytes, paged_block_bytes,
                                     paged_slot_bytes)
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import (DONE, PREFILLING, RUNNING, WAITING,
+                                   Request, Scheduler)
 
 __all__ = ["ServeEngine", "ContinuousBatchingEngine", "GenResult",
            "ServeSummary", "prefill_bucket"]
@@ -127,16 +129,14 @@ class ServeEngine:
         self.model = model
         self.mp = as_assignment(mp)
         self.mesh = mesh
-        d = (1,) if donate else ()
-        self.prefill_step = jax.jit(make_prefill_step(model, mp=self.mp),
-                                    donate_argnums=d)
-        self.decode_step = jax.jit(make_decode_step(model, mp=self.mp),
-                                   donate_argnums=d)
+        self.prefill_step = get_serving_step(model, "prefill", mp=self.mp,
+                                             donate=donate)
+        self.decode_step = get_serving_step(model, "decode", mp=self.mp,
+                                            donate=donate)
         self._bucketed = getattr(model, "supports_prefill_chunk", False)
         if self._bucketed:
-            self.bucketed_prefill_step = jax.jit(
-                make_bucketed_prefill_step(model, mp=self.mp),
-                donate_argnums=d)
+            self.bucketed_prefill_step = get_serving_step(
+                model, "bucketed_prefill", mp=self.mp, donate=donate)
         # compile-economy bookkeeping: which prefill programs this engine
         # needed vs how many distinct prompt lengths it served
         self.prefill_compile_keys: set = set()
@@ -315,21 +315,39 @@ class ContinuousBatchingEngine:
         self.chunk_len = chunk_len
         self.chunk_budget = chunk_budget
         self.min_bucket = min_bucket
-        d = (1,) if donate else ()
-        mk_prefill = (make_chunked_prefill_step if paged
-                      else make_bucketed_prefill_step)
-        self.prefill_chunk_step = jax.jit(mk_prefill(model, mp=self.mp))
-        if paged:
-            step = make_paged_decode_step(model, mp=self.mp,
-                                          paged_attn=paged_attn)
-        else:
-            step = make_decode_step(model, mp=self.mp)
-        self.decode_step = jax.jit(step, donate_argnums=d)
+        self.prefill_chunk_step = get_serving_step(
+            model, "chunked_prefill" if paged else "bucketed_prefill",
+            mp=self.mp)
+        self.decode_step = get_serving_step(
+            model, "paged_decode" if paged else "decode", mp=self.mp,
+            paged_attn=paged_attn if paged else None, donate=donate)
         # compile-economy bookkeeping (persists across serve() calls, like
         # the jit compile cache it mirrors)
         self.prefill_compile_keys: set = set()
         self.prompt_lens_seen: set = set()
         self._warned_flash = False
+        # external control plane: cancel()/shutdown() may be called from any
+        # thread (e.g. an on_token callback); the drain loop applies pending
+        # control at the top of each tick, so cancellation is race-free with
+        # respect to slot reuse
+        self._ctl_lock = threading.Lock()
+        self._cancel_pending: set = set()
+        self._shutdown_flag = False
+
+    # ------------------------------------------------------------------
+    def cancel(self, rid: int) -> None:
+        """Request cancellation of ``rid``. Thread-safe; takes effect at the
+        next tick. The request retires with ``status="cancelled"`` keeping
+        whatever tokens it had committed by then (possibly none)."""
+        with self._ctl_lock:
+            self._cancel_pending.add(rid)
+
+    def shutdown(self) -> None:
+        """Ask the current ``serve()`` drain to stop: every unfinished
+        request is cancelled at the next tick, in-flight token transfers are
+        drained, and ``serve()`` returns normally with partial results."""
+        with self._ctl_lock:
+            self._shutdown_flag = True
 
     # ------------------------------------------------------------------
     def _make_pool(self):
@@ -339,8 +357,7 @@ class ContinuousBatchingEngine:
                                   n_blocks=self.n_blocks)
         return CachePool(self.model, self.n_slots, self.max_len)
 
-    def _admit(self, params, pool, sched: Scheduler,
-               results: dict, now: int) -> None:
+    def _admit(self, params, pool, sched: Scheduler, now: int) -> None:
         """Claim slots for admissible requests and emit prefill work items;
         no device work happens here — the step loop drives the chunks."""
         gate = None
@@ -385,12 +402,18 @@ class ContinuousBatchingEngine:
             sched.start_prefill(st, slot, now)
             st.wall_admitted = time.perf_counter()
 
-    def _prefill_tick(self, params, pool, sched: Scheduler,
-                      results: dict, now: int) -> float:
+    def _prefill_tick(self, params, pool, sched: Scheduler, now: int):
         """Run one compiled prefill-chunk step: co-batch the next chunk of
         every prefilling slot whose bucket matches the FCFS head's, padded
         to the bucket, over the full ``n_slots`` batch (inactive rows pass
-        through with valid = 0). Returns the step's wall time."""
+        through with valid = 0).
+
+        Returns ``(dt, nxt_dev, finished)``: the step's dispatch wall time,
+        the (n_slots,) *device* greedy-token vector (no host readback —
+        delivery is the caller's job), and the list of ``(slot, state)``
+        pairs whose prompt completed this tick (their first token is row
+        ``slot`` of ``nxt_dev``; ``out_tokens[0]`` holds a ``None``
+        placeholder until the value lands on the host)."""
         items = []
         bucket = None
         for slot, st in sched.prefilling.items():
@@ -423,33 +446,71 @@ class ContinuousBatchingEngine:
             logits, pool.caches = self.prefill_chunk_step(
                 params, pool.caches, jnp.asarray(tok), jnp.asarray(start_v),
                 jnp.asarray(valid_v))
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        nxt_dev = greedy_next_token(logits)
         dt = time.perf_counter() - t0
+        finished = []
         for slot, st, start, take in items:
             st = sched.prefill_advance(slot, take, dt)
             if st.prefill_pos == st.request.prompt_len:
-                st = sched.finish_prefill(slot, int(nxt[slot]), now)
-                # honest TTFT: wall time since admission, which includes the
-                # decode steps interleaved between this request's chunks
-                st.ttft_s = time.perf_counter() - st.wall_admitted
-                if st.done:                  # max_new_tokens == 1
-                    results[st.request.rid] = sched.finish(st, now)
-                    pool.free_slot(slot)
-        return dt
+                st = sched.finish_prefill(slot, None, now)
+                finished.append((slot, st))
+        return dt, nxt_dev, finished
 
-    def serve(self, params, requests: Sequence[Request]) -> ServeSummary:
-        """Drain ``requests`` (any arrival order) and return all results."""
+    def serve(self, params, requests: Sequence[Request], *,
+              sync: bool = False,
+              on_token: Optional[Callable[[int, int, int], None]] = None,
+              max_in_flight: int = 8) -> ServeSummary:
+        """Drain ``requests`` (any arrival order) and return all results.
+
+        The drain is a producer/consumer pipeline by default: the main
+        thread dispatches device steps and enqueues each step's *device*
+        token vector plus its host bookkeeping (which request gets which
+        row), and a consumer thread turns queued vectors into host values —
+        one batched ``jax.device_get`` per wakeup — filling each request's
+        token list and firing ``on_token(rid, idx, token)``. The producer
+        schedules purely by token *counts* (every request runs exactly
+        ``max_new_tokens`` steps), so it never needs a token value and the
+        per-step host readback disappears from the decode critical path;
+        the device runs up to ``max_in_flight`` steps ahead of the host.
+
+        ``sync=True`` keeps the legacy lockstep loop — every step's tokens
+        are read back (and ``on_token`` fired) before the next step is
+        dispatched — for readback-cost comparisons and the parity matrix.
+        Both modes run the *same* device schedule and the same on-device
+        argmax, so greedy tokens are bit-identical between them.
+
+        ``on_token`` fires on the consumer thread in async mode (in
+        submission order per request) and inline in sync mode; an exception
+        it raises cancels the remaining requests, drains in-flight
+        transfers, and re-raises from ``serve()``. :meth:`cancel`,
+        :meth:`shutdown` and ``Request.timeout_steps`` take effect at tick
+        granularity; cancelled/timed-out requests keep the tokens they had
+        committed (``RequestResult.status`` records the outcome).
+        """
+        assert max_in_flight >= 1, max_in_flight
         pool = self._make_pool()
         sched = Scheduler()
+        with self._ctl_lock:
+            self._cancel_pending.clear()
+            self._shutdown_flag = False
         for r in sorted(requests, key=lambda r: (r.arrival, r.rid)):
             sched.submit(r)
 
-        results: dict = {}
-        tok_host = np.zeros((self.n_slots, 1), np.int32)
-        pos_host = np.zeros((self.n_slots,), np.int32)
+        retired: list = []                 # RequestState, retirement order
+        # device-resident decode input; rows refresh via on-device merges
+        # (first tokens) and argmax outputs — never from the host. Vacant
+        # rows hold stale tokens: their writes go to the trash block (paged)
+        # or to a row the next first-chunk prefill fully resets (dense).
+        cur_tok = jnp.zeros((self.n_slots, 1), jnp.int32)
         now = 0
         n_steps = 0
         decode_s = 0.0
+        host_blocked_s = 0.0
+        drain_wait_s = 0.0
+        n_readbacks = 0
+        readback_sizes: list = []
+        inflight_peak = 0
+        t_first_decode = None
         peak_queue = peak_live = peak_blocks = peak_slots = 0
         # per-decode-step attention HBM read model (paged): the fused kernel
         # fetches each running row's live pages (plus at most one trash-block
@@ -461,89 +522,248 @@ class ContinuousBatchingEngine:
         prefill_chunks = decode_stall_steps = max_stall_run = stall_run = 0
         stall_s_run = 0.0
         stall_s: list = []            # per-decode-step injected prefill time
-        t_start = time.perf_counter()
-        while sched.has_work():
-            self._admit(params, pool, sched, results, now)
-            peak_queue = max(peak_queue, sched.queue_depth)
-            # prefill phase — TTFT-aware arbitration: prefill freely while
-            # nothing is decoding, else at most chunk_budget chunk steps per
-            # decode step so no decode slot stalls unboundedly
-            chunks_this_tick = 0
-            while sched.prefilling and (not sched.running
-                                        or chunks_this_tick
-                                        < self.chunk_budget):
-                was_decoding = bool(sched.running)
-                dt = self._prefill_tick(params, pool, sched, results, now)
-                prefill_chunks += 1
-                chunks_this_tick += 1
-                if was_decoding:
-                    decode_stall_steps += 1
-                    stall_run += 1
-                    max_stall_run = max(max_stall_run, stall_run)
-                    stall_s_run += dt
-                # a finished 1-token request frees its slot immediately:
-                # let a queued request claim it this same tick
-                self._admit(params, pool, sched, results, now)
-            if sched.running:
-                tok_host[:] = 0
-                pos_host[:] = 0
-                for slot, st in sched.running.items():
-                    tok_host[slot, 0] = st.last_token
-                    pos_host[slot] = st.next_pos
-                    if self.paged:
-                        pool.ensure_block(slot, st.next_pos)
-                # live tokens after this step: everything written so far
-                # (next_pos) plus the write this step performs
-                live_now = sum(st.next_pos + 1
-                               for st in sched.running.values())
-                peak_live = max(peak_live, live_now)
-                peak_slots = max(peak_slots, len(sched.running))
-                if self.paged:
-                    peak_blocks = max(peak_blocks, pool.blocks_in_use)
-                    live_token_steps += live_now
-                    pages = {s: -(-(st.next_pos + 1) // pool.block_size)
-                             for s, st in sched.running.items()}
-                    attn_pages_fused += sum(pages.values()) + sum(
-                        1 for s in range(self.n_slots)
-                        if pages.get(s, 0) < pool.max_blocks)
-                    attn_pages_gather += self.n_slots * pool.max_blocks
-                t0 = time.perf_counter()
-                if self.paged:
-                    # decode sees block tables only for *running* rows: a
-                    # slot mid-prefill owns real blocks, and the vacant-row
-                    # garbage write must go to the trash block, not into
-                    # K/V its earlier chunks already wrote
-                    bt = pool.block_tables.copy()
-                    for s in range(self.n_slots):
-                        if s not in sched.running:
-                            bt[s] = -1
-                    logits, pool.caches = self.decode_step(
-                        params, pool.caches, jnp.asarray(tok_host),
-                        jnp.asarray(pos_host), jnp.asarray(bt))
-                else:
-                    logits, pool.caches = self.decode_step(
-                        params, pool.caches, jnp.asarray(tok_host),
-                        jnp.asarray(pos_host))
-                nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-                decode_s += time.perf_counter() - t0
-                n_steps += 1
-                stall_s.append(stall_s_run)
-                stall_s_run = 0.0
-                stall_run = 0
-                for slot in list(sched.running):
-                    st = sched.record_token(slot, int(nxt[slot]))
-                    if st.done:
-                        results[st.request.rid] = sched.finish(st, now)
-                        pool.free_slot(slot)
-                now += 1
-            elif not sched.prefilling:
-                # idle: jump the clock to the next arrival instead of spinning
-                nxt_arrival = sched.next_arrival()
-                if nxt_arrival is None:
-                    break
-                now = max(now + 1, nxt_arrival)
 
-        total_s = time.perf_counter() - t_start
+        # ---- host-side delivery plumbing (shared by both modes) ----
+        q: "queue.Queue" = queue.Queue(maxsize=max_in_flight)
+        consumer_err: list = []
+
+        def deliver(arr, deliveries):
+            """Fill each (state, idx, slot) placeholder from a host token
+            vector and fire the streaming callback."""
+            t_now = time.perf_counter()
+            for st, idx, slot in deliveries:
+                st.out_tokens[idx] = int(arr[slot])
+                if idx == 0:
+                    # honest TTFT, stamped at *delivery*: wall time from
+                    # admission until the first token value landed on the
+                    # host — under async that includes any pipeline lag,
+                    # which is exactly what a streaming client experiences
+                    st.ttft_s = t_now - st.wall_admitted
+                if on_token is not None and not consumer_err:
+                    on_token(st.request.rid, idx, st.out_tokens[idx])
+
+        def consume():
+            nonlocal n_readbacks
+            stop = False
+            while not stop:
+                item = q.get()
+                if item is None:
+                    return
+                batch = [item]
+                while True:    # greedy drain: one device_get per wakeup
+                    try:
+                        more = q.get_nowait()
+                    except queue.Empty:
+                        break
+                    if more is None:
+                        stop = True
+                        break
+                    batch.append(more)
+                arrs = jax.device_get([tok for tok, _ in batch])
+                n_readbacks += 1
+                readback_sizes.append(len(batch))
+                for (_, dl), arr in zip(batch, arrs):
+                    try:
+                        deliver(arr, dl)
+                    except BaseException as e:  # noqa: BLE001
+                        # keep draining so the producer never deadlocks on a
+                        # full queue; re-raised from serve() after the join
+                        consumer_err.append(e)
+
+        def consume_guarded():
+            try:
+                consume()
+            except BaseException as e:  # noqa: BLE001 — e.g. device_get died
+                consumer_err.append(e)
+                while q.get() is not None:      # unblock producer until STOP
+                    pass
+
+        consumer = None
+        if not sync:
+            consumer = threading.Thread(target=consume_guarded,
+                                        name="serve-consumer", daemon=True)
+            consumer.start()
+
+        def emit(nxt_dev, deliveries):
+            nonlocal host_blocked_s, n_readbacks, inflight_peak
+            if sync:
+                t0 = time.perf_counter()
+                arr = np.asarray(nxt_dev)   # blocks on the device step
+                host_blocked_s += time.perf_counter() - t0
+                n_readbacks += 1
+                readback_sizes.append(1)
+                deliver(arr, deliveries)
+            else:
+                t0 = time.perf_counter()
+                q.put((nxt_dev, deliveries))  # blocks only at max_in_flight
+                host_blocked_s += time.perf_counter() - t0
+                inflight_peak = max(inflight_peak, q.qsize())
+
+        # ---- control plane: cancellation / timeouts / shutdown ----
+        def cancel_live(st, status, now):
+            if st.status == WAITING:
+                sched.remove_waiting(st.request.rid)
+            elif st.status in (PREFILLING, RUNNING):
+                pool.free_slot(st.slot)
+            retired.append(sched.retire(st, now, status))
+
+        def apply_control(now):
+            with self._ctl_lock:
+                todo = self._cancel_pending
+                self._cancel_pending = set()
+                shutdown = self._shutdown_flag
+            # a callback error is an implicit shutdown: stop scheduling new
+            # work, drain what's in flight, re-raise after the join
+            shutdown = shutdown or bool(consumer_err)
+            for st in list(sched.states.values()):
+                t = st.request.timeout_steps
+                if (st.status != DONE and t is not None
+                        and now >= st.request.arrival + t):
+                    cancel_live(st, "timeout", now)
+            if shutdown:
+                todo = set(sched.states)
+            for rid in sorted(todo):
+                st = sched.states.get(rid)
+                if st is not None and st.status != DONE:
+                    cancel_live(st, "cancelled", now)
+
+        t_start = time.perf_counter()
+        try:
+            while sched.has_work():
+                apply_control(now)
+                if not sched.has_work():
+                    break
+                self._admit(params, pool, sched, now)
+                peak_queue = max(peak_queue, sched.queue_depth)
+                # prefill phase — TTFT-aware arbitration: prefill freely
+                # while nothing is decoding, else at most chunk_budget chunk
+                # steps per decode step so no decode slot stalls unboundedly
+                chunks_this_tick = 0
+                while sched.prefilling and (not sched.running
+                                            or chunks_this_tick
+                                            < self.chunk_budget):
+                    was_decoding = bool(sched.running)
+                    dt, nxt_dev, finished = self._prefill_tick(
+                        params, pool, sched, now)
+                    prefill_chunks += 1
+                    chunks_this_tick += 1
+                    if was_decoding:
+                        decode_stall_steps += 1
+                        stall_run += 1
+                        max_stall_run = max(max_stall_run, stall_run)
+                        stall_s_run += dt
+                    if finished:
+                        # scatter first tokens into the device-resident
+                        # decode input; ship the same vector to the host
+                        # for delivery
+                        mask = np.zeros((self.n_slots,), bool)
+                        deliveries = []
+                        for slot, st in finished:
+                            mask[slot] = True
+                            deliveries.append((st, 0, slot))
+                        cur_tok = merge_first_tokens(cur_tok, nxt_dev,
+                                                     jnp.asarray(mask))
+                        emit(nxt_dev, deliveries)
+                        for slot, st in finished:
+                            if st.done:          # max_new_tokens == 1
+                                retired.append(sched.retire(st, now))
+                                pool.free_slot(slot)
+                    # a finished 1-token request frees its slot immediately:
+                    # let a queued request claim it this same tick
+                    self._admit(params, pool, sched, now)
+                if sched.running:
+                    # fresh array every tick: jnp.asarray may be zero-copy
+                    # on CPU, and an in-flight step from a previous tick
+                    # could still alias a reused buffer we'd be zeroing
+                    pos_host = np.zeros((self.n_slots,), np.int32)
+                    for slot, st in sched.running.items():
+                        pos_host[slot] = st.next_pos
+                        if self.paged:
+                            pool.ensure_block(slot, st.next_pos)
+                    # live tokens after this step: everything written so far
+                    # (next_pos) plus the write this step performs
+                    live_now = sum(st.next_pos + 1
+                                   for st in sched.running.values())
+                    peak_live = max(peak_live, live_now)
+                    peak_slots = max(peak_slots, len(sched.running))
+                    if self.paged:
+                        peak_blocks = max(peak_blocks, pool.blocks_in_use)
+                        live_token_steps += live_now
+                        pages = {s: -(-(st.next_pos + 1) // pool.block_size)
+                                 for s, st in sched.running.items()}
+                        attn_pages_fused += sum(pages.values()) + sum(
+                            1 for s in range(self.n_slots)
+                            if pages.get(s, 0) < pool.max_blocks)
+                        attn_pages_gather += self.n_slots * pool.max_blocks
+                    t0 = time.perf_counter()
+                    if t_first_decode is None:
+                        t_first_decode = t0
+                    if self.paged:
+                        # decode sees block tables only for *running* rows:
+                        # a slot mid-prefill owns real blocks, and the
+                        # vacant-row garbage write must go to the trash
+                        # block, not into K/V its earlier chunks wrote
+                        bt = pool.block_tables.copy()
+                        for s in range(self.n_slots):
+                            if s not in sched.running:
+                                bt[s] = -1
+                        logits, pool.caches = self.decode_step(
+                            params, pool.caches, cur_tok,
+                            jnp.asarray(pos_host), jnp.asarray(bt))
+                    else:
+                        logits, pool.caches = self.decode_step(
+                            params, pool.caches, cur_tok,
+                            jnp.asarray(pos_host))
+                    nxt_dev = greedy_next_token(logits)
+                    cur_tok = nxt_dev[:, None]
+                    deliveries = []
+                    for slot in list(sched.running):
+                        st = sched.running[slot]
+                        deliveries.append((st, len(st.out_tokens), slot))
+                        sched.record_token(slot, None)
+                    emit(nxt_dev, deliveries)
+                    decode_s += time.perf_counter() - t0
+                    n_steps += 1
+                    stall_s.append(stall_s_run)
+                    stall_s_run = 0.0
+                    stall_run = 0
+                    # deadline-based retirement: a request is done after
+                    # exactly max_new_tokens scheduled steps — the host
+                    # never inspects token values to decide
+                    for slot in list(sched.running):
+                        st = sched.running[slot]
+                        if st.done:
+                            retired.append(sched.retire(st, now))
+                            pool.free_slot(slot)
+                    now += 1
+                elif not sched.prefilling:
+                    # idle: jump the clock to the next arrival, don't spin
+                    nxt_arrival = sched.next_arrival()
+                    if nxt_arrival is None:
+                        break
+                    now = max(now + 1, nxt_arrival)
+        finally:
+            if consumer is not None:
+                # drain: everything emitted gets delivered before we return.
+                # Counted separately from host_blocked_s — this wait overlaps
+                # no dispatchable work (the schedule is complete), so it is
+                # not critical-path blocking, just the pipeline emptying
+                t0 = time.perf_counter()
+                q.put(None)
+                consumer.join()
+                drain_wait_s += time.perf_counter() - t0
+
+        t_drain_end = time.perf_counter()
+        total_s = t_drain_end - t_start
+        if consumer_err:
+            raise consumer_err[0]
+        if not sync and t_first_decode is not None:
+            # async decode_s: the producer only measured dispatch time, so
+            # report the wall span from the first decode dispatch to drain
+            # end (device compute, interleaved prefill, and overlapped
+            # readbacks) — the honest denominator for pipelined throughput
+            decode_s = max(decode_s, t_drain_end - t_first_decode)
+        results = {st.request.rid: sched.materialize(st) for st in retired}
         counters = {
             "paged": self.paged,
             "peak_queue_depth": peak_queue,
@@ -558,6 +778,22 @@ class ContinuousBatchingEngine:
             "max_decode_stall_run": max_stall_run,
             "prefill_buckets": len(self.prefill_compile_keys),
             "distinct_prompt_lens": len(self.prompt_lens_seen),
+            # host/device overlap: how long the producer thread sat blocked
+            # on token transfers *on the decode critical path* (sync: every
+            # step's readback; async: queue backpressure only — the final
+            # drain is drain_wait_s, overlapping no dispatchable work), how
+            # readbacks batched, and how far the device ran ahead of the host
+            "sync": bool(sync),
+            "host_blocked_s": host_blocked_s,
+            "host_blocked_s_per_step": host_blocked_s / max(n_steps, 1),
+            "drain_wait_s": drain_wait_s,
+            "n_readbacks": n_readbacks,
+            "readback_batch_max": int(max(readback_sizes, default=0)),
+            "readback_batch_mean": (float(np.mean(readback_sizes))
+                                    if readback_sizes else 0.0),
+            "steps_in_flight_peak": inflight_peak,
+            "n_cancelled": sum(1 for st in retired
+                               if st.result_status != "ok"),
         }
         if stall_s:
             arr = np.sort(np.asarray(stall_s, np.float64))

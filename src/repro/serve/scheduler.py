@@ -38,11 +38,15 @@ DONE = "done"
 @dataclasses.dataclass
 class Request:
     """One generation request. ``arrival`` is in engine clock ticks
-    (decode steps); 0 means present from the start."""
+    (decode steps); 0 means present from the start. ``timeout_steps``, if
+    set, cancels the request (status ``"timeout"``) once the engine clock
+    reaches ``arrival + timeout_steps`` before it finishes — step-based so
+    timeout behavior is deterministic in tests."""
     rid: int
     tokens: np.ndarray                # (T,) int32 prompt
     max_new_tokens: int
     arrival: int = 0
+    timeout_steps: Optional[int] = None
 
     @property
     def prompt_len(self) -> int:
@@ -62,6 +66,7 @@ class RequestState:
     ttft_s: float = 0.0
     admitted_step: int = -1
     finished_step: int = -1
+    result_status: str = "ok"         # "ok" | "cancelled" | "timeout"
 
     @property
     def done(self) -> bool:
@@ -71,10 +76,11 @@ class RequestState:
 @dataclasses.dataclass
 class RequestResult:
     rid: int
-    tokens: np.ndarray                # (max_new_tokens,) greedy continuation
+    tokens: np.ndarray                # (<= max_new_tokens,) greedy continuation
     ttft_s: float
     admitted_step: int
     finished_step: int
+    status: str = "ok"                # "ok" | "cancelled" | "timeout"
 
 
 class Scheduler:
@@ -164,16 +170,48 @@ class Scheduler:
         st.next_pos += 1
         return st
 
-    def finish(self, st: RequestState, now: int) -> RequestResult:
-        if st.slot in self.running:
+    # ---- retirement ----
+    def retire(self, st: RequestState, now: int,
+               status: str = "ok") -> RequestState:
+        """Drop ``st`` from the live sets and stamp its outcome, without
+        materializing the result array. The async engine retires requests
+        the moment their *step schedule* completes (token values may still
+        be in flight to the host); :meth:`materialize` builds the
+        ``RequestResult`` once every delivered value has landed."""
+        if st.slot in self.running and self.running.get(st.slot) is st:
             del self.running[st.slot]
+        if st.slot in self.prefilling and self.prefilling.get(st.slot) is st:
+            del self.prefilling[st.slot]
         st.status = DONE
         st.finished_step = now
+        st.result_status = status
+        return st
+
+    @staticmethod
+    def materialize(st: RequestState) -> RequestResult:
+        """Build the result record from a retired state. All token slots the
+        request committed must be filled by now (no ``None`` placeholders)."""
+        toks = st.out_tokens[:st.request.max_new_tokens]
+        assert all(t is not None for t in toks), (
+            f"rid {st.request.rid}: undelivered token placeholders at "
+            f"materialize time (consumer did not drain?)")
         return RequestResult(
             rid=st.request.rid,
-            tokens=np.asarray(st.out_tokens[:st.request.max_new_tokens],
-                              np.int32),
+            tokens=np.asarray(toks, np.int32),
             ttft_s=st.ttft_s,
             admitted_step=st.admitted_step,
-            finished_step=now,
+            finished_step=st.finished_step,
+            status=st.result_status,
         )
+
+    def finish(self, st: RequestState, now: int) -> RequestResult:
+        return self.materialize(self.retire(st, now))
+
+    # ---- cancellation ----
+    def remove_waiting(self, rid: int) -> Optional[RequestState]:
+        """Drop a still-queued request (cancellation before admission)."""
+        for i, st in enumerate(self._queue):
+            if st.request.rid == rid:
+                del self._queue[i]
+                return st
+        return None

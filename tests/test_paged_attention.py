@@ -226,9 +226,9 @@ if HAS_HYPOTHESIS:
 # ---------------------------------------------------------------------------
 
 
-def _layer_attention_case(paged_attn, ctx=None, window=None):
+def _layer_attention_case(paged_attn, ctx=None, window=None, kv_scales=None):
     cfg = L.AttnConfig(d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
-                       window=window)
+                       window=window, kv_dequant_scales=kv_scales)
     rng = np.random.default_rng(11)
     specs = L.attn_specs("attn", cfg)
     key = jax.random.key(0)
@@ -330,3 +330,68 @@ def test_layer_mp_on_bgemm_falls_back_to_gather():
     yf, _ = _layer_attention_case("fused", ctx=ctx_mp)
     yg, _ = _layer_attention_case("gather", ctx=ctx_mp)
     np.testing.assert_array_equal(yf, yg)
+
+
+# ---------------------------------------------------------------------------
+# KV dequant scales: one mapping, both read paths
+# ---------------------------------------------------------------------------
+
+
+def test_layer_scaled_kv_fused_matches_gather():
+    """Non-unit ``kv_dequant_scales`` must dequantize identically on both
+    paged read paths (regression: the gather fallback used to drop them,
+    silently diverging from the fused kernel's in-register dequant)."""
+    scales = (("k", 0.5), ("v", 2.0))
+    yf, _ = _layer_attention_case("fused", kv_scales=scales)
+    yg, _ = _layer_attention_case("gather", kv_scales=scales)
+    np.testing.assert_array_equal(yf, yg)
+    # and the scales actually bite — a unit-scale run differs
+    yu, _ = _layer_attention_case("gather")
+    assert not np.array_equal(yg, yu)
+
+
+def test_paged_gather_applies_dequant_scales():
+    """layers.paged_gather with scales == the kernel oracle's gathered
+    dequant (f32 multiply then cast), exercised through fp8 storage where
+    the rounding point actually matters; absent/unit entries stay a plain
+    upcast bit-identical to the legacy gather."""
+    rng = np.random.default_rng(5)
+    cache = {"k": jnp.asarray(rng.normal(size=(7, 4, 2, 8)),
+                              jnp.float8_e4m3fn),
+             "v": jnp.asarray(rng.normal(size=(7, 4, 2, 8)),
+                              jnp.float8_e4m3fn)}
+    bt = jnp.asarray([[1, 3, -1], [2, 6, 4]], jnp.int32)
+    g, _ = L.paged_gather(cache, bt, jnp.bfloat16,
+                          {"k": 0.5, "v": 2.0})
+    for name, s in (("k", 0.5), ("v", 2.0)):
+        want = ref._paged_deq(cache[name], bt, jnp.bfloat16, s)
+        np.testing.assert_array_equal(np.asarray(g[name], np.float32),
+                                      np.asarray(want, np.float32))
+    g1, _ = L.paged_gather(cache, bt, jnp.bfloat16, {"k": 1.0})
+    legacy, _ = L.paged_gather(cache, bt, jnp.bfloat16)
+    for name in ("k", "v"):
+        np.testing.assert_array_equal(np.asarray(g1[name], np.float32),
+                                      np.asarray(legacy[name], np.float32))
+
+
+def test_mla_fused_rejects_nonunit_scales():
+    """The fused absorbed-MLA path cannot reproduce the gather path's bf16
+    rounding of scaled latents, so it must refuse non-unit scales instead
+    of silently diverging."""
+    cfg = L.MLAConfig(d_model=32, n_heads=2, q_lora_rank=8, kv_lora_rank=8,
+                      qk_nope_dim=8, qk_rope_dim=4, v_head_dim=8,
+                      absorb_decode=True)
+    rng = np.random.default_rng(7)
+    B, bs, n_pages = 1, 4, 2
+    p = {"kv_b_proj": {"w": jnp.asarray(
+        rng.normal(size=(2 * (8 + 8), 8)) * 0.05, jnp.bfloat16)}}
+    qn = jnp.asarray(rng.normal(size=(B, 1, 2, 8)), jnp.bfloat16)
+    qr = jnp.asarray(rng.normal(size=(B, 1, 2, 4)), jnp.bfloat16)
+    cache = {"ckv": jnp.asarray(rng.normal(size=(5, bs, 8)), jnp.bfloat16),
+             "kr": jnp.asarray(rng.normal(size=(5, bs, 4)), jnp.bfloat16)}
+    bt = jnp.asarray([[1, 2]], jnp.int32)
+    pos = jnp.asarray([[5]], jnp.int32)
+    with pytest.raises(ValueError, match="non-unit"):
+        L._mla_decode_absorbed_paged(p, QuantContext(), "mla", cfg, qn, qr,
+                                     cache, bt, pos,
+                                     scales={"ckv": 0.5, "kr": 0.5})

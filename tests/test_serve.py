@@ -138,6 +138,255 @@ def test_single_token_requests(model, params, prompts):
 
 
 # ---------------------------------------------------------------------------
+# seed-era divergence regression (the exact reported shape) + async pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_seed_divergence_shape_regression(model, params):
+    """Regression at the exact shape of the seed-era divergence note
+    (3 requests x 16-token prompts x 4 new tokens): continuous greedy
+    tokens must be bit-identical to the one-shot reference on cold AND
+    warm drains, paged and dense, async and sync.
+
+    Root cause of the divergence class this pins down: on CPU,
+    ``jnp.asarray(host_numpy)`` may be zero-copy, so mutating a reused host
+    buffer (per-slot position vectors, block tables) while a previously
+    dispatched step still aliases it corrupts in-flight device computation.
+    The old lockstep loop masked the hazard with its per-step blocking
+    readback; the pipelined engine copies/reallocates every host buffer it
+    hands to a step (see cache_pool.block_tables_device), so parity holds
+    at any pipeline depth."""
+    rng = np.random.default_rng(0)
+    ps = [rng.integers(0, 500, size=16).astype(np.int32) for _ in range(3)]
+    ref = _oneshot_reference(model, params, ps, max_new=4)
+    for paged in (True, False):
+        for sync in (False, True):
+            eng = ContinuousBatchingEngine(model, n_slots=4, max_len=32,
+                                           paged=paged, block_size=8)
+            reqs = [Request(rid=i, tokens=p, max_new_tokens=4)
+                    for i, p in enumerate(ps)]
+            for drain in ("cold", "warm"):
+                summ = eng.serve(params, reqs, sync=sync)
+                for i in range(3):
+                    np.testing.assert_array_equal(
+                        summ.results[i].tokens, ref[i],
+                        err_msg=f"paged={paged}/sync={sync}/{drain}")
+
+
+def test_async_pipeline_matches_sync_bitwise(model, params, prompts):
+    """The pipelined (async) drain and the lockstep (sync) drain run the
+    same device schedule: greedy tokens are bit-identical, and the overlap
+    counters record how each mode moved tokens to the host."""
+    reqs = [Request(rid=i, tokens=p, max_new_tokens=6, arrival=i)
+            for i, p in enumerate(prompts)]
+    eng = ContinuousBatchingEngine(model, n_slots=2, max_len=32)
+    s_sync = eng.serve(params, reqs, sync=True)
+    s_async = eng.serve(params, reqs, sync=False)
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(s_async.results[i].tokens,
+                                      s_sync.results[i].tokens)
+    cs, ca = s_sync.counters, s_async.counters
+    assert cs["sync"] and not ca["sync"]
+    # sync reads back once per emitted step, batch size always 1
+    assert cs["readback_batch_max"] == 1
+    assert cs["n_readbacks"] >= s_sync.n_steps
+    assert cs["steps_in_flight_peak"] == 0
+    # async: the consumer drains greedily, so readbacks can batch and can
+    # never outnumber the emitted steps
+    assert ca["n_readbacks"] <= cs["n_readbacks"]
+    assert ca["readback_batch_max"] >= 1
+    assert ca["host_blocked_s"] >= 0.0
+    assert s_async.n_steps == s_sync.n_steps
+
+
+def test_on_token_stream_order_and_parity(model, params, prompts):
+    """Property: the async ``on_token`` stream delivers each request's
+    tokens in index order, and the streamed values equal the sync engine's
+    results exactly (the satellite's streamed-order contract)."""
+    reqs = [Request(rid=i, tokens=p, max_new_tokens=5, arrival=i)
+            for i, p in enumerate(prompts)]
+    eng = ContinuousBatchingEngine(model, n_slots=2, max_len=32)
+    ref = eng.serve(params, reqs, sync=True)
+    events: dict = {i: [] for i in range(len(prompts))}
+
+    def on_token(rid, idx, tok):
+        events[rid].append((idx, tok))
+
+    summ = eng.serve(params, reqs, on_token=on_token)
+    for i in range(len(prompts)):
+        idxs = [e[0] for e in events[i]]
+        assert idxs == list(range(len(idxs))), f"rid {i}: out-of-order"
+        streamed = np.asarray([e[1] for e in events[i]], np.int32)
+        np.testing.assert_array_equal(streamed, ref.results[i].tokens)
+        np.testing.assert_array_equal(summ.results[i].tokens, streamed)
+        # TTFT is stamped at token *delivery* on the consumer thread
+        assert summ.results[i].ttft_s > 0
+
+
+# ---------------------------------------------------------------------------
+# cancellation / timeouts / shutdown (what the pipeline restructure unlocks)
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_waiting_request(model, params, prompts):
+    """Cancelling a still-queued request removes it without device work;
+    the running request is untouched."""
+    ref = _oneshot_reference(model, params, prompts[:2], max_new=6)
+    eng = ContinuousBatchingEngine(model, n_slots=1, max_len=32)
+
+    def on_token(rid, idx, tok):
+        if rid == 0 and idx == 0:
+            eng.cancel(1)        # rid 1 is still waiting for the only slot
+
+    summ = eng.serve(params, [Request(rid=i, tokens=p, max_new_tokens=6)
+                              for i, p in enumerate(prompts[:2])],
+                     sync=True, on_token=on_token)
+    np.testing.assert_array_equal(summ.results[0].tokens, ref[0])
+    assert summ.results[0].status == "ok"
+    assert summ.results[1].status == "cancelled"
+    assert len(summ.results[1].tokens) == 0
+    assert summ.counters["n_cancelled"] == 1
+
+
+def test_cancel_mid_decode_sync_deterministic(model, params, prompts):
+    """Sync mode makes cancellation step-deterministic: a cancel issued from
+    the delivery of token idx=2 takes effect at the next tick, so the
+    request keeps exactly 3 tokens — a bit-exact prefix of the reference."""
+    ref = _oneshot_reference(model, params, prompts[:2], max_new=6)
+    eng = ContinuousBatchingEngine(model, n_slots=2, max_len=32)
+
+    def on_token(rid, idx, tok):
+        if rid == 0 and idx == 2:
+            eng.cancel(0)
+
+    summ = eng.serve(params, [Request(rid=i, tokens=p, max_new_tokens=6)
+                              for i, p in enumerate(prompts[:2])],
+                     sync=True, on_token=on_token)
+    assert summ.results[0].status == "cancelled"
+    np.testing.assert_array_equal(summ.results[0].tokens, ref[0][:3])
+    assert summ.results[1].status == "ok"
+    np.testing.assert_array_equal(summ.results[1].tokens, ref[1])
+    assert summ.counters["n_cancelled"] == 1
+
+
+def test_cancel_mid_decode_async_prefix(model, params, prompts):
+    """Under the pipeline, cancellation lands within the pipeline depth:
+    the cancelled request keeps some bit-exact prefix of the reference and
+    every other request is untouched. max_new must exceed the worst-case
+    dispatch-ahead (queue depth + one blocked put + the in-progress tick)
+    or the request can legitimately finish before the cancel is observed —
+    max_in_flight=2 bounds that at ~6 tokens, well under 14."""
+    ref = _oneshot_reference(model, params, prompts[:2], max_new=14)
+    eng = ContinuousBatchingEngine(model, n_slots=2, max_len=32)
+
+    def on_token(rid, idx, tok):
+        if rid == 0 and idx == 1:
+            eng.cancel(0)
+
+    summ = eng.serve(params, [Request(rid=i, tokens=p, max_new_tokens=14)
+                              for i, p in enumerate(prompts[:2])],
+                     on_token=on_token, max_in_flight=2)
+    r0 = summ.results[0]
+    assert r0.status == "cancelled"
+    assert 1 <= len(r0.tokens) <= 8
+    np.testing.assert_array_equal(r0.tokens, ref[0][:len(r0.tokens)])
+    np.testing.assert_array_equal(summ.results[1].tokens, ref[1])
+    assert summ.results[1].status == "ok"
+
+
+def test_cancel_mid_prefill_frees_blocks(model, params, prompts):
+    """Cancelling a request while its long prompt is mid-chunked-prefill
+    frees its slot and every block it materialized; the decoding request
+    keeps exact parity."""
+    rng = np.random.default_rng(13)
+    long_p = rng.integers(0, 500, size=40).astype(np.int32)
+    short = prompts[0]
+    ref = _oneshot_reference(model, params, [short], max_new=8)
+    eng = ContinuousBatchingEngine(model, n_slots=2, max_len=64,
+                                   block_size=8, chunk_len=8, chunk_budget=1)
+
+    def on_token(rid, idx, tok):
+        if rid == 0 and idx == 2:
+            eng.cancel(1)        # rid 1 is ~1 chunk into its 5-chunk prompt
+
+    summ = eng.serve(
+        params,
+        [Request(rid=0, tokens=short, max_new_tokens=8),
+         Request(rid=1, tokens=long_p, max_new_tokens=8, arrival=1)],
+        sync=True, on_token=on_token)
+    np.testing.assert_array_equal(summ.results[0].tokens, ref[0])
+    assert summ.results[1].status == "cancelled"
+    assert len(summ.results[1].tokens) == 0      # never finished prefill
+    # no leaked blocks: everything the dead prefill materialized came back
+    assert summ.counters["free_blocks_final"] == \
+        summ.counters["n_blocks"] - 1
+
+
+def test_timeout_steps_deterministic(model, params, prompts):
+    """``Request.timeout_steps`` is engine-clock-based: arrival 0 with
+    timeout 2 retires at tick 2 with exactly 3 committed tokens (prefill +
+    two decode steps), a bit-exact prefix of the reference."""
+    ref = _oneshot_reference(model, params, prompts[:2], max_new=6)
+    eng = ContinuousBatchingEngine(model, n_slots=2, max_len=32)
+    summ = eng.serve(
+        params,
+        [Request(rid=0, tokens=prompts[0], max_new_tokens=6,
+                 timeout_steps=2),
+         Request(rid=1, tokens=prompts[1], max_new_tokens=6)],
+        sync=True)
+    assert summ.results[0].status == "timeout"
+    np.testing.assert_array_equal(summ.results[0].tokens, ref[0][:3])
+    assert summ.results[0].finished_step == 2
+    assert summ.results[1].status == "ok"
+    np.testing.assert_array_equal(summ.results[1].tokens, ref[1])
+
+
+def test_shutdown_drains_partial_results(model, params, prompts):
+    """shutdown() from a streaming callback cancels everything unfinished
+    at the next tick, drains in-flight transfers, and returns partial
+    results — every committed token a bit-exact reference prefix."""
+    ref = _oneshot_reference(model, params, prompts, max_new=6)
+    eng = ContinuousBatchingEngine(model, n_slots=4, max_len=32)
+
+    def on_token(rid, idx, tok):
+        if rid == 0 and idx == 1:
+            eng.shutdown()
+
+    reqs = [Request(rid=i, tokens=p, max_new_tokens=6)
+            for i, p in enumerate(prompts)]
+    summ = eng.serve(params, reqs, sync=True, on_token=on_token)
+    assert set(summ.results) == set(range(len(prompts)))
+    assert summ.counters["n_cancelled"] == len(prompts)
+    for i in range(len(prompts)):
+        r = summ.results[i]
+        assert r.status == "cancelled"
+        np.testing.assert_array_equal(r.tokens, ref[i][:len(r.tokens)])
+        assert len(r.tokens) >= 1            # prefill had already landed
+
+
+def test_on_token_error_cancels_and_reraises(model, params, prompts):
+    """An exception from the streaming callback acts as an implicit
+    shutdown: in-flight transfers drain (no producer deadlock), the error
+    re-raises from serve(), and the engine stays reusable."""
+    eng = ContinuousBatchingEngine(model, n_slots=2, max_len=32)
+
+    def on_token(rid, idx, tok):
+        if idx == 1:
+            raise RuntimeError("client went away")
+
+    reqs = [Request(rid=i, tokens=p, max_new_tokens=6)
+            for i, p in enumerate(prompts[:2])]
+    with pytest.raises(RuntimeError, match="client went away"):
+        eng.serve(params, reqs, on_token=on_token)
+    # engine is not poisoned: a fresh drain on the same engine is exact
+    ref = _oneshot_reference(model, params, prompts[:2], max_new=6)
+    summ = eng.serve(params, reqs)
+    for i in range(2):
+        np.testing.assert_array_equal(summ.results[i].tokens, ref[i])
+        assert summ.results[i].status == "ok"
+
+
+# ---------------------------------------------------------------------------
 # per-slot position vectors (the decode-path change under the engine)
 # ---------------------------------------------------------------------------
 
