@@ -78,5 +78,18 @@ def eval_metrics(model, params, data, assignment=None, n_batches=4,
     return float(np.mean(losses)), float(np.mean(accs))
 
 
+_ROWS: list = []
+
+
 def emit(name: str, us_per_call: float, derived: str) -> None:
+    _ROWS.append({"name": name, "us": float(us_per_call), "derived": derived})
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def write_rows_json(path: str) -> None:
+    """Dump every ``emit`` row of this process as a JSON artifact (the
+    BENCH_*.json trajectory files the ROADMAP tracks)."""
+    import json
+    with open(path, "w") as f:
+        json.dump({"rows": _ROWS}, f, indent=2, sort_keys=True)
+    print(f"# wrote {len(_ROWS)} benchmark rows to {path}")

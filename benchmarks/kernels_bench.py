@@ -6,13 +6,14 @@ deployment fallback path) plus the interpret-mode allclose check per shape.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_rows_json
 from repro.kernels import ops, ref
 from repro.kernels.quant_cast import quantize_fp8
 
@@ -26,6 +27,12 @@ def _time(fn, *args, iters=5):
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", nargs="?", const="BENCH_kernels.json",
+                    default=None, metavar="PATH",
+                    help="also write the rows as JSON (default path "
+                         "BENCH_kernels.json when the flag is given bare)")
+    args = ap.parse_args()
     key = jax.random.key(0)
     print("kernel,shape,us_xla_path,interpret_ok")
     for (M, K, N) in ((256, 512, 256), (512, 1024, 512)):
@@ -60,6 +67,9 @@ def main() -> None:
     emit(f"kernels.mp_flash_attention_{B}x{H}x{T}x{D}", us, f"allclose={ok}")
 
     paged_attention_rows(key)
+
+    if args.json:
+        write_rows_json(args.json)
 
 
 def paged_attention_rows(key) -> None:

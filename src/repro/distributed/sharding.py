@@ -13,6 +13,9 @@ ZeRO-1 = optimizer state additionally sharded over data (largest free dim).
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
+import dataclasses
 import math
 from typing import Optional
 
@@ -22,7 +25,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.nn.spec import ParamSpec
 
 __all__ = ["DEFAULT_RULES", "partition_spec", "param_shardings",
-           "zero_partition_spec", "batch_pspec", "named"]
+           "zero_partition_spec", "batch_pspec", "named",
+           "ServingMeshLayout", "serving_layout_scope",
+           "current_serving_layout"]
 
 # logical axis -> candidate mesh axes (tuple = shard jointly over all)
 DEFAULT_RULES = {
@@ -39,6 +44,7 @@ DEFAULT_RULES = {
     "embed": (),            # replicated (activations are batch-sharded)
     "layers": (),           # stacked-layer leading dim: never sharded
     "act_batch": ("pod", "data"),
+    "kv_blocks": ("data",),   # paged-KV pool pages: device-sharded pool
     None: (),
 }
 
@@ -147,3 +153,55 @@ def batch_pspec(mesh: Mesh, extra_dims: int = 1) -> P:
 
 def named(mesh: Mesh, pspec: P) -> NamedSharding:
     return NamedSharding(mesh, pspec)
+
+
+# ---------------------------------------------------------------------------
+# Serving mesh layout
+# ---------------------------------------------------------------------------
+# The serving stack compiles its steps once per (model, kind, mp, ...) and
+# the paged-attention dispatch inside the model needs to know, *at trace
+# time*, how the serving state is laid out across the mesh: whether KV pages
+# are device-sharded (so block ids must be translated to shard-local ids
+# under shard_map) and whether batch/head extents divide the mesh axes. A
+# contextvar carries that layout; `get_serving_step` activates it around each
+# compiled step so retraces always see the layout they were memoised under.
+
+@dataclasses.dataclass(frozen=True)
+class ServingMeshLayout:
+    """Static description of how serving state is spread over a mesh.
+
+    ``shard_pages`` is True when the paged KV pool's leading block dim is
+    sharded over ``data`` (requires ``n_blocks % data == 0``); each shard then
+    owns ``blocks_per_shard`` consecutive pages and keeps its own trash block
+    at local id 0. Slots always shard over ``data`` (``n_slots % data == 0``
+    is asserted at construction).
+    """
+    mesh: Mesh
+    data: int
+    model: int
+    n_slots: int
+    block_size: int = 0
+    n_blocks: int = 0
+    shard_pages: bool = False
+    blocks_per_shard: int = 0
+
+    def fused_ok(self, batch: int, n_kv_heads: int) -> bool:
+        """Can the fused paged kernel run per-shard under shard_map?"""
+        return batch % self.data == 0 and n_kv_heads % self.model == 0
+
+
+_SERVING_LAYOUT: contextvars.ContextVar = contextvars.ContextVar(
+    "serving_mesh_layout", default=None)
+
+
+@contextlib.contextmanager
+def serving_layout_scope(layout: Optional[ServingMeshLayout]):
+    token = _SERVING_LAYOUT.set(layout)
+    try:
+        yield layout
+    finally:
+        _SERVING_LAYOUT.reset(token)
+
+
+def current_serving_layout() -> Optional[ServingMeshLayout]:
+    return _SERVING_LAYOUT.get()

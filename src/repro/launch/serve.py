@@ -103,9 +103,17 @@ def main():
                     help="decode steps between request arrivals")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged KV block size in tokens (continuous mode)")
-    ap.add_argument("--n-blocks", type=int, default=None,
-                    help="paged KV pool size incl. the trash block "
-                         "(default: worst case, never backpressures)")
+    ap.add_argument("--n-blocks", default=None,
+                    help="paged KV pool size incl. the trash block(s): an "
+                         "int, 'auto' to size from the request profile "
+                         "(p95 live-block demand x headroom, see "
+                         "PagedCachePool.size_n_blocks), or omit for the "
+                         "worst case (never backpressures)")
+    ap.add_argument("--mesh", default=None,
+                    help="serving mesh spec like 'data=2,model=2' "
+                         "(continuous mode; needs data*model JAX devices, "
+                         "e.g. XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N on CPU); omit for single-device")
     ap.add_argument("--chunk-len", type=int, default=None,
                     help="split prompts into prefill chunks of this many "
                          "tokens, interleaved with decode steps (continuous "
@@ -158,16 +166,44 @@ def main():
                   f"model (e.g. {sorted(unknown)[:3]}) — they will NOT "
                   f"apply; was the plan solved for a different arch?")
 
+    if args.mesh and not args.continuous:
+        raise SystemExit("--mesh shards the continuous-batching engine; "
+                         "pass --continuous")
+
     if args.continuous:
+        from repro.launch.mesh import mesh_from_spec
+        mesh = mesh_from_spec(args.mesh)
+        if mesh is not None:
+            print(f"[serve] mesh: {dict(mesh.shape)}")
         max_len = args.prompt_len + args.new_tokens
+        n_blocks = args.n_blocks
+        if n_blocks == "auto":
+            from repro.serve.cache_pool import PagedCachePool
+            if args.dense_slots:
+                raise SystemExit("--n-blocks auto sizes the paged pool; "
+                                 "drop --dense-slots")
+            data_shards = mesh.shape["data"] if mesh is not None else 1
+            profile = [(args.prompt_len, args.new_tokens)] * args.requests
+            n_blocks = PagedCachePool.size_n_blocks(
+                profile, args.n_slots, args.block_size,
+                data_shards=data_shards)
+            worst, _, _ = PagedCachePool.plan_blocks(
+                args.n_slots, max_len, args.block_size,
+                data_shards=data_shards)
+            print(f"[serve] auto-sized paged pool: {n_blocks} blocks "
+                  f"(worst case {worst}) from {args.requests}-request "
+                  f"profile at p95 live demand x1.25 headroom")
+        elif n_blocks is not None:
+            n_blocks = int(n_blocks)
         eng = ContinuousBatchingEngine(model, n_slots=args.n_slots,
                                        max_len=max_len, mp=plan,
                                        paged=not args.dense_slots,
                                        block_size=args.block_size,
-                                       n_blocks=args.n_blocks,
+                                       n_blocks=n_blocks,
                                        chunk_len=args.chunk_len,
                                        chunk_budget=args.chunk_budget,
-                                       paged_attn=args.paged_attn)
+                                       paged_attn=args.paged_attn,
+                                       mesh=mesh)
         rng = np.random.default_rng(1)
         reqs = [Request(rid=i,
                         tokens=rng.integers(0, model.cfg.vocab_size,

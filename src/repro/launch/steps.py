@@ -178,14 +178,21 @@ def _mp_cache_key(mp):
 
 
 def get_serving_step(model, kind: str, mp=None,
-                     paged_attn: Optional[str] = None, donate: bool = False):
+                     paged_attn: Optional[str] = None, donate: bool = False,
+                     mesh_layout=None):
     """Memoized ``jax.jit`` of a serving step for ``model``.
 
     ``kind`` is one of ``prefill`` / ``bucketed_prefill`` /
     ``chunked_prefill`` / ``decode`` / ``paged_decode``. Steps are cached per
-    (model, kind, MP assignment, paged_attn, donation) so every engine over
-    the same model reuses one compiled program per input shape. ``mp`` may be
-    an assignment dict or an ``MPPlan``.
+    (model, kind, MP assignment, paged_attn, donation, mesh layout) so every
+    engine over the same model reuses one compiled program per input shape.
+    ``mp`` may be an assignment dict or an ``MPPlan``.
+
+    ``mesh_layout`` (a ``ServingMeshLayout``) makes the step mesh-aware: the
+    layout contextvar is active around every call — in particular at trace
+    time, where the paged-attention dispatch reads it (shard_map vs gather)
+    — and the call runs inside ``with mesh:`` so activation shard hints see
+    the physical mesh. Each distinct layout gets its own compiled program.
     """
     builders = {
         "prefill": make_prefill_step,
@@ -198,7 +205,7 @@ def get_serving_step(model, kind: str, mp=None,
         raise ValueError(f"unknown serving step kind {kind!r}")
     if paged_attn is not None and kind != "paged_decode":
         raise ValueError("paged_attn only applies to kind='paged_decode'")
-    key = (kind, _mp_cache_key(mp), paged_attn, bool(donate))
+    key = (kind, _mp_cache_key(mp), paged_attn, bool(donate), mesh_layout)
     with _SERVING_STEPS_LOCK:
         cache = _SERVING_STEPS.setdefault(model, {})
         fn = cache.get(key)
@@ -208,7 +215,16 @@ def get_serving_step(model, kind: str, mp=None,
                                              paged_attn=paged_attn or "fused")
             else:
                 raw = builders[kind](model, mp=mp)
-            fn = jax.jit(raw, donate_argnums=(1,) if donate else ())
+            jitted = jax.jit(raw, donate_argnums=(1,) if donate else ())
+            if mesh_layout is None:
+                fn = jitted
+            else:
+                from repro.distributed.sharding import serving_layout_scope
+
+                @functools.wraps(jitted)
+                def fn(*a, __jitted=jitted, __layout=mesh_layout, **kw):
+                    with __layout.mesh, serving_layout_scope(__layout):
+                        return __jitted(*a, **kw)
             cache[key] = fn
     return fn
 

@@ -572,6 +572,24 @@ class LM:
         return self._materialize_cache(
             self.paged_cache_specs(n_slots, n_blocks, block_size), abstract)
 
+    @classmethod
+    def assemble_cache_tree(cls, flat: dict) -> dict:
+        """Flat ``layers/i@sub/path`` keys -> the nested cache pytree the
+        engines carry (same structure for any leaf values — specs, arrays,
+        or shardings, so a sharding tree built from cache *specs* always
+        ``tree.map``s against the materialized cache)."""
+        tree = cls._cache_tree(flat)
+        # unwrap single-sub caches: {"attn": {...}} -> cache dict for _block
+        out = {}
+        for lk, subs in tree.items():
+            if set(subs) == {"attn"}:
+                out[lk] = subs["attn"]
+            elif set(subs) == {"mamba"}:
+                out[lk] = subs["mamba"]
+            else:
+                out[lk] = subs
+        return out
+
     def _materialize_cache(self, specs: dict, abstract: bool = False) -> dict:
         if abstract:
             flat = {k: jax.ShapeDtypeStruct(s.shape, s.dtype)
@@ -583,17 +601,7 @@ class LM:
                     flat[k] = jnp.full(s.shape, -1, jnp.int32)
                 else:
                     flat[k] = jnp.zeros(s.shape, s.dtype)
-        tree = self._cache_tree(flat)
-        # unwrap single-sub caches: {"attn": {...}} -> cache dict for _block
-        out = {}
-        for lk, subs in tree.items():
-            if set(subs) == {"attn"}:
-                out[lk] = subs["attn"]
-            elif set(subs) == {"mamba"}:
-                out[lk] = subs["mamba"]
-            else:
-                out[lk] = subs
-        return out
+        return self.assemble_cache_tree(flat)
 
     def paged_insert(self, paged: dict, dense1: dict, block_ids: jax.Array,
                      slot: jax.Array) -> dict:

@@ -211,12 +211,19 @@ def kv_page_spec(cfg: AttnConfig, n_blocks: int, block_size: int,
     """Paged KV storage: ``n_blocks`` physical blocks of ``block_size``
     tokens, shared by all decode rows via block tables. Sliding-window archs
     keep masked-window *compute* but not O(window) *memory* under paging
-    (block tables grow with absolute position)."""
+    (block tables grow with absolute position).
+
+    The leading block dim carries the ``kv_blocks`` logical axis: under a
+    serving mesh the physical pool is device-sharded over ``data`` (each
+    shard owns a contiguous page range, see ``PagedCachePool``), falling
+    back to replication when ``n_blocks`` doesn't divide."""
     return {
         "k": ParamSpec((n_blocks, block_size, cfg.n_kv_heads, cfg.d_head),
-                       (None, None, "kv_heads", "head_dim"), dtype, "zeros"),
+                       ("kv_blocks", None, "kv_heads", "head_dim"), dtype,
+                       "zeros"),
         "v": ParamSpec((n_blocks, block_size, cfg.n_kv_heads, cfg.d_head),
-                       (None, None, "kv_heads", "head_dim"), dtype, "zeros"),
+                       ("kv_blocks", None, "kv_heads", "head_dim"), dtype,
+                       "zeros"),
     }
 
 
@@ -316,6 +323,75 @@ def use_fused_paged(ctx: QuantContext, scope: str, paged_attn: str) -> bool:
     return True
 
 
+def _mesh_fused_ok(batch: int, n_kv_heads: int) -> bool:
+    """Mesh leg of the fused-paged dispatch: under a serving mesh the kernel
+    runs per-shard (shard_map), which needs the decode batch to divide the
+    ``data`` axis and the KV heads to divide ``model``; otherwise the layer
+    takes the gather path, which GSPMD partitions correctly (and which is
+    bit-identical to the kernel, so greedy parity holds either way)."""
+    from repro.distributed.sharding import current_serving_layout
+    layout = current_serving_layout()
+    return layout is None or layout.fused_ok(batch, n_kv_heads)
+
+
+def _paged_kernel_call(qk: jax.Array, k_pages: jax.Array, v_pages,
+                       block_tables: jax.Array, lengths: jax.Array, *,
+                       window=None, q2=None, k2=None, **kw) -> jax.Array:
+    """Invoke the Pallas paged-decode kernel — per-shard under ``shard_map``
+    when a serving mesh layout is active.
+
+    Per shard the operands are: decode rows split over ``data`` (each shard
+    sees its own slots' queries/lengths/block-table rows), KV heads split
+    over ``model``, and — when the pool is page-sharded — the block dim
+    split over ``data`` with global block ids translated to shard-local ones
+    (slot ``s``'s blocks live in ``s``'s shard by pool construction; -1
+    stays -1 and clamps to the shard's own trash block). Each per-shard grid
+    keeps exactly the single-device kernel's per-row summation order, so
+    sharded decode is bit-identical to the single-device engine."""
+    from repro.kernels.paged_attention import paged_decode_attention
+    from repro.distributed.sharding import current_serving_layout
+    layout = current_serving_layout()
+    if layout is None or (layout.data == 1 and layout.model == 1):
+        return paged_decode_attention(qk, k_pages, v_pages, block_tables,
+                                      lengths, window=window, q2=q2, k2=k2,
+                                      **kw)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    q_spec = P("data", "model", None, None)
+    page_spec = P("data" if layout.shard_pages else None, None, "model", None)
+    operands = [qk, k_pages, block_tables, lengths]
+    specs = [q_spec, page_spec, P("data", None), P("data")]
+    has_v = v_pages is not None
+    if has_v:
+        operands.append(v_pages)
+        specs.append(page_spec)
+    traced_window = window is not None and not isinstance(window, int)
+    if traced_window:
+        operands.append(window)
+        specs.append(P())
+    has_q2 = q2 is not None
+    if has_q2:
+        operands.extend([q2, k2])
+        specs.extend([q_spec, page_spec])
+    bps = layout.blocks_per_shard
+
+    def body(qk_, pages_, bt_, len_, *rest):
+        rest = list(rest)
+        vp = rest.pop(0) if has_v else None
+        w = rest.pop(0) if traced_window else window
+        q2_, k2_ = rest if has_q2 else (None, None)
+        if layout.shard_pages:
+            off = jax.lax.axis_index("data") * bps
+            bt_ = jnp.where(bt_ >= 0, bt_ - off, bt_)
+        return paged_decode_attention(qk_, pages_, vp, bt_, len_, window=w,
+                                      q2=q2_, k2=k2_, **kw)
+
+    return shard_map(body, mesh=layout.mesh, in_specs=tuple(specs),
+                     out_specs=P("data", "model", None, None),
+                     check_rep=False)(*operands)
+
+
 def paged_update_attend(cache: dict, tensors: dict, block_tables: jax.Array,
                         positions: jax.Array, cache_pos, chunk_valid,
                         dtype, *, fused: bool,
@@ -354,14 +430,13 @@ def _fused_paged_attention(cfg: AttnConfig, q: jax.Array, cache: dict,
     (scan-mode per-layer windows). ``scales`` carries the same per-entry
     dequant multipliers the gather fallback applies, handed to the kernel
     as its in-register ``k_scale``/``v_scale``. Returns (B, 1, H, Dv)."""
-    from repro.kernels.paged_attention import paged_decode_attention
     B, T, H, D = q.shape
     assert T == 1, "fused paged attention is single-query decode"
     Hkv = cfg.n_kv_heads
     qk = q.reshape(B, Hkv, H // Hkv, D)
     lengths = positions[:, 0] + 1
     sc = scales or {}
-    o = paged_decode_attention(
+    o = _paged_kernel_call(
         qk, cache["k"], cache["v"], block_tables, lengths, window=window,
         scale=math.sqrt(D), scale_mode="div", score_dtype=q.dtype,
         probs_dtype=q.dtype, k_scale=float(sc.get("k", 1.0)),
@@ -548,7 +623,8 @@ def attention(p: dict, ctx: QuantContext, scope: str, cfg: AttnConfig,
             # fallback) attends the gathered logical layout, so a
             # continuation chunk sees every earlier chunk's keys.
             fused = (chunk_valid is None and causal
-                     and use_fused_paged(ctx, scope, paged_attn))
+                     and use_fused_paged(ctx, scope, paged_attn)
+                     and _mesh_fused_ok(B, Hkv))
             # one mapping feeds both read paths: the kernel's in-register
             # dequant and the gather fallback can never disagree on scales
             kv_scales = dict(cfg.kv_dequant_scales or ())
@@ -715,9 +791,9 @@ def mla_page_spec(cfg: MLAConfig, n_blocks: int, block_size: int,
     """Paged latent KV storage (see :func:`kv_page_spec` for semantics)."""
     return {
         "ckv": ParamSpec((n_blocks, block_size, cfg.kv_lora_rank),
-                         (None, None, "kv_lora"), dtype, "zeros"),
+                         ("kv_blocks", None, "kv_lora"), dtype, "zeros"),
         "kr": ParamSpec((n_blocks, block_size, cfg.qk_rope_dim),
-                        (None, None, None), dtype, "zeros"),
+                        ("kv_blocks", None, None), dtype, "zeros"),
     }
 
 
@@ -759,7 +835,8 @@ def mla_attention(p: dict, ctx: QuantContext, scope: str, cfg: MLAConfig,
         # paged: fused absorbed decode scores the block-major latents in
         # place; chunk continuation and the expanded/fallback paths gather
         fused = (chunk_valid is None and cfg.absorb_decode
-                 and use_fused_paged(ctx, scope, paged_attn))
+                 and use_fused_paged(ctx, scope, paged_attn)
+                 and _mesh_fused_ok(B, 1))
         kv_scales = dict(cfg.kv_dequant_scales or ())
         new_cache, g, kp = paged_update_attend(
             cache, {"ckv": ckv, "kr": kr}, block_tables, positions,
@@ -875,7 +952,6 @@ def _mla_decode_absorbed_paged(p, ctx, scope, cfg: MLAConfig, qn, qr,
     MP formats and op names are untouched; the in-kernel math mirrors the
     reference bitwise up to f32 summation order."""
     import math as _math
-    from repro.kernels.paged_attention import paged_decode_attention
     B, T, H, dn = qn.shape
     assert T == 1, "fused paged MLA is single-query decode"
     r = cfg.kv_lora_rank
@@ -894,7 +970,7 @@ def _mla_decode_absorbed_paged(p, ctx, scope, cfg: MLAConfig, qn, qr,
         raise ValueError(
             f"{scope}: fused absorbed MLA decode does not support non-unit "
             f"kv_dequant_scales (got {sc}); use paged_attn='gather'")
-    ctx_lat = paged_decode_attention(
+    ctx_lat = _paged_kernel_call(
         q_lat.reshape(B, 1, H, r),                      # (B, Hkv=1, G=H, r)
         new_cache["ckv"][:, :, None, :], None,          # v = ckv (latent)
         block_tables, lengths,

@@ -3,9 +3,12 @@ from repro.serve.cache_pool import (CachePool, PagedCachePool,
                                     paged_slot_bytes)
 from repro.serve.engine import (ContinuousBatchingEngine, GenResult,
                                 ServeEngine, ServeSummary, prefill_bucket)
+from repro.serve.parallel import (make_serving_layout, shard_cache_tree,
+                                  shard_serving_params)
 from repro.serve.scheduler import Request, RequestResult, Scheduler
 
 __all__ = ["CachePool", "ContinuousBatchingEngine", "GenResult",
            "PagedCachePool", "Request", "RequestResult", "Scheduler",
            "ServeEngine", "ServeSummary", "dense_slot_bytes",
-           "paged_block_bytes", "paged_slot_bytes", "prefill_bucket"]
+           "make_serving_layout", "paged_block_bytes", "paged_slot_bytes",
+           "prefill_bucket", "shard_cache_tree", "shard_serving_params"]

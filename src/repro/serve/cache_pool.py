@@ -76,11 +76,16 @@ class CachePool:
     previous occupant can never leak into a new request.
     """
 
-    def __init__(self, model, n_slots: int, max_len: int):
+    def __init__(self, model, n_slots: int, max_len: int, mesh_layout=None):
         assert n_slots >= 1 and max_len >= 1, (n_slots, max_len)
         self.n_slots = n_slots
         self.max_len = max_len
         self.caches = model.init_cache(n_slots, max_len)
+        if mesh_layout is not None:
+            from repro.serve.parallel import shard_cache_tree
+            self.caches = shard_cache_tree(
+                model, self.caches, model.cache_specs(n_slots, max_len),
+                mesh_layout.mesh)
         self._free = list(range(n_slots - 1, -1, -1))  # pop() yields slot 0 first
 
     # ---- host-side slot accounting ----
@@ -136,43 +141,153 @@ class PagedCachePool:
     ``can_admit`` is False while free-minus-reserved can't cover a new
     request — the backpressure signal the scheduler turns into head-of-line
     queueing.
+
+    Mesh sharding: with a ``mesh_layout`` whose ``shard_pages`` is set, the
+    physical pool splits into ``data`` equal shards — shard ``d`` owns the
+    contiguous page range ``[d*bps, (d+1)*bps)`` plus its own trash block at
+    ``d*bps`` — and every slot draws blocks exclusively from its own shard
+    (slot ``s`` lives on shard ``s // slots_per_shard``, matching the
+    contiguous slot-axis sharding over ``data``). Block tables keep *global*
+    ids; the shard_map kernel path translates them to shard-local ids. With
+    one shard the allocator is bit-for-bit the single-device one (same free
+    lists, same pop order).
     """
 
     def __init__(self, model, n_slots: int, max_len: int,
-                 block_size: int = 16, n_blocks=None):
+                 block_size: int = 16, n_blocks=None, mesh_layout=None):
         assert n_slots >= 1 and max_len >= 1 and block_size >= 1
         self.model = model
         self.n_slots = n_slots
         self.max_len = max_len
         self.block_size = block_size
+        self.layout = mesh_layout
         self.max_blocks = -(-max_len // block_size)     # table width per slot
-        if n_blocks is None:
-            # worst case: every slot decodes to max_len (same HBM as dense,
-            # modulo block rounding); size it tighter to realize the win
-            n_blocks = 1 + n_slots * self.max_blocks
-        assert n_blocks >= 2, "need at least the trash block plus one"
+        data = mesh_layout.data if mesh_layout is not None else 1
+        n_blocks, shard_pages, bps = self.plan_blocks(
+            n_slots, max_len, block_size, n_blocks=n_blocks, data_shards=data)
+        if mesh_layout is not None:
+            assert (n_blocks, shard_pages) == (mesh_layout.n_blocks,
+                                               mesh_layout.shard_pages), \
+                "pool geometry disagrees with the serving mesh layout"
         self.n_blocks = n_blocks
+        self.n_shards = data if shard_pages else 1
+        self.blocks_per_shard = bps
+        self.slots_per_shard = n_slots // self.n_shards
         self.caches = model.init_paged_cache(n_slots, n_blocks, block_size)
+        if mesh_layout is not None:
+            from repro.serve.parallel import shard_cache_tree
+            self.caches = shard_cache_tree(
+                model, self.caches,
+                model.paged_cache_specs(n_slots, n_blocks, block_size),
+                mesh_layout.mesh)
         self._insert_fn = jax.jit(model.paged_insert)
-        self._free_blocks = list(range(n_blocks - 1, 0, -1))  # 0 = trash
-        self._free_slots = list(range(n_slots - 1, -1, -1))
-        self._reserved = 0                  # promised, not yet materialized
+        # per-shard free lists; shard d's trash block d*bps is never listed
+        # (single shard: blocks [1, n_blocks), trash 0 — the legacy layout)
+        self._free_blocks_by_shard = [
+            list(range((d + 1) * bps - 1, d * bps, -1))
+            for d in range(self.n_shards)]
+        self._free_slots_by_shard = [
+            list(range((d + 1) * self.slots_per_shard - 1,
+                       d * self.slots_per_shard - 1, -1))
+            for d in range(self.n_shards)]
+        self._reserved_by_shard = [0] * self.n_shards
         self._slot_reserve: dict = {}       # slot -> outstanding reservation
         self._slot_blocks: dict = {}        # slot -> [owned block ids]
         self.block_tables = np.full((n_slots, self.max_blocks), -1, np.int32)
 
+    # ---- geometry -----------------------------------------------------
+    @staticmethod
+    def plan_blocks(n_slots: int, max_len: int, block_size: int,
+                    n_blocks=None, data_shards: int = 1) -> tuple:
+        """Resolve the pool geometry: ``(n_blocks, shard_pages,
+        blocks_per_shard)``. The single source of truth shared by the pool
+        allocator and :func:`repro.serve.parallel.make_serving_layout`.
+
+        Pages shard over ``data`` only when both the slot axis and the block
+        count split evenly; otherwise the pool stays replicated (matching
+        the ``kv_blocks`` rule's divisibility fallback) and allocation is
+        global with the single trash block 0."""
+        max_blocks = -(-max_len // block_size)
+        slots_ok = data_shards > 1 and n_slots % data_shards == 0
+        if n_blocks is None:
+            # worst case: every slot decodes to max_len (same HBM as dense,
+            # modulo block rounding); size it tighter to realize the win —
+            # see size_n_blocks. Sharded pools give every shard its own
+            # trash block so per-shard capacity stays uniform.
+            n_blocks = (data_shards * (1 + (n_slots // data_shards) * max_blocks)
+                        if slots_ok else 1 + n_slots * max_blocks)
+        shard = (slots_ok and n_blocks % data_shards == 0
+                 and n_blocks >= 2 * data_shards)
+        assert n_blocks >= 2, "need at least the trash block plus one"
+        return n_blocks, shard, n_blocks // (data_shards if shard else 1)
+
+    @staticmethod
+    def size_n_blocks(profile, n_slots: int, block_size: int, *,
+                      percentile: float = 95.0, headroom: float = 1.25,
+                      data_shards: int = 1) -> int:
+        """Size ``n_blocks`` from a measured request profile instead of the
+        worst case: simulate the FCFS live-block trajectory of ``profile``
+        (an iterable of ``(prompt_len, max_new_tokens)`` pairs) over
+        ``n_slots`` decode rows at one decode step per tick, take the given
+        ``percentile`` of the per-tick live-block totals, multiply by
+        ``headroom`` (the SLA knob: how much of the tail demand the pool
+        must absorb without backpressure), and add the trash block(s).
+
+        The result is clamped to ``[largest single request + trash,
+        worst case]`` and rounded up to a multiple of ``data_shards`` so a
+        sharded pool splits evenly. Sub-worst-case sizing trades HBM for
+        occasional admission backpressure — exactly the dial the paper's
+        gained-time-vs-constraint framing prices."""
+        profile = [(int(p), int(m)) for p, m in profile]
+        if not profile:
+            raise ValueError("size_n_blocks needs a non-empty profile")
+        bf = lambda n: max(-(-n // block_size), 1)
+        max_blocks_req = max(bf(p + max(m - 1, 0)) for p, m in profile)
+        worst = n_slots * max(max_blocks_req, 1)
+        # FCFS over n_slots rows: request occupies its slot for max(m, 1)
+        # ticks; at decode tick t it holds the blocks covering p + t tokens
+        free_at = [0] * n_slots
+        demand: dict = {}
+        for p, m in profile:
+            s = min(range(n_slots), key=free_at.__getitem__)
+            start, dur = free_at[s], max(m, 1)
+            for t in range(dur):
+                demand[start + t] = demand.get(start + t, 0) + bf(p + t)
+            free_at[s] = start + dur
+        live = sorted(demand.values())
+        idx = min(int(len(live) * percentile / 100.0), len(live) - 1)
+        need = int(np.ceil(live[idx] * headroom))
+        need = max(min(need, worst), max_blocks_req)
+        n = need + max(data_shards, 1)                     # trash block(s)
+        if data_shards > 1:                                # even shard split
+            n = -(-n // data_shards) * data_shards
+        return n
+
     # ---- budget / accounting ----
     @property
     def n_free_slots(self) -> int:
-        return len(self._free_slots)
+        return sum(len(s) for s in self._free_slots_by_shard)
 
     @property
     def n_free_blocks(self) -> int:
-        return len(self._free_blocks)
+        return sum(len(b) for b in self._free_blocks_by_shard)
 
     @property
     def blocks_in_use(self) -> int:
-        return (self.n_blocks - 1) - len(self._free_blocks)
+        return (self.n_blocks - self.n_shards) - self.n_free_blocks
+
+    @property
+    def _reserved(self) -> int:
+        return sum(self._reserved_by_shard)
+
+    @property
+    def allocatable_blocks(self) -> int:
+        """Largest single-request reservation the pool can ever satisfy —
+        one shard's capacity minus its trash block."""
+        return self.blocks_per_shard - 1
+
+    def _shard_of(self, slot: int) -> int:
+        return slot // self.slots_per_shard if self.n_shards > 1 else 0
 
     def blocks_for(self, n_tokens: int) -> int:
         return max(-(-n_tokens // self.block_size), 1)
@@ -182,42 +297,56 @@ class PagedCachePool:
         write per decode step (the last generated token is never written)."""
         return self.blocks_for(prompt_len + max(max_new_tokens - 1, 0))
 
+    def _admit_shard(self, need: int):
+        """First shard with a free slot whose free-minus-reserved budget
+        covers ``need``; None when admission must wait."""
+        for d in range(self.n_shards):
+            if (self._free_slots_by_shard[d]
+                    and need <= (len(self._free_blocks_by_shard[d])
+                                 - self._reserved_by_shard[d])):
+                return d
+        return None
+
     def can_admit(self, prompt_len: int, max_new_tokens: int) -> bool:
         need = self.blocks_for_request(prompt_len, max_new_tokens)
-        return (bool(self._free_slots)
-                and need <= len(self._free_blocks) - self._reserved)
+        return self._admit_shard(need) is not None
 
     # ---- slot lifecycle ----
     def alloc_slot(self, prompt_len: int, max_new_tokens: int) -> int:
         """Claim a slot and reserve the request's worst-case block budget."""
         need = self.blocks_for_request(prompt_len, max_new_tokens)
-        if need > self.n_blocks - 1:
+        if need > self.allocatable_blocks:
             raise ValueError(
                 f"request needs {need} blocks but the pool only has "
-                f"{self.n_blocks - 1} allocatable blocks")
-        if not self.can_admit(prompt_len, max_new_tokens):
+                f"{self.allocatable_blocks} allocatable blocks"
+                + (" per shard" if self.n_shards > 1 else ""))
+        d = self._admit_shard(need)
+        if d is None:
             raise RuntimeError("paged cache pool exhausted")
-        slot = self._free_slots.pop()
-        self._reserved += need
+        slot = self._free_slots_by_shard[d].pop()
+        self._reserved_by_shard[d] += need
         self._slot_reserve[slot] = need
         self._slot_blocks[slot] = []
         return slot
 
     def free_slot(self, slot: int) -> None:
         """Return the slot, its blocks, and any unused reservation."""
-        assert slot not in self._free_slots, slot
-        self._free_blocks.extend(reversed(self._slot_blocks.pop(slot, [])))
-        self._reserved -= self._slot_reserve.pop(slot, 0)
+        d = self._shard_of(slot)
+        assert slot not in self._free_slots_by_shard[d], slot
+        self._free_blocks_by_shard[d].extend(
+            reversed(self._slot_blocks.pop(slot, [])))
+        self._reserved_by_shard[d] -= self._slot_reserve.pop(slot, 0)
         self.block_tables[slot] = -1
-        self._free_slots.append(slot)
+        self._free_slots_by_shard[d].append(slot)
 
     def _alloc_block(self, slot: int) -> int:
-        if not self._free_blocks:
+        d = self._shard_of(slot)
+        if not self._free_blocks_by_shard[d]:
             raise RuntimeError("paged cache pool out of blocks")
-        blk = self._free_blocks.pop()
+        blk = self._free_blocks_by_shard[d].pop()
         if self._slot_reserve.get(slot, 0) > 0:
             self._slot_reserve[slot] -= 1
-            self._reserved -= 1
+            self._reserved_by_shard[d] -= 1
         self._slot_blocks[slot].append(blk)
         return blk
 

@@ -273,7 +273,8 @@ class ContinuousBatchingEngine:
                  mp=None, donate: bool = False, paged: bool = True,
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  chunk_len: Optional[int] = None, chunk_budget: int = 1,
-                 min_bucket: int = 8, paged_attn: Optional[str] = None):
+                 min_bucket: int = 8, paged_attn: Optional[str] = None,
+                 mesh=None):
         if getattr(model, "cache_needs_enc_len", False):
             raise NotImplementedError(
                 "continuous batching currently serves decoder-only LMs")
@@ -315,12 +316,23 @@ class ContinuousBatchingEngine:
         self.chunk_len = chunk_len
         self.chunk_budget = chunk_budget
         self.min_bucket = min_bucket
+        # mesh-sharded serving: plan the layout once (pool geometry + page
+        # sharding), compile mesh-aware steps, and resolve n_blocks so the
+        # host allocator and the device layout agree
+        self.mesh = mesh
+        from repro.serve.parallel import make_serving_layout
+        self.mesh_layout = make_serving_layout(
+            mesh, n_slots=n_slots, max_len=max_len, block_size=block_size,
+            n_blocks=n_blocks, paged=paged)
+        if self.mesh_layout is not None and paged:
+            self.n_blocks = self.mesh_layout.n_blocks
         self.prefill_chunk_step = get_serving_step(
             model, "chunked_prefill" if paged else "bucketed_prefill",
-            mp=self.mp)
+            mp=self.mp, mesh_layout=self.mesh_layout)
         self.decode_step = get_serving_step(
             model, "paged_decode" if paged else "decode", mp=self.mp,
-            paged_attn=paged_attn if paged else None, donate=donate)
+            paged_attn=paged_attn if paged else None, donate=donate,
+            mesh_layout=self.mesh_layout)
         # compile-economy bookkeeping (persists across serve() calls, like
         # the jit compile cache it mirrors)
         self.prefill_compile_keys: set = set()
@@ -354,8 +366,10 @@ class ContinuousBatchingEngine:
         if self.paged:
             return PagedCachePool(self.model, self.n_slots, self.max_len,
                                   block_size=self.block_size,
-                                  n_blocks=self.n_blocks)
-        return CachePool(self.model, self.n_slots, self.max_len)
+                                  n_blocks=self.n_blocks,
+                                  mesh_layout=self.mesh_layout)
+        return CachePool(self.model, self.n_slots, self.max_len,
+                         mesh_layout=self.mesh_layout)
 
     def _admit(self, params, pool, sched: Scheduler, now: int) -> None:
         """Claim slots for admissible requests and emit prefill work items;
@@ -364,11 +378,11 @@ class ContinuousBatchingEngine:
         if self.paged:
             def gate(r):
                 need = pool.blocks_for_request(r.prompt_len, r.max_new_tokens)
-                if need > pool.n_blocks - 1:
+                if need > pool.allocatable_blocks:
                     # would block the queue forever — fail fast instead
                     raise ValueError(
                         f"request {r.rid} needs {need} KV blocks but the "
-                        f"pool has only {pool.n_blocks - 1}; raise "
+                        f"pool has only {pool.allocatable_blocks}; raise "
                         f"--n-blocks or shrink the request")
                 return pool.can_admit(r.prompt_len, r.max_new_tokens)
         while pool.n_free_slots:
@@ -488,6 +502,9 @@ class ContinuousBatchingEngine:
         committed (``RequestResult.status`` records the outcome).
         """
         assert max_in_flight >= 1, max_in_flight
+        if self.mesh is not None:
+            from repro.serve.parallel import shard_serving_params
+            params = shard_serving_params(self.model, params, self.mesh)
         pool = self._make_pool()
         sched = Scheduler()
         with self._ctl_lock:
@@ -764,8 +781,19 @@ class ContinuousBatchingEngine:
             # readbacks) — the honest denominator for pipelined throughput
             decode_s = max(decode_s, t_drain_end - t_first_decode)
         results = {st.request.rid: sched.materialize(st) for st in retired}
+        # decode-produced tokens (each request's first token is prefill's)
+        n_decoded = sum(max(len(r.tokens) - 1, 0) for r in results.values())
         counters = {
             "paged": self.paged,
+            "mesh": (None if self.mesh_layout is None else
+                     {"data": self.mesh_layout.data,
+                      "model": self.mesh_layout.model,
+                      "shard_pages": self.mesh_layout.shard_pages}),
+            # wall-clock throughput over the *identical* window in sync and
+            # async modes (submission to drain end) — the fair pipelined-vs-
+            # sync comparison; ``tokens_per_s`` keeps the decode-phase-only
+            # denominator, which is measured differently in the two modes
+            "wall_tokens_per_s": (n_decoded / total_s if total_s > 0 else 0.0),
             "peak_queue_depth": peak_queue,
             "blocked_admissions": sched.blocked_admissions,
             "peak_live_tokens": peak_live,
@@ -831,7 +859,6 @@ class ContinuousBatchingEngine:
             counters["peak_kv_bytes"] = counters["dense_kv_bytes"]
         # throughput over the decode phase only: each request's first token
         # comes out of its prefill, whose wall time is accounted as TTFT
-        n_decoded = sum(max(len(r.tokens) - 1, 0) for r in results.values())
         return ServeSummary(results=results, n_steps=n_steps,
                             decode_s=decode_s, total_s=total_s,
                             tokens_per_s=(n_decoded / decode_s

@@ -1,0 +1,103 @@
+"""Mesh-sharded serving: layout planning and state placement.
+
+The continuous-batching engine becomes tensor-parallel here, not in the
+model code: weights shard through the same logical-axis rules the trainer
+uses (``param_shardings`` — with the divisibility fallback, so e.g. GQA
+``kv_heads % model != 0`` replicates heads instead of failing), the paged
+KV pool's block-major leaves shard over the mesh via their ``kv_blocks`` /
+``kv_heads`` logical axes, and slot-major serving state (decode slots,
+per-slot positions, block tables, sampled tokens) shards over ``data``.
+
+One :class:`~repro.distributed.sharding.ServingMeshLayout` object describes
+the whole arrangement. It is planned once per engine by
+:func:`make_serving_layout` (delegating pool geometry to
+``PagedCachePool.plan_blocks`` so the allocator and the layout can never
+disagree), threaded to ``get_serving_step`` (which activates it at trace
+time for the fused-kernel dispatch and runs every call under ``with
+mesh:``), and handed to the cache pools for sharded placement.
+
+Parity contract: sharded greedy tokens are bit-identical to the
+single-device engine. The fused paged-attention kernel runs per-shard under
+``shard_map`` with exactly the single-device per-row summation order; when
+shapes don't divide the mesh it falls back to the gather path, which PR 5's
+parity gate already pins to the kernel bitwise.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.distributed.sharding import ServingMeshLayout
+from repro.nn.spec import flatten_paths, tree_from_flat
+from repro.serve.cache_pool import PagedCachePool
+
+__all__ = ["make_serving_layout", "shard_serving_params", "shard_cache_tree",
+           "data_sharding", "mesh_axis_sizes"]
+
+
+def mesh_axis_sizes(mesh: Mesh) -> tuple:
+    """(data, model) extents of a serving mesh; absent axes count as 1."""
+    return (int(mesh.shape.get("data", 1)), int(mesh.shape.get("model", 1)))
+
+
+def make_serving_layout(mesh: Optional[Mesh], *, n_slots: int, max_len: int,
+                        block_size: int, n_blocks=None,
+                        paged: bool = True) -> Optional[ServingMeshLayout]:
+    """Plan how one engine's serving state spreads over ``mesh``.
+
+    Returns None for ``mesh=None`` (the single-device engine, unchanged).
+    The slot axis must divide ``data`` — slots are the unit of data
+    parallelism and a ragged split would leave shards with unequal decode
+    batches. Pool geometry (block count, page sharding, per-shard capacity)
+    comes from ``PagedCachePool.plan_blocks`` so the host-side allocator and
+    the device-side layout share one source of truth.
+    """
+    if mesh is None:
+        return None
+    data, model = mesh_axis_sizes(mesh)
+    if n_slots % data != 0:
+        raise ValueError(
+            f"n_slots={n_slots} must divide the mesh's data axis ({data}): "
+            f"decode slots shard over data")
+    if not paged:
+        return ServingMeshLayout(mesh=mesh, data=data, model=model,
+                                 n_slots=n_slots, block_size=0, n_blocks=0,
+                                 shard_pages=False, blocks_per_shard=0)
+    n_blocks, shard_pages, bps = PagedCachePool.plan_blocks(
+        n_slots, max_len, block_size, n_blocks=n_blocks, data_shards=data)
+    return ServingMeshLayout(mesh=mesh, data=data, model=model,
+                             n_slots=n_slots, block_size=block_size,
+                             n_blocks=n_blocks, shard_pages=shard_pages,
+                             blocks_per_shard=bps)
+
+
+def shard_serving_params(model, params: dict, mesh: Mesh) -> dict:
+    """Place a param pytree under the trainer's logical-axis rules
+    (``kv_heads % model != 0`` and friends fall back to replication).
+    ``device_put`` onto an already-correct sharding is a no-op, so calling
+    this on every ``serve()`` is cheap after the first."""
+    shardings = shd.param_shardings(model.param_specs(), mesh)
+    flat = flatten_paths(params)
+    return tree_from_flat(
+        {p: jax.device_put(v, shardings[p]) for p, v in flat.items()})
+
+
+def shard_cache_tree(model, caches: dict, flat_specs: dict,
+                     mesh: Mesh) -> dict:
+    """Place a materialized cache tree according to its specs' logical axes:
+    paged K/V and MLA latents get ``kv_blocks``->data + ``kv_heads``->model
+    (each with divisibility fallback), slot-major leaves (dense rings, SSM
+    state) get ``act_batch``->data."""
+    sh_tree = model.assemble_cache_tree(
+        {k: NamedSharding(mesh, shd.partition_spec(s, mesh))
+         for k, s in flat_specs.items()})
+    return jax.tree.map(jax.device_put, caches, sh_tree)
+
+
+def data_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    """Sharding for per-slot host vectors (tokens, positions, block tables):
+    leading slot axis over ``data``, everything else replicated."""
+    return NamedSharding(mesh, P(*(("data",) + (None,) * (ndim - 1))))
