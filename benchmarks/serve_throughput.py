@@ -13,14 +13,18 @@ live-token-proportional for the fused kernel vs capacity-proportional for
 the gather reference path — and, since the pipelined drain, the host/device
 overlap economics: host-blocked seconds per decode step for the lockstep
 (sync) vs pipelined engine on the same stream, readback batching, and peak
-pipeline depth, written to ``BENCH_serve.json``. The run fails if paged
-bytes/live-token is not strictly below dense, if fused attention reads are
-not strictly below gather at <= 50% occupancy, if bucketing does not cut
-prefill compilations by at least 2x on the mixed-length stream, if the
-decode stall exceeds the chunk budget, if the pipelined drain does not
-block the host strictly less per decode step than the lockstep drain (with
-streamed tokens bit-identical to it), or if any engine pair disagrees on
-greedy tokens.
+pipeline depth, written to ``BENCH_serve.json`` — and, since prefix
+caching, the shared-prefix economics: prefill chunks, follower TTFT and
+prefix-hit rate on an 80%-shared workload with sharing on vs off. The run
+fails if paged bytes/live-token is not strictly below dense, if fused
+attention reads are not strictly below gather at <= 50% occupancy, if
+bucketing does not cut prefill compilations by at least 2x on the
+mixed-length stream, if the decode stall exceeds the chunk budget, if the
+pipelined drain does not block the host strictly less per decode step than
+the lockstep drain (with streamed tokens bit-identical to it), if prefix
+sharing does not cut prefill chunks by at least 2x on the shared workload
+(with tokens bit-identical to the no-sharing run), or if any engine pair
+disagrees on greedy tokens.
 
 The one-shot baseline must wait for the whole batch to arrive before
 prefilling (batch-formation latency), so its effective TTFT for early
@@ -172,13 +176,104 @@ def main():
                 f"{bpl['paged']:.1f} not below dense {bpl['dense']:.1f}")
 
     chunked_prefill_economics(model, params, data, args)
+    shared = shared_prefix_economics(model, params, data, args)
     mesh = mesh_leg_economics(args)
     pipeline_overlap_economics(model, params, reqs, args, max_len,
-                               mesh_payload=mesh)
+                               mesh_payload=mesh, shared_prefix_payload=shared)
+
+
+def shared_prefix_economics(model, params, data, args):
+    """80%-shared-prefix workload through the prefix cache: every request
+    carries the same block-aligned base prompt plus a distinct tail, sharing
+    on vs off on the identical stream. With sharing on, the first request
+    prefills the whole prompt and registers its full blocks; every later
+    request matches the chain, claims the shared blocks by reference and
+    prefills only its tail — so prefill chunks and TTFT for the followers
+    collapse while greedy tokens stay bit-identical to the no-sharing run.
+
+    Co-batching is off for both runs so ``prefill_chunks`` counts map 1:1 to
+    prefill work (cobatch merges steps and would blur the ratio); arrivals
+    are spaced so request 0 finishes (and registers) before any follower is
+    admitted — the steady-state shape a shared system prompt produces.
+
+    Fails unless sharing cuts prefill chunks by at least 2x or if any greedy
+    token differs between the two runs."""
+    chunk_len = 8
+    bs = args.block_size
+    # ~80% of the prompt, aligned UP to a block so every shared token sits
+    # in a matchable full block (floor-aligning spills up to a block's worth
+    # of shared tokens into the per-request tail and dilutes the leg)
+    shared_len = -(-(4 * args.prompt_len) // 5 // bs) * bs
+    shared_len = max(min(shared_len, (args.prompt_len - 1) // bs * bs), bs)
+    tail = max(args.prompt_len - shared_len, 1)
+    base = np.asarray(data.batch_at(80_000)["tokens"][0, :shared_len],
+                      np.int32)
+    first_done = -(-(shared_len + tail) // chunk_len) + 1
+    reqs = [Request(rid=i,
+                    tokens=np.concatenate([
+                        base,
+                        np.asarray(
+                            data.batch_at(80_001 + i)["tokens"][0, :tail],
+                            np.int32)]),
+                    max_new_tokens=args.new_tokens,
+                    arrival=0 if i == 0 else first_done + i)
+            for i in range(args.requests)]
+    max_len = 2 * (shared_len + tail + args.new_tokens)
+
+    def drain(prefix_cache):
+        eng = ContinuousBatchingEngine(
+            model, n_slots=args.n_slots, max_len=max_len, paged=True,
+            block_size=bs, chunk_len=chunk_len, prefill_cobatch=False,
+            prefix_cache=prefix_cache)
+        eng.serve(params, [reqs[0]])            # warmup (compile)
+        return eng.serve(params, reqs)
+
+    on, off = drain(True), drain(False)
+    for r in reqs:
+        if not np.array_equal(on.results[r.rid].tokens,
+                              off.results[r.rid].tokens):
+            raise SystemExit(
+                f"prefix-cache parity violation: rid {r.rid} greedy tokens "
+                f"differ between sharing-on and sharing-off")
+    con, coff = on.counters, off.counters
+    hit_rate = con["prefix_hit_requests"] / max(len(reqs) - 1, 1)
+    ttft = lambda o: float(np.median(
+        [o.results[r.rid].ttft_s for r in reqs[1:]]))
+    emit("serve_prefix_prefill_chunks_shared", con["prefill_chunks"],
+         f"vs {coff['prefill_chunks']} without sharing "
+         f"({con['prefill_tokens']} vs {coff['prefill_tokens']} prompt "
+         f"tokens prefilled)")
+    emit("serve_prefix_follower_ttft_p50_us", ttft(on) * 1e6,
+         f"vs {ttft(off) * 1e6:.0f} us without sharing "
+         f"({shared_len}/{shared_len + tail} tokens shared)")
+    emit("serve_prefix_hit_rate", hit_rate,
+         f"{con['prefix_hit_requests']}/{len(reqs) - 1} follower requests, "
+         f"{con['prefix_hit_tokens']} tokens skipped, "
+         f"{con['cow_forks']} COW forks")
+    print(f"# shared-prefix leg: {con['prefill_chunks']} prefill chunks "
+          f"with sharing vs {coff['prefill_chunks']} without "
+          f"({coff['prefill_chunks'] / max(con['prefill_chunks'], 1):.1f}x), "
+          f"tokens bit-identical")
+    if 2 * con["prefill_chunks"] > coff["prefill_chunks"]:
+        raise SystemExit(
+            f"prefix-cache regression: sharing ran {con['prefill_chunks']} "
+            f"prefill chunks, not >= 2x below the no-sharing run's "
+            f"{coff['prefill_chunks']} on an 80%-shared stream")
+    keep = ("prefill_chunks", "prefill_tokens", "prefix_hit_requests",
+            "prefix_hit_blocks", "prefix_hit_tokens", "cow_forks",
+            "blocked_admissions")
+    return {
+        "requests": len(reqs), "shared_len": int(shared_len),
+        "prompt_len": int(shared_len + tail), "chunk_len": chunk_len,
+        "prefix_hit_rate": hit_rate,
+        "follower_ttft_p50_s": {"sharing": ttft(on), "no_sharing": ttft(off)},
+        "sharing": {k: con[k] for k in keep},
+        "no_sharing": {k: coff[k] for k in keep if k in coff},
+    }
 
 
 def pipeline_overlap_economics(model, params, reqs, args, max_len,
-                               mesh_payload=None):
+                               mesh_payload=None, shared_prefix_payload=None):
     """Lockstep (sync) vs pipelined drain on the same request stream: the
     pipelined producer dispatches steps ahead of the host and must block
     strictly less per decode step than the lockstep loop, whose every step
@@ -263,6 +358,8 @@ def pipeline_overlap_economics(model, params, reqs, args, max_len,
     }
     if mesh_payload is not None:
         payload["mesh"] = mesh_payload
+    if shared_prefix_payload is not None:
+        payload["shared_prefix"] = shared_prefix_payload
     with open(args.json, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"# host/device overlap counters written to {args.json}")

@@ -8,6 +8,8 @@ monolithic rings).
         [--block-size 8] [--n-blocks 24] [--no-mp] [--sync] \
         [--chunk-len 16 --chunk-budget 1 --long-prompt-len 96] \
         [--paged-attn fused|gather] [--dump-tokens toks.json] \
+        [--shared-prefix-len 16] [--no-prefix-cache] \
+        [--priorities 0,1] [--expect-preemptions] \
         [--mesh data=2,model=2]   # needs data*model devices, e.g.
                                   # XLA_FLAGS=--xla_force_host_platform_device_count=8
 
@@ -26,9 +28,14 @@ Pipeline shown here (the full plan->engine handoff):
 
 The drain is pipelined by default (the device runs ahead of the host; a
 consumer thread lands token values — ``--sync`` keeps the legacy lockstep
-loop that reads every step back before dispatching the next). Exits
-non-zero unless every request completes, the continuous engine's greedy
-tokens exactly match the one-shot reference, AND — when chunking is on —
+loop that reads every step back before dispatching the next). Paged
+engines also prefix-cache by default: ``--shared-prefix-len`` gives every
+request the same leading tokens so followers skip the shared blocks
+(``--no-prefix-cache`` to compare), and ``--priorities``/
+``--expect-preemptions`` exercise priority-class preemption under a tight
+``--n-blocks`` pool. Exits non-zero unless every request completes, the
+continuous engine's greedy tokens exactly match the one-shot reference
+(including preempted-and-resumed requests), AND — when chunking is on —
 no decode slot ever stalled more than ``--chunk-budget`` chunk steps.
 This is the contract the CI serve-smoke job enforces (including at the
 seed-era divergence-report shape: 3 requests x 16-token prompts).
@@ -60,6 +67,22 @@ def main():
     ap.add_argument("--long-prompt-len", type=int, default=None,
                     help="make request 0 this long to demo bounded-stall "
                          "chunked prefill")
+    ap.add_argument("--shared-prefix-len", type=int, default=None,
+                    help="give every request the same leading N tokens "
+                         "(distinct tails): the prefix cache admits "
+                         "followers against the first request's registered "
+                         "blocks and prefills only the tails")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable cross-request prefix sharing (paged "
+                         "engines enable it by default; CI diffs "
+                         "--dump-tokens across the two runs)")
+    ap.add_argument("--priorities", default=None,
+                    help="comma-separated priority classes cycled over the "
+                         "request stream, e.g. '0,1' (higher preempts "
+                         "lower under block pressure)")
+    ap.add_argument("--expect-preemptions", action="store_true",
+                    help="exit non-zero unless the drain preempted at "
+                         "least one request (CI tight-pool run)")
     ap.add_argument("--dense-slots", action="store_true",
                     help="monolithic per-slot rings instead of paged blocks")
     ap.add_argument("--paged-attn", default=None,
@@ -97,12 +120,25 @@ def main():
     lens = [args.prompt_len] * args.requests
     if args.long_prompt_len:
         lens[0] = args.long_prompt_len
-    reqs = [Request(rid=i,
-                    tokens=np.asarray(
-                        data.batch_at(50_000 + i)["tokens"][0, :lens[i]],
-                        np.int32),
-                    max_new_tokens=args.new_tokens,
-                    arrival=i * args.arrival_every)
+    prios = [0] * args.requests
+    if args.priorities:
+        classes = [int(x) for x in args.priorities.split(",")]
+        prios = [classes[i % len(classes)] for i in range(args.requests)]
+
+    def prompt(i):
+        toks = np.asarray(
+            data.batch_at(50_000 + i)["tokens"][0, :lens[i]], np.int32)
+        if args.shared_prefix_len:
+            n = args.shared_prefix_len
+            assert n < lens[i], (n, lens[i])
+            # same base for everyone, request-distinct tail
+            toks = np.concatenate([
+                np.asarray(data.batch_at(50_000)["tokens"][0, :n], np.int32),
+                toks[n:]])
+        return toks
+
+    reqs = [Request(rid=i, tokens=prompt(i), max_new_tokens=args.new_tokens,
+                    arrival=i * args.arrival_every, priority=prios[i])
             for i in range(args.requests)]
     max_len = max(lens) + args.new_tokens
 
@@ -116,7 +152,10 @@ def main():
                                        chunk_len=args.chunk_len,
                                        chunk_budget=args.chunk_budget,
                                        paged_attn=args.paged_attn,
-                                       mesh=mesh)
+                                       mesh=mesh,
+                                       prefix_cache=(False
+                                                     if args.no_prefix_cache
+                                                     else None))
         eng.serve(params, [reqs[0]], sync=args.sync)   # warmup (compile)
         out = eng.serve(params, reqs, sync=args.sync)
         outs[tag] = out
@@ -135,11 +174,21 @@ def main():
                   f"{c['block_size']}), peak KV {c['peak_kv_bytes']/1e6:.2f} "
                   f"MB vs dense-slot {c['dense_kv_bytes']/1e6:.2f} MB, "
                   f"{c['blocked_admissions']} blocked admissions")
-        print(f"{'':8s} prefill: {c['prefill_chunks']} chunk steps over "
+        print(f"{'':8s} prefill: {c['prefill_chunks']} chunk steps "
+              f"({c['prefill_tokens']} prompt tokens) over "
               f"{c['prefill_buckets']} compile buckets "
               f"({c['distinct_prompt_lens']} distinct prompt lengths); "
               f"decode stalls: {c['decode_stall_steps']} chunk steps "
               f"mid-decode, longest run {c['max_decode_stall_run']}")
+        if c.get("prefix_cache"):
+            print(f"{'':8s} prefix cache: {c['prefix_hit_requests']} hit "
+                  f"requests, {c['prefix_hit_tokens']} prompt tokens "
+                  f"skipped ({c['prefix_hit_blocks']} shared blocks, "
+                  f"{c['cow_forks']} COW forks)")
+        if c.get("paged") and (args.priorities or c["preemptions"]):
+            print(f"{'':8s} preemption: {c['preemptions']} evictions under "
+                  f"block pressure ({c['blocked_admissions']} blocked "
+                  f"admissions)")
 
         # contract checks: completion + exact greedy parity vs one-shot
         missing = [r.rid for r in reqs if r.rid not in out.results]
@@ -170,6 +219,11 @@ def main():
                 f"{tag}: a decode slot stalled "
                 f"{c['max_decode_stall_run']} chunk steps "
                 f"(> budget {args.chunk_budget})")
+        if args.expect_preemptions and not c.get("preemptions"):
+            raise SystemExit(
+                f"{tag}: --expect-preemptions, but the drain never "
+                f"preempted a request (pool not tight enough, or "
+                f"priorities uniform)")
         print(f"{'':8s} all {len(reqs)} requests completed, greedy tokens "
               f"== one-shot reference\n")
 

@@ -125,6 +125,11 @@ def main():
     ap.add_argument("--dense-slots", action="store_true",
                     help="use monolithic per-slot rings instead of paged "
                          "KV blocks (continuous mode)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable cross-request prefix sharing (paged "
+                         "continuous engines content-hash admitted prompts "
+                         "against resident blocks by default and skip "
+                         "prefill for matched full blocks)")
     ap.add_argument("--paged-attn", default=None,
                     choices=("fused", "gather"),
                     help="paged decode attention: 'fused' (default) attends "
@@ -203,7 +208,10 @@ def main():
                                        chunk_len=args.chunk_len,
                                        chunk_budget=args.chunk_budget,
                                        paged_attn=args.paged_attn,
-                                       mesh=mesh)
+                                       mesh=mesh,
+                                       prefix_cache=(False
+                                                     if args.no_prefix_cache
+                                                     else None))
         rng = np.random.default_rng(1)
         reqs = [Request(rid=i,
                         tokens=rng.integers(0, model.cfg.vocab_size,
@@ -243,6 +251,11 @@ def main():
               f"{c['distinct_prompt_lens']} prompt lengths | "
               f"{c['decode_stall_steps']} decode-stall chunk steps "
               f"(longest run {c['max_decode_stall_run']})")
+        if c.get("prefix_cache"):
+            print(f"[serve] prefix cache: {c['prefix_hit_requests']} hit "
+                  f"requests | {c['prefix_hit_tokens']} prompt tokens "
+                  f"skipped | {c['cow_forks']} COW forks | "
+                  f"{c['preemptions']} preemptions")
     else:
         eng = ServeEngine(model, mp=plan, donate=False)
         prompt = {"tokens": jax.random.randint(jax.random.key(1),

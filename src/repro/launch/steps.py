@@ -132,6 +132,10 @@ def make_chunked_prefill_step(model, mp: Optional[dict] = None):
     written straight into the pool's physical blocks (paged prefill) and a
     prompt longer than the chunk budget resumes at ``start`` on the next
     call, attending over every earlier chunk through the block tables.
+    ``start`` need not trace back to a chunk this step wrote: prefix-cache
+    hits and preemption resumes start mid-sequence against table pages
+    some *earlier request* populated — correct because the written K/V is a
+    pure function of the tokens at or before each position.
     """
     ctx = _serving_ctx(mp)
 

@@ -644,6 +644,33 @@ class LM:
 
         return {k: rec(v, dense1[k]) for k, v in paged.items()}
 
+    def paged_copy_block(self, paged: dict, src: jax.Array,
+                         dst: jax.Array) -> dict:
+        """Copy physical block ``src`` into block ``dst`` on every page-major
+        cache leaf (attention K/V, MLA latents); slot-major leaves (SSM
+        state) pass through untouched.
+
+        This is the pool's copy-on-write fork: a slot about to write into a
+        block it shares with other slots first duplicates the block and
+        repoints its table entry at the copy, so the parent chain other
+        requests attend is never mutated. Pure function of its array args —
+        the pool jits it once per (model, layout) and traces over the
+        src/dst block ids."""
+        axes = self.assemble_cache_tree({
+            k: (s.logical_axes.index("kv_blocks")
+                if "kv_blocks" in s.logical_axes else -1)
+            for k, s in self.paged_cache_specs(1, 1, 1).items()})
+        src = jnp.asarray(src, jnp.int32)
+        dst = jnp.asarray(dst, jnp.int32)
+
+        def cp(leaf, ax):
+            if ax < 0:
+                return leaf
+            blk = jax.lax.dynamic_slice_in_dim(leaf, src, 1, axis=ax)
+            return jax.lax.dynamic_update_slice_in_dim(leaf, blk, dst, ax)
+
+        return jax.tree.map(cp, paged, axes)
+
     def prefill(self, params: dict, tokens: jax.Array, caches: dict,
                 ctx: QuantContext, *,
                 prefix_embeds: Optional[jax.Array] = None):

@@ -21,9 +21,13 @@ KV cache — two layouts share the attention math:
   decode row carries a block table (row of physical block ids, -1 =
   unallocated) and logical position ``j*block_size + i`` lives at page-table
   entry ``j``, offset ``i``. There is no ``pos`` leaf: the pool guarantees
-  blocks are exclusively owned and written contiguously, so every key at
-  logical position <= the query position is fresh by construction and the
-  causal mask alone separates live keys from stale block contents. Block 0
+  every block a row's table maps is written contiguously up to the row's
+  position, so every key at logical position <= the query position is fresh
+  by construction and the causal mask alone separates live keys from stale
+  block contents. Writes stay single-owner: a block referenced by several
+  tables (prefix caching) is read-shared only — the pool copy-on-write
+  forks it before any chunk would write into it, and decode never writes a
+  shared page (its write range starts past the matched prefix). Block 0
   is a trash block (never allocated) that absorbs writes from vacant decode
   rows, whose block tables are all -1. Blocks are written one token per
   decode step (``paged_write``) or a whole prefill chunk at a time
@@ -235,8 +239,11 @@ def paged_write_chunk(cache: dict, tensors: dict, block_tables: jax.Array,
     ``positions``: (B, T) absolute positions of the chunk's tokens;
     ``valid``: (B, T) bool — padded tail entries and vacant rows are routed
     to the trash block 0, as are positions whose page is unallocated (-1).
-    Valid entries land at unique (page, offset) pairs because the pool owns
-    blocks exclusively and writes them contiguously.
+    Valid entries land at unique (page, offset) pairs because the pool
+    keeps every written block single-writer (shared prefix pages are
+    copy-on-write forked before they enter any write range) and writes
+    contiguously. Chunks may start mid-sequence against a pre-populated
+    table — resumed prefills and prefix-cache tail chunks rely on this.
     """
     bs = next(iter(cache.values())).shape[1]
     nb = block_tables.shape[1]

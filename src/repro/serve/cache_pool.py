@@ -19,10 +19,31 @@ the trash block that absorbs writes from vacant decode rows (block-table
 entries of -1 clamp to 0 inside the kernel). SSM state has no sequence axis
 and stays slot-major.
 
+Blocks are **refcounted** and may be shared read-only between slots
+(automatic prefix caching, vLLM / RadixAttention precedent): prompts are
+content-hashed block by block with *chained* digests
+(``h_j = sha256(h_{j-1} || tokens_j)``), so one digest match implies the
+whole prefix up to that block matches. A new request whose chain matches
+resident blocks claims them (refcount + 1), maps them into its table, and
+skips prefill for the matched tokens entirely. The last write into a shared
+block triggers a **copy-on-write fork** (:meth:`ensure_range` detects a
+write landing on a borrowed page): the block is duplicated on device
+(:meth:`~repro.models.lm.LM.paged_copy_block`), the slot's table repoints at
+the private copy, and the parent chain stays immutable. When a slot is
+freed, indexed blocks whose refcount hits zero stay *cached* (content
+resident, LRU-reclaimable) instead of returning to the free list —
+:meth:`_alloc_block` reclaims the oldest cached block (de-indexing it) only
+when the free list runs dry. ``n_free_blocks`` therefore counts free +
+cached: both are allocatable capacity.
+
 All allocation is host-side free lists; device traffic goes through
-:meth:`insert` (one jitted scatter, traced over slot/block ids).
+:meth:`insert` / the COW fork (one jitted scatter/copy each, traced over
+slot/block ids).
 """
 from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
 
 import numpy as np
 
@@ -64,6 +85,12 @@ def _scatter_slot(pool: dict, one: dict, slot: jax.Array) -> dict:
         start = (slot,) + (0,) * (pl.ndim - 1)
         return jax.lax.dynamic_update_slice(pl, ol.astype(pl.dtype), start)
     return jax.tree.map(upd, pool, one)
+
+
+# one jitted copy-on-write fork per (model, layout): pools are rebuilt per
+# serve() drain, so the jit cache must outlive the pool instance or every
+# drain recompiles. Values keep strong refs so id() keys stay valid.
+_COW_JIT_CACHE: dict = {}
 
 
 class CachePool:
@@ -127,34 +154,62 @@ class PagedCachePool:
 
     Invariants the attention kernel relies on (see ``nn/layers.py``):
 
-    * a block is owned by at most one slot at a time (block 0 by nobody — it
-      is the trash sink for vacant rows);
-    * a slot's pages are allocated in logical order and written contiguously,
-      so every logical position <= the slot's current write position holds
-      that slot's own fresh data and the causal mask alone separates live
-      keys from stale block contents — freed blocks need no device-side
-      scrubbing before reuse.
+    * a block has exactly one *writer* at a time (block 0 by nobody — it is
+      the trash sink for vacant rows), but may have many concurrent
+      *readers*: a refcounted prefix block appears in several slots' tables
+      and every logical position <= each slot's write position holds valid
+      token data for that slot, because a shared block's content is
+      bit-identical to what each sharer's own prefill would have written
+      (per-token quant scales make K/V a pure function of the tokens at and
+      before each position);
+    * a slot never writes a shared block: the only write that could land in
+      one (the tail chunk of a fully-matched prompt) forks it first
+      (copy-on-write), and decode writes always target pages past the
+      matched prefix;
+    * a slot's pages are allocated in logical order and written
+      contiguously, so the causal mask alone separates live keys from stale
+      block contents — freed blocks need no device-side scrubbing before
+      reuse.
 
     Admission accounting: :meth:`alloc_slot` *reserves* the request's
-    worst-case block count without materializing it; :meth:`ensure_block`
-    then draws on the reservation as decode crosses block boundaries.
-    ``can_admit`` is False while free-minus-reserved can't cover a new
-    request — the backpressure signal the scheduler turns into head-of-line
-    queueing.
+    worst-case block count without materializing it; :meth:`ensure_block` /
+    :meth:`ensure_range` then draw on the reservation as prefill/decode
+    cross block boundaries. Matched prefix blocks are claimed instead of
+    reserved (refcount + 1, no new capacity), shrinking the reservation by
+    one block per hit. ``can_admit`` is False while no shard's
+    free-plus-cached-minus-reserved budget covers a new request — the
+    backpressure signal the scheduler turns into queueing or preemption.
+
+    Prefix index: per shard, ``digest -> block`` for fully-written prompt
+    blocks (chained sha256 over the block's tokens — see
+    :meth:`prefix_digests`). Blocks whose refcount drops to zero while
+    indexed move to a per-shard cached-LRU (content resident, allocatable);
+    :meth:`_alloc_block` reclaims the least recently released cached block
+    — de-indexing it, which truncates any chain through it — only after the
+    free list empties, so resident prefixes survive as long as capacity
+    allows. Eviction therefore never reclaims a block with a nonzero
+    refcount.
 
     Mesh sharding: with a ``mesh_layout`` whose ``shard_pages`` is set, the
     physical pool splits into ``data`` equal shards — shard ``d`` owns the
     contiguous page range ``[d*bps, (d+1)*bps)`` plus its own trash block at
     ``d*bps`` — and every slot draws blocks exclusively from its own shard
     (slot ``s`` lives on shard ``s // slots_per_shard``, matching the
-    contiguous slot-axis sharding over ``data``). Block tables keep *global*
-    ids; the shard_map kernel path translates them to shard-local ids. With
-    one shard the allocator is bit-for-bit the single-device one (same free
-    lists, same pop order).
+    contiguous slot-axis sharding over ``data``). The prefix index is
+    per-shard for the same reason: a slot can only map blocks that live on
+    its own data shard, so a prefix resident on another shard is a miss.
+    Admission planning (:meth:`_plan_admission`) is shard-aware twice over:
+    it gates on *per-shard* free-list pressure (one hot shard cannot strand
+    the others' capacity) and places a request on the shard where its
+    prefix chain is longest. Block tables keep *global* ids; the shard_map
+    kernel path translates them to shard-local ids. With one shard the
+    allocator is bit-for-bit the single-device one (same free lists, same
+    pop order).
     """
 
     def __init__(self, model, n_slots: int, max_len: int,
-                 block_size: int = 16, n_blocks=None, mesh_layout=None):
+                 block_size: int = 16, n_blocks=None, mesh_layout=None,
+                 data_shards: int = 1):
         assert n_slots >= 1 and max_len >= 1 and block_size >= 1
         self.model = model
         self.n_slots = n_slots
@@ -162,7 +217,9 @@ class PagedCachePool:
         self.block_size = block_size
         self.layout = mesh_layout
         self.max_blocks = -(-max_len // block_size)     # table width per slot
-        data = mesh_layout.data if mesh_layout is not None else 1
+        # data_shards is the host-accounting hook for testing the sharded
+        # allocator without devices; with a real mesh the layout wins
+        data = mesh_layout.data if mesh_layout is not None else data_shards
         n_blocks, shard_pages, bps = self.plan_blocks(
             n_slots, max_len, block_size, n_blocks=n_blocks, data_shards=data)
         if mesh_layout is not None:
@@ -192,8 +249,23 @@ class PagedCachePool:
             for d in range(self.n_shards)]
         self._reserved_by_shard = [0] * self.n_shards
         self._slot_reserve: dict = {}       # slot -> outstanding reservation
-        self._slot_blocks: dict = {}        # slot -> [owned block ids]
+        self._slot_blocks: dict = {}        # slot -> [referenced block ids]
         self.block_tables = np.full((n_slots, self.max_blocks), -1, np.int32)
+        # ---- prefix sharing state ----
+        self._ref: dict = {}                # block -> refcount (materialized)
+        self._index_by_shard = [dict() for _ in range(self.n_shards)]
+        self._block_digest: dict = {}       # block -> (shard, digest)
+        self._cached_by_shard = [OrderedDict()      # refcount-0 indexed
+                                 for _ in range(self.n_shards)]  # blocks, LRU
+        self._slot_digests: dict = {}       # slot -> prompt block digests
+        self._slot_borrowed: dict = {}      # slot -> {shared page indices}
+        self._slot_matched: dict = {}       # slot -> matched prefix tokens
+        self._slot_registered: dict = {}    # slot -> pages indexed so far
+        self.prefix_hit_requests = 0
+        self.prefix_hit_blocks = 0
+        self.prefix_hit_tokens = 0
+        self.cow_forks = 0
+        self.reclaimed_cached_blocks = 0
 
     # ---- geometry -----------------------------------------------------
     @staticmethod
@@ -270,7 +342,14 @@ class PagedCachePool:
 
     @property
     def n_free_blocks(self) -> int:
-        return sum(len(b) for b in self._free_blocks_by_shard)
+        """Allocatable blocks: truly free plus cached (refcount-0 indexed
+        blocks are resident prefix content, reclaimed on demand)."""
+        return (sum(len(b) for b in self._free_blocks_by_shard)
+                + self.n_cached_blocks)
+
+    @property
+    def n_cached_blocks(self) -> int:
+        return sum(len(c) for c in self._cached_by_shard)
 
     @property
     def blocks_in_use(self) -> int:
@@ -297,58 +376,226 @@ class PagedCachePool:
         write per decode step (the last generated token is never written)."""
         return self.blocks_for(prompt_len + max(max_new_tokens - 1, 0))
 
-    def _admit_shard(self, need: int):
-        """First shard with a free slot whose free-minus-reserved budget
-        covers ``need``; None when admission must wait."""
-        for d in range(self.n_shards):
-            if (self._free_slots_by_shard[d]
-                    and need <= (len(self._free_blocks_by_shard[d])
-                                 - self._reserved_by_shard[d])):
-                return d
-        return None
+    # ---- prefix hashing / matching ------------------------------------
+    def prefix_digests(self, tokens) -> list:
+        """Chained content digests of every *full* block of ``tokens``:
+        ``h_j = sha256(h_{j-1} || tokens[j*bs:(j+1)*bs])``. Because each
+        digest folds in the whole chain before it, one index hit at block j
+        implies blocks 0..j all match — matching is a single walk down the
+        chain, no per-block prefix comparison."""
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        bs = self.block_size
+        out, h = [], b""
+        for j in range(toks.shape[0] // bs):
+            h = hashlib.sha256(h + toks[j * bs:(j + 1) * bs].tobytes()).digest()
+            out.append(h)
+        return out
 
-    def can_admit(self, prompt_len: int, max_new_tokens: int) -> bool:
-        need = self.blocks_for_request(prompt_len, max_new_tokens)
-        return self._admit_shard(need) is not None
+    def _match_blocks(self, d: int, digests) -> list:
+        """Longest resident chain on shard ``d``: blocks for digests[0..m)."""
+        blks = []
+        idx = self._index_by_shard[d]
+        for h in digests:
+            b = idx.get(h)
+            if b is None:
+                break
+            blks.append(b)
+        return blks
+
+    def _plan_admission(self, prompt_len: int, max_new_tokens: int,
+                        digests=None):
+        """Shard-aware admission plan: for every shard with a free slot,
+        walk the request's digest chain against that shard's index and
+        check the *net* block need (worst case minus matched, plus one for
+        the copy-on-write fork a fully-matched prompt's tail chunk needs)
+        against the shard's own free + cached - reserved budget. Returns
+        ``(shard, matched_blocks, matched_tokens, need)`` for the shard
+        with the longest match (free capacity breaks ties), or None when no
+        shard can admit — per-shard gating, so one hot shard can't strand
+        capacity on the others."""
+        total = self.blocks_for_request(prompt_len, max_new_tokens)
+        best = None
+        for d in range(self.n_shards):
+            if not self._free_slots_by_shard[d]:
+                continue
+            blks = self._match_blocks(d, digests) if digests else []
+            m = len(blks)
+            matched = m * self.block_size
+            cow = 0
+            if m and matched >= prompt_len:
+                # full-prompt hit: the tail chunk still runs (it produces
+                # the first token) and must fork the last shared block
+                matched = prompt_len - 1
+                cow = 1
+            need = total - m + cow
+            cached = self._cached_by_shard[d]
+            claim_from_cached = sum(1 for b in blks if b in cached)
+            avail = (len(self._free_blocks_by_shard[d]) + len(cached)
+                     - claim_from_cached - self._reserved_by_shard[d])
+            if need > avail:
+                continue
+            key = (m, avail, -d)
+            if best is None or key > best[0]:
+                best = (key, (d, blks, matched, need))
+        return None if best is None else best[1]
+
+    def can_admit(self, prompt_len: int, max_new_tokens: int,
+                  digests=None) -> bool:
+        return self._plan_admission(prompt_len, max_new_tokens,
+                                    digests) is not None
+
+    def matched_tokens(self, slot: int) -> int:
+        """Prefix tokens ``slot`` inherited at admission — its prefill
+        starts there instead of 0."""
+        return self._slot_matched.get(slot, 0)
 
     # ---- slot lifecycle ----
-    def alloc_slot(self, prompt_len: int, max_new_tokens: int) -> int:
-        """Claim a slot and reserve the request's worst-case block budget."""
-        need = self.blocks_for_request(prompt_len, max_new_tokens)
-        if need > self.allocatable_blocks:
+    def alloc_slot(self, prompt_len: int, max_new_tokens: int,
+                   digests=None) -> int:
+        """Claim a slot, map any matched prefix blocks into its table
+        (refcount + 1 each), and reserve the rest of the request's
+        worst-case block budget."""
+        total = self.blocks_for_request(prompt_len, max_new_tokens)
+        if total > self.allocatable_blocks:
             raise ValueError(
-                f"request needs {need} blocks but the pool only has "
+                f"request needs {total} blocks but the pool only has "
                 f"{self.allocatable_blocks} allocatable blocks"
                 + (" per shard" if self.n_shards > 1 else ""))
-        d = self._admit_shard(need)
-        if d is None:
+        plan = self._plan_admission(prompt_len, max_new_tokens, digests)
+        if plan is None:
             raise RuntimeError("paged cache pool exhausted")
+        d, blks, matched, need = plan
         slot = self._free_slots_by_shard[d].pop()
         self._reserved_by_shard[d] += need
         self._slot_reserve[slot] = need
         self._slot_blocks[slot] = []
+        self._slot_digests[slot] = list(digests) if digests else []
+        self._slot_borrowed[slot] = set()
+        self._slot_matched[slot] = matched
+        self._slot_registered[slot] = 0
+        for j, b in enumerate(blks):
+            self._claim(d, b)
+            self.block_tables[slot, j] = b
+            self._slot_blocks[slot].append(b)
+            self._slot_borrowed[slot].add(j)
+        if blks:
+            self.prefix_hit_requests += 1
+            self.prefix_hit_blocks += len(blks)
+            self.prefix_hit_tokens += matched
         return slot
 
     def free_slot(self, slot: int) -> None:
-        """Return the slot, its blocks, and any unused reservation."""
+        """Return the slot, drop its block references (refcount-0 indexed
+        blocks stay cached for future prefix hits; unindexed blocks rejoin
+        the free list), and release any unused reservation."""
         d = self._shard_of(slot)
         assert slot not in self._free_slots_by_shard[d], slot
-        self._free_blocks_by_shard[d].extend(
-            reversed(self._slot_blocks.pop(slot, [])))
+        for b in reversed(self._slot_blocks.pop(slot, [])):
+            self._release(d, b)
         self._reserved_by_shard[d] -= self._slot_reserve.pop(slot, 0)
+        for per_slot in (self._slot_digests, self._slot_borrowed,
+                         self._slot_matched, self._slot_registered):
+            per_slot.pop(slot, None)
         self.block_tables[slot] = -1
         self._free_slots_by_shard[d].append(slot)
 
+    # ---- refcounted block lifecycle -----------------------------------
+    def _claim(self, d: int, blk: int) -> None:
+        """Take a reference on a resident block (a prefix hit)."""
+        self._ref[blk] = self._ref.get(blk, 0) + 1
+        self._cached_by_shard[d].pop(blk, None)     # in use again
+
+    def _release(self, d: int, blk: int) -> None:
+        self._ref[blk] -= 1
+        assert self._ref[blk] >= 0, (blk, self._ref[blk])
+        if self._ref[blk] == 0:
+            del self._ref[blk]
+            if blk in self._block_digest:
+                # indexed content stays resident (LRU reclaim on pressure)
+                self._cached_by_shard[d][blk] = None
+            else:
+                self._free_blocks_by_shard[d].append(blk)
+
+    def _deindex(self, blk: int) -> None:
+        d, h = self._block_digest.pop(blk)
+        if self._index_by_shard[d].get(h) == blk:
+            del self._index_by_shard[d][h]
+
     def _alloc_block(self, slot: int) -> int:
         d = self._shard_of(slot)
-        if not self._free_blocks_by_shard[d]:
+        if self._free_blocks_by_shard[d]:
+            blk = self._free_blocks_by_shard[d].pop()
+        elif self._cached_by_shard[d]:
+            # reclaim the least recently released cached block; de-indexing
+            # it truncates any digest chain through it (later links become
+            # unreachable, which is safe: a chain hit requires every link)
+            blk, _ = self._cached_by_shard[d].popitem(last=False)
+            self._deindex(blk)
+            self.reclaimed_cached_blocks += 1
+        else:
             raise RuntimeError("paged cache pool out of blocks")
-        blk = self._free_blocks_by_shard[d].pop()
         if self._slot_reserve.get(slot, 0) > 0:
             self._slot_reserve[slot] -= 1
             self._reserved_by_shard[d] -= 1
+        self._ref[blk] = 1
         self._slot_blocks[slot].append(blk)
         return blk
+
+    def register_prefix(self, slot: int, upto_tokens: int) -> None:
+        """Index ``slot``'s fully-written prompt blocks (logical positions
+        ``[0, upto_tokens)``) under their chain digests so later requests
+        can match them. Idempotent and incremental: call after each prefill
+        chunk with the cumulative prefilled length. First writer wins — a
+        digest already indexed (e.g. the block this slot itself borrowed)
+        is skipped, keeping exactly one canonical block per chain node.
+
+        Safe to call right after the chunk *dispatches* (before the device
+        writes land): any future reader's chunks are dispatched later on
+        the same device stream, so they order after this slot's writes."""
+        digests = self._slot_digests.get(slot)
+        if not digests:
+            return
+        d = self._shard_of(slot)
+        idx = self._index_by_shard[d]
+        done = self._slot_registered.get(slot, 0)
+        end = min(int(upto_tokens) // self.block_size, len(digests))
+        for j in range(done, end):
+            h = digests[j]
+            blk = int(self.block_tables[slot, j])
+            assert blk >= 0, (slot, j)
+            if h not in idx:
+                idx[h] = blk
+                self._block_digest[blk] = (d, h)
+        self._slot_registered[slot] = max(done, end)
+
+    def _cow_fork(self, slot: int, page: int) -> None:
+        """Copy-on-write: ``slot`` is about to write into shared ``page`` —
+        duplicate the block on device, repoint the table at the private
+        copy, and drop the shared reference. The parent block (and the
+        chain through it) is never mutated."""
+        d = self._shard_of(slot)
+        src = int(self.block_tables[slot, page])
+        dst = self._alloc_block(slot)       # before release: the fork must
+        self._copy_block_device(src, dst)   # never reclaim its own source
+        self.block_tables[slot, page] = dst
+        self._slot_blocks[slot].remove(src)
+        self._release(d, src)
+        self._slot_borrowed[slot].discard(page)
+        self.cow_forks += 1
+
+    def _copy_block_device(self, src: int, dst: int) -> None:
+        key = (id(self.model), id(self.layout))
+        entry = _COW_JIT_CACHE.get(key)
+        if entry is None:
+            kw = {}
+            if self.layout is not None:
+                kw["out_shardings"] = jax.tree.map(lambda x: x.sharding,
+                                                   self.caches)
+            entry = (self.model, self.layout,
+                     jax.jit(self.model.paged_copy_block, **kw))
+            _COW_JIT_CACHE[key] = entry
+        self.caches = entry[2](self.caches, jnp.asarray(src, jnp.int32),
+                               jnp.asarray(dst, jnp.int32))
 
     def ensure_block(self, slot: int, pos: int) -> None:
         """Alloc-on-demand: materialize the page for write position ``pos``
@@ -357,18 +604,30 @@ class PagedCachePool:
         page, off = divmod(int(pos), self.block_size)
         if off == 0 and self.block_tables[slot, page] < 0:
             self.block_tables[slot, page] = self._alloc_block(slot)
+        else:
+            # decode never writes a shared page: matched prefixes end
+            # before the first decode position, and a fully-matched
+            # prompt's last block was forked by the tail prefill chunk
+            borrowed = self._slot_borrowed.get(slot)
+            assert not borrowed or page not in borrowed, (slot, page)
 
     def ensure_range(self, slot: int, start: int, end: int) -> None:
         """Materialize every page covering logical positions [start, end) —
         chunked prefill's incremental reservation: blocks appear chunk by
         chunk (each drawing on the admission-time reservation) instead of
         the whole prompt's worth at once, so blocks a later chunk will fill
-        stay in the free pool until that chunk actually runs."""
+        stay in the free pool until that chunk actually runs. A page that
+        is present but *borrowed* (shared prefix block) is copy-on-write
+        forked before the chunk writes into it — this only happens for the
+        tail chunk of a fully-matched prompt."""
         assert 0 <= start < end, (start, end)
+        borrowed = self._slot_borrowed.get(slot)
         last = -(-int(end) // self.block_size)
         for page in range(int(start) // self.block_size, last):
             if self.block_tables[slot, page] < 0:
                 self.block_tables[slot, page] = self._alloc_block(slot)
+            elif borrowed and page in borrowed:
+                self._cow_fork(slot, page)
 
     # ---- device-side contents ----
     def insert(self, slot: int, request_cache: dict, prompt_len: int) -> None:

@@ -267,6 +267,28 @@ class ContinuousBatchingEngine:
     gather-then-attend path. Greedy tokens are identical; the counters
     ``decode_attn_bytes_{read,fused_model,gather_model}`` expose the
     live-vs-capacity HBM-read gap between the two.
+
+    ``prefix_cache`` (paged only; auto-on for pure-attention archs) shares
+    KV blocks across requests: admission content-hashes the prompt block by
+    block against a resident prefix index (chained digests — a match
+    implies the whole prefix matches), maps matched blocks into the slot's
+    table with a refcount bump, and starts prefill at the first unmatched
+    token. Blocks are copy-on-write: a shared page in a chunk's write range
+    is forked (device-side block copy) before the write, so a parent chain
+    is never mutated. Freed refcount-0 indexed blocks park in a per-shard
+    LRU and are reclaimed only under allocation pressure. Because the
+    serving quant policy makes each token's K/V a pure function of the
+    tokens at or before it, a cache hit is bit-exact: greedy tokens with
+    sharing on equal sharing off.
+
+    ``preemption`` (paged only): when admission is gated on resources and
+    the best arrived waiter has strictly higher ``Request.priority`` than a
+    live request, the lowest-priority/latest-admitted slot is evicted back
+    to the waiting queue (blocks freed — its prefix stays cached, so
+    resume re-prefills nearly for free) and retried on the same tick. A
+    resumed request re-prefills prompt + generated-so-far and continues;
+    its tokens are identical to an uninterrupted run. At uniform priority
+    nothing is ever evicted (pure FCFS backpressure, as before).
     """
 
     def __init__(self, model, n_slots: int = 4, max_len: int = 512,
@@ -274,7 +296,8 @@ class ContinuousBatchingEngine:
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  chunk_len: Optional[int] = None, chunk_budget: int = 1,
                  min_bucket: int = 8, paged_attn: Optional[str] = None,
-                 mesh=None):
+                 mesh=None, prefix_cache: Optional[bool] = None,
+                 preemption: bool = True, prefill_cobatch: bool = True):
         if getattr(model, "cache_needs_enc_len", False):
             raise NotImplementedError(
                 "continuous batching currently serves decoder-only LMs")
@@ -316,6 +339,35 @@ class ContinuousBatchingEngine:
         self.chunk_len = chunk_len
         self.chunk_budget = chunk_budget
         self.min_bucket = min_bucket
+        # cross-request prefix caching: content-hash admitted prompts
+        # against resident KV blocks and skip prefill for matched prefixes.
+        # Auto-on for paged pure-attention archs; SSM/hybrid archs carry
+        # slot-major state that a cached KV chain cannot reconstruct, so
+        # they auto-disable (and asking explicitly is an error)
+        if prefix_cache and not paged:
+            raise ValueError("prefix_cache shares paged KV blocks; drop it "
+                             "or remove paged=False")
+        if paged:
+            ssm_bytes = paged_slot_bytes(model, block_size)
+            if prefix_cache and ssm_bytes > 0:
+                raise ValueError(
+                    "prefix_cache is unavailable for SSM/hybrid archs: "
+                    "slot-major SSM state is not reconstructible from "
+                    "shared KV blocks, so a matched prefix could not skip "
+                    "prefill")
+            if prefix_cache is None:
+                prefix_cache = ssm_bytes == 0
+        self.prefix_cache = bool(prefix_cache) and paged
+        # preemption: under block pressure a strictly higher-priority
+        # waiter evicts the lowest-priority live slot (paged only — resume
+        # re-prefills the effective prompt, nearly free when its prefix is
+        # still cached). At uniform priority nothing is ever evicted.
+        self.preemption = bool(preemption) and paged
+        # co-batch prefill chunks across buckets: pad every prefilling
+        # slot's next chunk to the largest bucket and run ONE chunk step,
+        # instead of one step per bucket group (padding is masked per row,
+        # so numerics are unchanged)
+        self.prefill_cobatch = bool(prefill_cobatch)
         # mesh-sharded serving: plan the layout once (pool geometry + page
         # sharding), compile mesh-aware steps, and resolve n_blocks so the
         # host allocator and the device layout agree
@@ -371,85 +423,152 @@ class ContinuousBatchingEngine:
         return CachePool(self.model, self.n_slots, self.max_len,
                          mesh_layout=self.mesh_layout)
 
-    def _admit(self, params, pool, sched: Scheduler, now: int) -> None:
+    def _digests(self, pool, st):
+        """Chained prefix digests of the request's *effective* prompt
+        (recomputed after a preemption — the generated tokens extend the
+        chain, so a resumed request matches its own still-cached blocks)."""
+        if not self.prefix_cache:
+            return None
+        if st.digests is None:
+            st.digests = pool.prefix_digests(st.effective_tokens)
+        return st.digests
+
+    def _admit(self, params, pool, sched: Scheduler, now: int,
+               evict=None) -> None:
         """Claim slots for admissible requests and emit prefill work items;
-        no device work happens here — the step loop drives the chunks."""
+        no device work happens here — the step loop drives the chunks.
+
+        ``evict`` (paged + preemption) is the engine's eviction hook: when
+        the best arrived waiter is gated on resources and outranks a live
+        request, the scheduler's victim is evicted (freeing its slot +
+        blocks; its prefix blocks stay cached) and admission retries —
+        bounded by the live-slot count, since every round removes one
+        victim and equal priority never preempts."""
         gate = None
         if self.paged:
             def gate(r):
-                need = pool.blocks_for_request(r.prompt_len, r.max_new_tokens)
+                st = sched.states[r.rid]
+                plen = st.effective_prompt_len
+                mnew = st.remaining_new_tokens
+                need = pool.blocks_for_request(plen, mnew)
                 if need > pool.allocatable_blocks:
                     # would block the queue forever — fail fast instead
                     raise ValueError(
                         f"request {r.rid} needs {need} KV blocks but the "
                         f"pool has only {pool.allocatable_blocks}; raise "
                         f"--n-blocks or shrink the request")
-                return pool.can_admit(r.prompt_len, r.max_new_tokens)
-        while pool.n_free_slots:
-            st = sched.pop_admissible(now, gate)
-            if st is None:
+                return pool.can_admit(plen, mnew,
+                                      digests=self._digests(pool, st))
+        while True:
+            while pool.n_free_slots:
+                st = sched.pop_admissible(now, gate)
+                if st is None:
+                    break
+                req = st.request
+                assert req.prompt_len + req.max_new_tokens <= self.max_len, (
+                    f"request {req.rid}: {req.prompt_len}+"
+                    f"{req.max_new_tokens} exceeds pool max_len "
+                    f"{self.max_len}")
+                self.prompt_lens_seen.add(req.prompt_len)
+                # documented parity boundary, enforced with a one-time
+                # warning: the chunked/bucketed step never flashes, so once
+                # a chunk bucket reaches flash_min_seq, greedy tokens may
+                # differ from a flash-capable one-shot reference in
+                # low-order summation bits
+                flash_min = getattr(self.model.cfg, "flash_min_seq", 1 << 30)
+                biggest = min(req.prompt_len,
+                              self.chunk_len or req.prompt_len)
+                if (not self._warned_flash
+                        and prefill_bucket(biggest, self.chunk_len,
+                                           self.min_bucket) >= flash_min):
+                    self._warned_flash = True
+                    print(f"[serve] warning: prefill bucket >= "
+                          f"flash_min_seq ({flash_min}); chunked prefill "
+                          f"uses the reference attention path, so "
+                          f"bit-parity with a flash one-shot reference is "
+                          f"not guaranteed at these lengths")
+                start_at = 0
+                if self.paged:
+                    # reservation only — blocks materialize chunk by chunk;
+                    # matched prefix blocks are mapped in and skipped
+                    slot = pool.alloc_slot(st.effective_prompt_len,
+                                           st.remaining_new_tokens,
+                                           digests=self._digests(pool, st))
+                    start_at = pool.matched_tokens(slot)
+                else:
+                    slot = pool.alloc()
+                sched.start_prefill(st, slot, now, start_at=start_at)
+                if st.wall_admitted == 0.0:   # resumed: keep first admission
+                    st.wall_admitted = time.perf_counter()
+            if evict is None:
                 return
-            req = st.request
-            assert req.prompt_len + req.max_new_tokens <= self.max_len, (
-                f"request {req.rid}: {req.prompt_len}+{req.max_new_tokens} "
-                f"exceeds pool max_len {self.max_len}")
-            self.prompt_lens_seen.add(req.prompt_len)
-            # documented parity boundary, enforced with a one-time warning:
-            # the chunked/bucketed step never flashes, so once a chunk
-            # bucket reaches flash_min_seq, greedy tokens may differ from a
-            # flash-capable one-shot reference in low-order summation bits
-            flash_min = getattr(self.model.cfg, "flash_min_seq", 1 << 30)
-            biggest = min(req.prompt_len, self.chunk_len or req.prompt_len)
-            if (not self._warned_flash
-                    and prefill_bucket(biggest, self.chunk_len,
-                                       self.min_bucket) >= flash_min):
-                self._warned_flash = True
-                print(f"[serve] warning: prefill bucket >= flash_min_seq "
-                      f"({flash_min}); chunked prefill uses the reference "
-                      f"attention path, so bit-parity with a flash one-shot "
-                      f"reference is not guaranteed at these lengths")
-            if self.paged:
-                # reservation only — blocks materialize chunk by chunk
-                slot = pool.alloc_slot(req.prompt_len, req.max_new_tokens)
-            else:
-                slot = pool.alloc()
-            sched.start_prefill(st, slot, now)
-            st.wall_admitted = time.perf_counter()
+            cand = sched.peek_admissible(now)
+            if cand is None:
+                return
+            victim = sched.preempt_candidate(cand.request.priority)
+            if victim is None:
+                return
+            if not evict(victim):
+                return
 
     def _prefill_tick(self, params, pool, sched: Scheduler, now: int):
         """Run one compiled prefill-chunk step: co-batch the next chunk of
-        every prefilling slot whose bucket matches the FCFS head's, padded
-        to the bucket, over the full ``n_slots`` batch (inactive rows pass
-        through with valid = 0).
+        every prefilling slot — across buckets, padded to the largest one
+        (``prefill_cobatch``), or the legacy same-bucket-as-head group —
+        over the full ``n_slots`` batch (inactive rows pass through with
+        valid = 0). Chunk order is priority, then shortest remaining
+        prefill.
 
-        Returns ``(dt, nxt_dev, finished)``: the step's dispatch wall time,
-        the (n_slots,) *device* greedy-token vector (no host readback —
-        delivery is the caller's job), and the list of ``(slot, state)``
-        pairs whose prompt completed this tick (their first token is row
-        ``slot`` of ``nxt_dev``; ``out_tokens[0]`` holds a ``None``
-        placeholder until the value lands on the host)."""
-        items = []
-        bucket = None
+        Returns ``(dt, nxt_dev, finished, n_tokens)``: the step's dispatch
+        wall time, the (n_slots,) *device* greedy-token vector (no host
+        readback — delivery is the caller's job), the list of ``(slot,
+        state)`` pairs whose prompt completed this tick (their next token
+        is row ``slot`` of ``nxt_dev``; its ``out_tokens`` entry holds a
+        ``None`` placeholder until the value lands on the host), and the
+        real prompt tokens processed."""
+        cands = []
         for slot, st in sched.prefilling.items():
             start = st.prefill_pos
-            take = st.request.prompt_len - start
+            take = st.effective_prompt_len - start
             if self.chunk_len is not None:
                 take = min(take, self.chunk_len)
-            b = prefill_bucket(take, self.chunk_len, self.min_bucket)
-            if bucket is None:
-                bucket = b
-            if b == bucket:
-                items.append((slot, st, start, take))
+            cands.append((slot, st, start, take))
+        # priority classes first, then shortest-remaining-prefill-first:
+        # the prompt closest to producing its first token (and freeing
+        # chunk bandwidth) goes first — with prefix caching, a mostly
+        # cached prompt has a tiny remainder and jumps the line
+        cands.sort(key=lambda c: (-c[1].request.priority,
+                                  c[1].effective_prompt_len - c[1].prefill_pos,
+                                  c[0]))
+        if self.prefill_cobatch:
+            # co-batch across buckets: pad every slot's chunk to the
+            # largest bucket and run one step (per-row start/valid mask the
+            # padding, so smaller rows' numerics are unchanged)
+            items = cands
+            bucket = max(prefill_bucket(take, self.chunk_len,
+                                        self.min_bucket)
+                         for _, _, _, take in items)
+        else:
+            # legacy: one bucket group per chunk step (the head's bucket)
+            items, bucket = [], None
+            for slot, st, start, take in cands:
+                b = prefill_bucket(take, self.chunk_len, self.min_bucket)
+                if bucket is None:
+                    bucket = b
+                if b == bucket:
+                    items.append((slot, st, start, take))
         self.prefill_compile_keys.add(bucket)
         tok = np.zeros((self.n_slots, bucket), np.int32)
         start_v = np.ones((self.n_slots,), np.int32)   # >0: leave row alone
         valid_v = np.zeros((self.n_slots,), np.int32)  # 0: inactive row
         for slot, st, start, take in items:
-            tok[slot, :take] = np.asarray(st.request.tokens,
+            tok[slot, :take] = np.asarray(st.effective_tokens,
                                           np.int32)[start:start + take]
             start_v[slot] = start
             valid_v[slot] = take
             if self.paged:
+                # materialize the chunk's pages; a borrowed (shared) page
+                # in the write range is copy-on-write forked here
                 pool.ensure_range(slot, start, start + take)
         t0 = time.perf_counter()
         if self.paged:
@@ -462,13 +581,20 @@ class ContinuousBatchingEngine:
                 jnp.asarray(valid_v))
         nxt_dev = greedy_next_token(logits)
         dt = time.perf_counter() - t0
+        if self.paged and self.prefix_cache:
+            # index the blocks this chunk filled (after dispatch: any
+            # future matcher's chunks are dispatched later on the same
+            # device stream, so they order after these writes)
+            for slot, st, start, take in items:
+                pool.register_prefix(slot, start + take)
         finished = []
+        n_prefill_tokens = sum(take for _, _, _, take in items)
         for slot, st, start, take in items:
             st = sched.prefill_advance(slot, take, dt)
-            if st.prefill_pos == st.request.prompt_len:
+            if st.prefill_pos == st.effective_prompt_len:
                 st = sched.finish_prefill(slot, None, now)
                 finished.append((slot, st))
-        return dt, nxt_dev, finished
+        return dt, nxt_dev, finished, n_prefill_tokens
 
     def serve(self, params, requests: Sequence[Request], *,
               sync: bool = False,
@@ -537,6 +663,7 @@ class ContinuousBatchingEngine:
         # with provisioned capacity
         attn_pages_fused = attn_pages_gather = live_token_steps = 0
         prefill_chunks = decode_stall_steps = max_stall_run = stall_run = 0
+        prefill_tokens = 0
         stall_s_run = 0.0
         stall_s: list = []            # per-decode-step injected prefill time
 
@@ -616,6 +743,22 @@ class ContinuousBatchingEngine:
                 host_blocked_s += time.perf_counter() - t0
                 inflight_peak = max(inflight_peak, q.qsize())
 
+        # ---- preemption: evict a live slot back to the waiting queue ----
+        def evict(st):
+            # the consumer may still be landing this slot's token values;
+            # resume re-prefills prompt + generated-so-far, so every
+            # committed placeholder must hold a real value first
+            while any(t is None for t in st.out_tokens):
+                if consumer_err:
+                    return False  # shutting down; stop preempting
+                time.sleep(2e-4)
+            # freeing while earlier steps are in flight is safe: any reuse
+            # of these blocks is written by a later-dispatched step, and
+            # the device executes dispatches in order
+            pool.free_slot(st.slot)
+            sched.preempt(st, now)
+            return True
+
         # ---- control plane: cancellation / timeouts / shutdown ----
         def cancel_live(st, status, now):
             if st.status == WAITING:
@@ -650,7 +793,8 @@ class ContinuousBatchingEngine:
                 apply_control(now)
                 if not sched.has_work():
                     break
-                self._admit(params, pool, sched, now)
+                self._admit(params, pool, sched, now,
+                            evict if self.preemption else None)
                 peak_queue = max(peak_queue, sched.queue_depth)
                 # prefill phase — TTFT-aware arbitration: prefill freely
                 # while nothing is decoding, else at most chunk_budget chunk
@@ -660,9 +804,10 @@ class ContinuousBatchingEngine:
                                             or chunks_this_tick
                                             < self.chunk_budget):
                     was_decoding = bool(sched.running)
-                    dt, nxt_dev, finished = self._prefill_tick(
+                    dt, nxt_dev, finished, n_tok = self._prefill_tick(
                         params, pool, sched, now)
                     prefill_chunks += 1
+                    prefill_tokens += n_tok
                     chunks_this_tick += 1
                     if was_decoding:
                         decode_stall_steps += 1
@@ -677,7 +822,11 @@ class ContinuousBatchingEngine:
                         deliveries = []
                         for slot, st in finished:
                             mask[slot] = True
-                            deliveries.append((st, 0, slot))
+                            # resumed requests already hold delivered tokens;
+                            # the placeholder finish_prefill appended is the
+                            # last entry, not necessarily index 0
+                            deliveries.append(
+                                (st, len(st.out_tokens) - 1, slot))
                         cur_tok = merge_first_tokens(cur_tok, nxt_dev,
                                                      jnp.asarray(mask))
                         emit(nxt_dev, deliveries)
@@ -687,7 +836,8 @@ class ContinuousBatchingEngine:
                                 pool.free_slot(slot)
                     # a finished 1-token request frees its slot immediately:
                     # let a queued request claim it this same tick
-                    self._admit(params, pool, sched, now)
+                    self._admit(params, pool, sched, now,
+                                evict if self.preemption else None)
                 if sched.running:
                     # fresh array every tick: jnp.asarray may be zero-copy
                     # on CPU, and an in-flight step from a previous tick
@@ -802,6 +952,10 @@ class ContinuousBatchingEngine:
                                                               self.max_len),
             # chunked/bucketed prefill economics + decode-stall signals
             "prefill_chunks": prefill_chunks,
+            "prefill_tokens": prefill_tokens,
+            "prefill_cobatch": bool(self.prefill_cobatch),
+            # priority scheduling: evictions back to the waiting queue
+            "preemptions": sched.preemptions,
             "decode_stall_steps": decode_stall_steps,
             "max_decode_stall_run": max_stall_run,
             "prefill_buckets": len(self.prefill_compile_keys),
@@ -854,7 +1008,16 @@ class ContinuousBatchingEngine:
                 decode_live_token_steps=live_token_steps,
                 decode_capacity_token_steps=(n_steps * self.n_slots
                                              * pool.max_blocks
-                                             * pool.block_size))
+                                             * pool.block_size),
+                # prefix cache economics: tokens whose prefill was skipped
+                # because a resident block chain already held them
+                prefix_cache=bool(self.prefix_cache),
+                prefix_hit_requests=pool.prefix_hit_requests,
+                prefix_hit_blocks=pool.prefix_hit_blocks,
+                prefix_hit_tokens=pool.prefix_hit_tokens,
+                cow_forks=pool.cow_forks,
+                cached_blocks_final=pool.n_cached_blocks,
+                reclaimed_cached_blocks=pool.reclaimed_cached_blocks)
         else:
             counters["peak_kv_bytes"] = counters["dense_kv_bytes"]
         # throughput over the decode phase only: each request's first token

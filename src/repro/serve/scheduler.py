@@ -1,10 +1,24 @@
-"""Continuous-batching request scheduler (FCFS admission).
+"""Continuous-batching request scheduler (priority admission + preemption).
 
 The scheduler is pure host-side bookkeeping: it owns the waiting queue and
 the per-request prefill/decode state, and decides *which* request may enter
 a cache slot at a given engine clock tick. All device work (prefill chunks,
 batched decode) stays in the engine, so scheduling policy can evolve —
 priority classes, preemption — without touching compiled code.
+
+Admission order is by priority class (higher first), then earliest arrival,
+then submission order — at uniform priority this degenerates to exactly the
+old FCFS queue. The resource gate still applies only to the *best* arrived
+candidate (no skip-ahead: a gated head blocks the queue and is counted in
+``blocked_admissions``), which keeps backpressure semantics deterministic.
+On top of that, the engine may **preempt**: when the best waiting request
+outranks a live one and the gate is blocking, :meth:`preempt_candidate`
+names the victim (lowest priority, then latest admitted, then highest
+slot), and :meth:`preempt` re-queues it with ``resume_tokens`` = prompt +
+every token generated so far. Re-prefilling that effective prompt replays
+the victim's state bit-exactly (per-token quant scales make K/V a pure
+function of the prefix), and with prefix caching on, its blocks are still
+resident, so the resume costs one tail chunk.
 
 Admission emits *prefill work items* rather than running prefill inline: a
 popped request parks in ``prefilling`` (slot -> state) with a
@@ -21,8 +35,8 @@ arrives mid-decode" reproducible in tests.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
-from collections import deque
 from typing import Optional
 
 import numpy as np
@@ -41,20 +55,23 @@ class Request:
     (decode steps); 0 means present from the start. ``timeout_steps``, if
     set, cancels the request (status ``"timeout"``) once the engine clock
     reaches ``arrival + timeout_steps`` before it finishes — step-based so
-    timeout behavior is deterministic in tests."""
+    timeout behavior is deterministic in tests. ``priority`` is the
+    admission/preemption class: higher admits first, and only a strictly
+    higher-priority waiter may evict a live request."""
     rid: int
     tokens: np.ndarray                # (T,) int32 prompt
     max_new_tokens: int
     arrival: int = 0
     timeout_steps: Optional[int] = None
+    priority: int = 0
 
     @property
     def prompt_len(self) -> int:
         return int(np.asarray(self.tokens).shape[0])
 
 
-@dataclasses.dataclass
-class RequestState:
+@dataclasses.dataclass(eq=False)     # identity equality: queue removal must
+class RequestState:                  # never field-compare numpy token arrays
     request: Request
     status: str = WAITING
     slot: int = -1
@@ -67,10 +84,36 @@ class RequestState:
     admitted_step: int = -1
     finished_step: int = -1
     result_status: str = "ok"         # "ok" | "cancelled" | "timeout"
+    # preemption/resume: after an eviction the request re-prefills prompt +
+    # everything it had generated (its *effective* prompt) and keeps
+    # decoding where it left off
+    resume_tokens: Optional[np.ndarray] = None
+    n_preempted: int = 0
+    digests: Optional[list] = None    # engine-cached prefix chain digests
+    _seq: int = -1                    # submission order (queue tiebreak)
 
     @property
     def done(self) -> bool:
         return len(self.out_tokens) >= self.request.max_new_tokens
+
+    @property
+    def effective_tokens(self) -> np.ndarray:
+        """What prefill must process: the original prompt, or — after a
+        preemption — prompt + all generated tokens."""
+        return (self.request.tokens if self.resume_tokens is None
+                else self.resume_tokens)
+
+    @property
+    def effective_prompt_len(self) -> int:
+        return int(np.asarray(self.effective_tokens).shape[0])
+
+    @property
+    def remaining_new_tokens(self) -> int:
+        """Decode steps still owed. The resumed prefill's final chunk
+        produces the next token, so ``effective_prompt_len +
+        remaining_new_tokens - 1`` never exceeds ``prompt_len +
+        max_new_tokens - 1`` — the block budget is preemption-invariant."""
+        return max(self.request.max_new_tokens - len(self.out_tokens), 0)
 
 
 @dataclasses.dataclass
@@ -85,19 +128,30 @@ class RequestResult:
 
 class Scheduler:
     def __init__(self):
-        self._queue: deque = deque()           # WAITING states, FCFS
-        self.prefilling: dict = {}             # slot -> RequestState (FCFS order)
+        self._queue: list = []                 # WAITING states, priority order
+        self._next_seq = 0
+        self.prefilling: dict = {}             # slot -> RequestState
         self.running: dict = {}                # slot -> RequestState
         self.states: dict = {}                 # rid -> RequestState
         # backpressure signal: times the arrived queue head was held back by
         # the engine's resource gate (e.g. not enough free KV blocks)
         self.blocked_admissions = 0
+        self.preemptions = 0
+
+    @staticmethod
+    def _qkey(st: RequestState):
+        return (-st.request.priority, st.request.arrival, st._seq)
+
+    def _enqueue(self, st: RequestState) -> None:
+        bisect.insort(self._queue, st, key=self._qkey)
 
     def submit(self, req: Request) -> RequestState:
         assert req.rid not in self.states, f"duplicate rid {req.rid}"
         st = RequestState(req)
+        st._seq = self._next_seq
+        self._next_seq += 1
         self.states[req.rid] = st
-        self._queue.append(st)
+        self._enqueue(st)
         return st
 
     # ---- admission ----
@@ -113,27 +167,90 @@ class Scheduler:
     def queue_depth(self) -> int:
         return len(self._queue)
 
+    def _best_arrived(self, now: int) -> Optional[RequestState]:
+        for st in self._queue:
+            if st.request.arrival <= now:
+                return st
+        return None
+
+    def peek_admissible(self, now: int) -> Optional[RequestState]:
+        """The request :meth:`pop_admissible` would consider at ``now``
+        (highest priority among arrived, FCFS within a class), without
+        popping or gating it — the engine's preemption decision looks at
+        this to ask whether the best waiter outranks a live slot."""
+        return self._best_arrived(now)
+
     def pop_admissible(self, now: int, can_admit=None) -> Optional[RequestState]:
-        """FCFS: the head of the queue, iff it has arrived by ``now`` and the
-        resource gate accepts it. ``can_admit(request) -> bool`` is the
-        engine's admission predicate (e.g. enough free KV blocks); a gated
-        head blocks the whole queue — no skip-ahead — and that head-of-line
-        wait is counted in ``blocked_admissions``."""
-        if self._queue and self._queue[0].request.arrival <= now:
-            if can_admit is None or can_admit(self._queue[0].request):
-                return self._queue.popleft()
+        """The best arrived request — priority class first, FCFS within a
+        class — iff the resource gate accepts it. ``can_admit(request) ->
+        bool`` is the engine's admission predicate (e.g. enough free KV
+        blocks); a gated best candidate blocks the whole queue — no
+        skip-ahead — and that head-of-line wait is counted in
+        ``blocked_admissions``. At uniform priority this is exactly the old
+        FCFS pop."""
+        st = self._best_arrived(now)
+        if st is not None:
+            if can_admit is None or can_admit(st.request):
+                self._queue.remove(st)
+                return st
             self.blocked_admissions += 1
         return None
 
+    # ---- preemption ----
+    def preempt_candidate(self, min_priority: int) -> Optional[RequestState]:
+        """The live (prefilling or running) request a strictly
+        higher-priority waiter should evict: lowest priority first, then
+        latest admitted, then highest slot — the cheapest progress to
+        throw away, and deterministic. None when every live request has
+        ``priority >= min_priority`` (equal priority never preempts, so
+        two classes can't thrash each other)."""
+        live = list(self.prefilling.values()) + list(self.running.values())
+        live = [st for st in live if st.request.priority < min_priority]
+        if not live:
+            return None
+        return max(live, key=lambda st: (-st.request.priority,
+                                         st.admitted_step, st.slot))
+
+    def preempt(self, st: RequestState, now: int) -> RequestState:
+        """Evict a live request back to the waiting queue. Its effective
+        prompt becomes prompt + every token generated so far (all token
+        values must have landed — the engine flushes in-flight deliveries
+        first), so the resumed prefill replays its state bit-exactly and
+        its final chunk produces the *next* token via the normal
+        finish-prefill path."""
+        assert st.status in (PREFILLING, RUNNING), st.status
+        if self.prefilling.get(st.slot) is st:
+            del self.prefilling[st.slot]
+        if self.running.get(st.slot) is st:
+            del self.running[st.slot]
+        assert all(t is not None for t in st.out_tokens), (
+            f"rid {st.request.rid}: preempted with undelivered tokens")
+        st.resume_tokens = np.concatenate([
+            np.asarray(st.request.tokens, np.int32),
+            np.asarray(st.out_tokens, np.int32)])
+        st.digests = None                 # effective prompt changed
+        st.status = WAITING
+        st.slot = -1
+        st.prefill_pos = 0
+        st.n_preempted += 1
+        self.preemptions += 1
+        self._enqueue(st)                 # original seq: FCFS slot preserved
+        return st
+
     # ---- chunked prefill lifecycle ----
-    def start_prefill(self, st: RequestState, slot: int, now: int) -> None:
-        """Claim ``slot`` for a request whose prompt will be prefilled in one
-        or more chunk steps; the engine's step loop drives the chunks."""
+    def start_prefill(self, st: RequestState, slot: int, now: int,
+                      start_at: int = 0) -> None:
+        """Claim ``slot`` for a request whose (effective) prompt will be
+        prefilled in one or more chunk steps; the engine's step loop drives
+        the chunks. ``start_at`` > 0 skips a cached prefix — those tokens'
+        KV blocks are already mapped into the slot's table."""
         st.status = PREFILLING
         st.slot = slot
-        st.prefill_pos = 0
-        st.ttft_s = 0.0
-        st.admitted_step = now
+        st.prefill_pos = start_at
+        if not st.out_tokens:             # a resumed request keeps its TTFT
+            st.ttft_s = 0.0
+        if st.admitted_step < 0:          # first admission only
+            st.admitted_step = now
         self.prefilling[slot] = st
 
     def prefill_advance(self, slot: int, n_tokens: int,
@@ -146,19 +263,21 @@ class Scheduler:
         host-only scheduler use."""
         st = self.prefilling[slot]
         st.prefill_pos += n_tokens
-        assert st.prefill_pos <= st.request.prompt_len, (
-            st.prefill_pos, st.request.prompt_len)
+        assert st.prefill_pos <= st.effective_prompt_len, (
+            st.prefill_pos, st.effective_prompt_len)
         st.ttft_s += dt_s
         return st
 
     def finish_prefill(self, slot: int, first_token: int,
                        now: int) -> RequestState:
-        """The final chunk produced the first greedy token: move to decode."""
+        """The final chunk produced the next greedy token: move to decode.
+        For a fresh request that token is the first; for a resumed one it
+        continues wherever the eviction cut off."""
         st = self.prefilling.pop(slot)
         st.status = RUNNING
         st.last_token = first_token
         st.out_tokens.append(first_token)
-        st.next_pos = st.request.prompt_len
+        st.next_pos = st.effective_prompt_len
         self.running[slot] = st
         return st
 
