@@ -26,6 +26,16 @@ sharing does not cut prefill chunks by at least 2x on the shared workload
 (with tokens bit-identical to the no-sharing run), or if any engine pair
 disagrees on greedy tokens.
 
+Since load-adaptive MP, a bursty-trace leg (``adaptive_tau_economics``)
+drives the solver<->scheduler loop under two arrival bursts and fails
+unless (a) the adaptive-tau arm completes a downshift->restore cycle,
+(b) its p95 modeled TTFT holds an SLA the fixed base plan misses, and
+(c) the control arm — an adaptive engine whose single-level ladder can
+never swap — is greedy-token bit-identical to the plain fixed-plan
+engine. Both arms' per-request TTFTs land under the ``adaptive`` key of
+``BENCH_serve.json`` (TTFT is CPU-*modeled* in reference step units — see
+the leg's docstring).
+
 The one-shot baseline must wait for the whole batch to arrive before
 prefilling (batch-formation latency), so its effective TTFT for early
 requests includes the queueing wait; the continuous engine admits each
@@ -46,7 +56,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bench_bundle, bench_model, emit
-from repro.serve import ContinuousBatchingEngine, Request, ServeEngine
+from repro.hw.profiles import get_profile
+from repro.serve import (AdaptiveMPController, ContinuousBatchingEngine,
+                         Request, ServeEngine)
 
 
 def _requests(data, n, prompt_len, new_tokens, arrival_every):
@@ -122,6 +134,18 @@ def main():
     ap.add_argument("--json", default="BENCH_serve.json",
                     help="where to write the host/device overlap counters "
                          "(sync vs pipelined drain)")
+    ap.add_argument("--adaptive-base-tau", type=float, default=1e-5,
+                    help="level-0 tau of the bursty-trace adaptive leg "
+                         "(deliberately tight: the bench model's "
+                         "sensitivities are tiny, so headroom for the "
+                         "ladder only exists at small taus)")
+    ap.add_argument("--adaptive-levels", type=int, default=3)
+    ap.add_argument("--adaptive-factor", type=float, default=10.0)
+    ap.add_argument("--burst-gap", type=int, default=40,
+                    help="engine ticks between the two arrival bursts of "
+                         "the adaptive leg (sized so the queue fully "
+                         "drains in between: one downshift/restore cycle "
+                         "per burst)")
     args = ap.parse_args()
 
     model, params, data, _ = bench_model()
@@ -177,9 +201,11 @@ def main():
 
     chunked_prefill_economics(model, params, data, args)
     shared = shared_prefix_economics(model, params, data, args)
+    adaptive = adaptive_tau_economics(model, params, data, args)
     mesh = mesh_leg_economics(args)
     pipeline_overlap_economics(model, params, reqs, args, max_len,
-                               mesh_payload=mesh, shared_prefix_payload=shared)
+                               mesh_payload=mesh, shared_prefix_payload=shared,
+                               adaptive_payload=adaptive)
 
 
 def shared_prefix_economics(model, params, data, args):
@@ -272,8 +298,157 @@ def shared_prefix_economics(model, params, data, args):
     }
 
 
+def adaptive_tau_economics(model, params, data, args):
+    """Bursty-trace SLA leg: load-adaptive tau vs the fixed base plan.
+
+    **TTFT is CPU-modeled, loudly.** Fake-quant on CPU gives no real
+    speedup, so wall-clock TTFT cannot distinguish the plans here. Both
+    arms run REAL bursty drains — real scheduler, real step clock, real
+    controller swaps at real step boundaries — and each request's TTFT is
+    then priced deterministically in *reference step units*: every engine
+    tick between arrival and first token costs ``1 - g(plan active at that
+    tick)``, where ``g`` is the active plan's theoretical (TT) gain
+    fraction, ``predicted_gain / t_ref`` over the bundle's calibrated ops
+    on the bundle's hardware profile. On an accelerator the same leg would
+    price ticks with measured step walls; the step-clock arithmetic
+    (``first_token_step``, swap steps) is identical either way.
+
+    Three arms, three gates:
+
+    * **fixed** — a plain engine pinned to the base (level-0) plan. Its
+      queued burst requests wait out cheap-plan ticks only.
+    * **control** — the adaptive engine with a single-level ladder (it can
+      never swap): greedy tokens must be *bit-identical* to the fixed arm,
+      proving the controller machinery is parity-free when it cannot fire.
+    * **adaptive** — a geometric tau ladder under the same bursty trace:
+      must complete >= 1 downshift AND >= 1 restore, and its p95 modeled
+      TTFT must hold an SLA the fixed plan misses (the SLA is recorded as
+      the midpoint of the two p95s; the gate is
+      ``adaptive_p95 <= sla < fixed_p95``).
+
+    The TT objective (not ET/roofline) prices the ladder: the ~4M-param
+    bench model is so small that roofline requant overhead swamps every
+    op's gain, leaving ET no headroom to escalate into.
+    """
+    bundle = bench_bundle()
+    hw = get_profile(bundle.meta.get("hw", "tpu_v5e"))
+    t_ref = sum(op.macs * hw.mac_time(bundle.ref_format)
+                for op in bundle.sens.ops)
+
+    n = args.requests
+    burst = _requests(data, 2 * n, args.prompt_len, args.new_tokens, 0)
+    for r in burst[n:]:
+        r.arrival = args.burst_gap            # two all-at-once waves
+    max_len = 2 * (args.prompt_len + args.new_tokens)
+    # generous block budget + no prefix cache: occupancy stays an honest
+    # live-token signal (cached blocks would ratchet it up across the
+    # drain and hold the controller hot after the queue empties)
+    n_blocks = 1 + 8 * args.n_slots * -(-max_len // args.block_size)
+    eng_kw = dict(n_slots=args.n_slots, max_len=max_len,
+                  block_size=args.block_size, n_blocks=n_blocks,
+                  prefix_cache=False)
+
+    def controller(n_levels):
+        return AdaptiveMPController.from_bundle(
+            bundle, args.adaptive_base_tau, n_levels=n_levels,
+            factor=args.adaptive_factor, objective="TT",
+            every=1, dwell=2, queue_high=max(2, args.n_slots // 2),
+            queue_low=0)
+
+    base_plan = bundle.solve(tau=args.adaptive_base_tau, objective="TT")
+    fixed_eng = ContinuousBatchingEngine(model, mp=base_plan, **eng_kw)
+    fixed_eng.serve(params, [burst[0]])       # warmup (compile)
+    fixed = fixed_eng.serve(params, burst)
+
+    ctrl0 = controller(1)                     # the never-firing control arm
+    control_eng = ContinuousBatchingEngine(model, adaptive=ctrl0, **eng_kw)
+    control_eng.serve(params, [burst[0]])
+    control = control_eng.serve(params, burst)
+    if control.counters["adaptive"]["swaps"]:
+        raise SystemExit("adaptive control arm: a single-level ladder "
+                         "has nowhere to swap, yet it swapped")
+    for r in burst:
+        if not np.array_equal(control.results[r.rid].tokens,
+                              fixed.results[r.rid].tokens):
+            raise SystemExit(
+                f"adaptive control-arm parity violation (rid {r.rid}): an "
+                f"engine whose controller cannot fire must be bit-identical "
+                f"to the plain fixed-plan engine")
+
+    ctrl = controller(args.adaptive_levels)
+    adaptive_eng = ContinuousBatchingEngine(model, adaptive=ctrl, **eng_kw)
+    adaptive_eng.serve(params, [burst[0]])
+    out = adaptive_eng.serve(params, burst)
+    ca = out.counters["adaptive"]
+    if not (ca["downshifts"] >= 1 and ca["restores"] >= 1):
+        raise SystemExit(
+            f"adaptive leg: the burst must drive >= 1 downshift and >= 1 "
+            f"restore, got {ca['downshifts']} / {ca['restores']} "
+            f"(swaps at {[s['step'] for s in ca['swaps']]})")
+
+    def gain_frac(level):
+        g = ctrl.plan_for(level).predicted_gain / t_ref
+        return min(max(g, 0.0), 0.95)
+
+    def modeled_ttfts(result, swaps, n_steps):
+        g = np.full(n_steps + 1, gain_frac(0))
+        for s in swaps:
+            g[s["step"]:] = gain_frac(s["level"])
+        cost = 1.0 - g
+        return {r.rid: float(np.sum(
+            cost[r.arrival:result.results[r.rid].first_token_step + 1]))
+            for r in burst}
+
+    t_fixed = modeled_ttfts(fixed, [], fixed.n_steps)
+    t_adapt = modeled_ttfts(out, ca["swaps"], out.n_steps)
+    p95 = lambda d: float(np.percentile(np.asarray(list(d.values())), 95))
+    f95, a95 = p95(t_fixed), p95(t_adapt)
+    sla = 0.5 * (f95 + a95)
+    emit("serve_adaptive_ttft_p95_fixed_steps", f95,
+         f"base tau {args.adaptive_base_tau:g} "
+         f"(gain frac {gain_frac(0):.3f})")
+    emit("serve_adaptive_ttft_p95_adaptive_steps", a95,
+         f"ladder {[f'{t:g}' for t in ctrl.taus]}, "
+         f"{ca['downshifts']} downshifts / {ca['restores']} restores")
+    if not (a95 <= sla < f95):
+        raise SystemExit(
+            f"adaptive-tau regression: adaptive p95 modeled TTFT {a95:.2f} "
+            f"steps must hold an SLA ({sla:.2f}) the fixed plan "
+            f"({f95:.2f}) misses — the load-adaptive ladder bought no "
+            f"queued-burst headroom")
+    print(f"# adaptive leg: TTFT p95 (modeled steps) fixed {f95:.2f} vs "
+          f"adaptive {a95:.2f}; SLA {sla:.2f} held; swaps at "
+          f"{[s['step'] for s in ca['swaps']]}")
+    return {
+        "modeled": True,
+        "note": ("TTFT in reference step units priced by the TT gain "
+                 "fraction of the plan active at each tick — CPU fake-"
+                 "quant has no wall speedup; see adaptive_tau_economics"),
+        "base_tau": args.adaptive_base_tau,
+        "taus": list(ctrl.taus),
+        "gain_frac_per_level": [gain_frac(i) for i in
+                                range(len(ctrl.taus))],
+        "burst": {"requests": 2 * n, "gap": args.burst_gap,
+                  "n_slots": args.n_slots},
+        "sla_ttft_steps": sla,
+        "fixed": {"ttft_p95_steps": f95,
+                  "ttft_steps": {str(k): v for k, v in t_fixed.items()},
+                  "n_steps": fixed.n_steps},
+        "adaptive": {"ttft_p95_steps": a95,
+                     "ttft_steps": {str(k): v for k, v in t_adapt.items()},
+                     "n_steps": out.n_steps,
+                     "downshifts": ca["downshifts"],
+                     "restores": ca["restores"],
+                     "swaps": ca["swaps"],
+                     "final_tau": ca["final_tau"]},
+        "control_arm": {"bit_identical_to_fixed": True,
+                        "taus": list(ctrl0.taus)},
+    }
+
+
 def pipeline_overlap_economics(model, params, reqs, args, max_len,
-                               mesh_payload=None, shared_prefix_payload=None):
+                               mesh_payload=None, shared_prefix_payload=None,
+                               adaptive_payload=None):
     """Lockstep (sync) vs pipelined drain on the same request stream: the
     pipelined producer dispatches steps ahead of the host and must block
     strictly less per decode step than the lockstep loop, whose every step
@@ -360,6 +535,8 @@ def pipeline_overlap_economics(model, params, reqs, args, max_len,
         payload["mesh"] = mesh_payload
     if shared_prefix_payload is not None:
         payload["shared_prefix"] = shared_prefix_payload
+    if adaptive_payload is not None:
+        payload["adaptive"] = adaptive_payload
     with open(args.json, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"# host/device overlap counters written to {args.json}")

@@ -46,7 +46,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bench_bundle, bench_model
-from repro.serve import ContinuousBatchingEngine, Request, ServeEngine
+from repro.serve import (AdaptiveMPController, ContinuousBatchingEngine,
+                         Request, ServeEngine)
 
 
 def main():
@@ -98,6 +99,24 @@ def main():
                          "KV pool; greedy tokens stay bit-identical to the "
                          "single-device engine (the CI mesh-serve-smoke job "
                          "diffs --dump-tokens across the two)")
+    ap.add_argument("--adaptive-tau", type=float, default=None,
+                    help="serve under load-adaptive MP: a tau ladder "
+                         "starting here escalates to more aggressive plans "
+                         "as the queue grows and restores as it drains. "
+                         "Runs two arms: 'fixed' (the base plan, checked "
+                         "against the one-shot reference as usual) and "
+                         "'adaptive' (the controller-driven engine)")
+    ap.add_argument("--adaptive-levels", type=int, default=3,
+                    help="tau ladder depth; 1 pins the controller to the "
+                         "base plan (it can never swap), the CI control arm")
+    ap.add_argument("--adaptive-every", type=int, default=2,
+                    help="controller evaluation cadence in engine ticks")
+    ap.add_argument("--adaptive-dwell", type=int, default=4,
+                    help="min ticks between plan swaps")
+    ap.add_argument("--expect-adaptive-cycle", action="store_true",
+                    help="exit non-zero unless the adaptive drain both "
+                         "downshifted (escalated) and restored at least "
+                         "once (CI bursty run)")
     ap.add_argument("--no-mp", action="store_true",
                     help="skip bundle calibration / MP plan (bf16 only; "
                          "fast path for CI smoke)")
@@ -111,11 +130,24 @@ def main():
     mesh = mesh_from_spec(args.mesh)
     if mesh is not None:
         print(f"serving mesh: {dict(mesh.shape)}")
-    configs = [("bf16", None)]
-    if not args.no_mp:
-        plan = bench_bundle().solve(tau=args.tau, objective="ET")
-        print(f"MP plan quantizes {plan.n_quantized}/{plan.meta['n_ops']} ops\n")
-        configs.append(("mp-fp8", plan))
+    # each config: (tag, fixed MP plan or None, adaptive controller or None)
+    if args.adaptive_tau is not None:
+        assert not args.no_mp, "--adaptive-tau needs the MP bundle"
+        ctrl = AdaptiveMPController.from_bundle(
+            bench_bundle(), args.adaptive_tau,
+            n_levels=args.adaptive_levels, objective="ET",
+            every=args.adaptive_every, dwell=args.adaptive_dwell,
+            queue_high=2, queue_low=0)
+        base = ctrl.plan
+        print(f"adaptive MP: tau ladder {[f'{t:g}' for t in ctrl.taus]} "
+              f"(base plan quantizes {base.n_quantized} ops)\n")
+        configs = [("fixed", base, None), ("adaptive", None, ctrl)]
+    else:
+        configs = [("bf16", None, None)]
+        if not args.no_mp:
+            plan = bench_bundle().solve(tau=args.tau, objective="ET")
+            print(f"MP plan quantizes {plan.n_quantized}/{plan.meta['n_ops']} ops\n")
+            configs.append(("mp-fp8", plan, None))
 
     lens = [args.prompt_len] * args.requests
     if args.long_prompt_len:
@@ -143,7 +175,7 @@ def main():
     max_len = max(lens) + args.new_tokens
 
     outs = {}
-    for tag, mp in configs:
+    for tag, mp, ctrl in configs:
         eng = ContinuousBatchingEngine(model, n_slots=args.n_slots,
                                        max_len=max_len, mp=mp,
                                        paged=not args.dense_slots,
@@ -155,7 +187,8 @@ def main():
                                        mesh=mesh,
                                        prefix_cache=(False
                                                      if args.no_prefix_cache
-                                                     else None))
+                                                     else None),
+                                       adaptive=ctrl)
         eng.serve(params, [reqs[0]], sync=args.sync)   # warmup (compile)
         out = eng.serve(params, reqs, sync=args.sync)
         outs[tag] = out
@@ -189,14 +222,50 @@ def main():
             print(f"{'':8s} preemption: {c['preemptions']} evictions under "
                   f"block pressure ({c['blocked_admissions']} blocked "
                   f"admissions)")
+        if "adaptive" in c:
+            a = c["adaptive"]
+            print(f"{'':8s} adaptive MP: {a['downshifts']} downshifts / "
+                  f"{a['restores']} restores, final tau {a['final_tau']:g} "
+                  f"(level {a['final_level']}), swaps at steps "
+                  f"{[sw['step'] for sw in a['swaps']] or 'none'}")
 
         # contract checks: completion + exact greedy parity vs one-shot
         missing = [r.rid for r in reqs if r.rid not in out.results]
         if missing:
             raise SystemExit(f"{tag}: requests never completed: {missing}")
+        swapped = bool(out.counters.get("adaptive", {}).get("swaps"))
+        if ctrl is not None and not swapped:
+            # control arm: a controller that never fires must be
+            # bit-identical to the plain fixed-plan engine
+            for r in reqs:
+                if not np.array_equal(out.results[r.rid].tokens,
+                                      outs["fixed"].results[r.rid].tokens):
+                    raise SystemExit(
+                        f"{tag}: rid {r.rid} diverged from the fixed-tau "
+                        f"arm although the controller never swapped plans")
+            print(f"{'':8s} controller never fired: tokens bit-identical "
+                  f"to the fixed-tau arm")
+            if args.expect_adaptive_cycle:
+                raise SystemExit(
+                    f"{tag}: --expect-adaptive-cycle, but the controller "
+                    f"never swapped plans (load not bursty enough?)")
+        if swapped:
+            # plans changed mid-drain: numerics are intentionally plan-
+            # dependent, so the one-shot parity contract doesn't apply
+            if args.expect_adaptive_cycle:
+                a = out.counters["adaptive"]
+                if not (a["downshifts"] >= 1 and a["restores"] >= 1):
+                    raise SystemExit(
+                        f"{tag}: --expect-adaptive-cycle, but the drain saw "
+                        f"{a['downshifts']} downshifts / {a['restores']} "
+                        f"restores (no full cycle)")
+                print(f"{'':8s} adaptive cycle confirmed: "
+                      f">=1 downshift and >=1 restore\n")
+            continue
         # one batched generate per distinct prompt length (usually one
         # group, plus the --long-prompt-len outlier)
-        ref_eng = ServeEngine(model, mp=mp, donate=False)
+        ref_eng = ServeEngine(model, mp=mp if ctrl is None else ctrl.plan,
+                              donate=False)
         by_len = {}
         for r in reqs:
             by_len.setdefault(len(r.tokens), []).append(r)
@@ -229,10 +298,10 @@ def main():
 
     if args.dump_tokens:
         import json
-        first = next(iter(outs.values()))
         with open(args.dump_tokens, "w") as f:
-            json.dump({str(r.rid): np.asarray(
-                first.results[r.rid].tokens).tolist() for r in reqs},
+            json.dump({tag: {str(r.rid): np.asarray(
+                out.results[r.rid].tokens).tolist() for r in reqs}
+                for tag, out in outs.items()},
                 f, indent=0, sort_keys=True)
         print(f"greedy tokens written to {args.dump_tokens}")
 

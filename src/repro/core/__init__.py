@@ -4,7 +4,10 @@
 from repro.core.mpconfig import MPPlan, as_assignment
 from repro.core.pipeline import (AMPOptions, CalibrationBundle,
                                  auto_mixed_precision, calibrate,
-                                 predicted_loss_mse)
+                                 predicted_loss_mse,
+                                 tabulate_measured_gains)
+from repro.core.registry import BundleRegistry
 
-__all__ = ["MPPlan", "as_assignment", "AMPOptions", "CalibrationBundle",
-           "auto_mixed_precision", "calibrate", "predicted_loss_mse"]
+__all__ = ["MPPlan", "as_assignment", "AMPOptions", "BundleRegistry",
+           "CalibrationBundle", "auto_mixed_precision", "calibrate",
+           "predicted_loss_mse", "tabulate_measured_gains"]

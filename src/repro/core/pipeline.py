@@ -30,12 +30,14 @@ from repro.core.ip_solver import MCKPGroup, solve_mckp
 from repro.core.mpconfig import MPPlan
 from repro.core.partition import partition_sequential
 from repro.core.sensitivity import SensitivityResult, calibrate_sensitivity
-from repro.core.timegain import default_gain_models, enumerate_combos
+from repro.core.timegain import (WallClockGainModel, default_gain_models,
+                                 enumerate_combos)
 from repro.hw.profiles import TPU_V5E, HWProfile
 from repro.quant.formats import get_format
 
 __all__ = ["AMPOptions", "CalibrationBundle", "calibrate",
-           "auto_mixed_precision", "predicted_loss_mse", "build_groups"]
+           "auto_mixed_precision", "predicted_loss_mse", "build_groups",
+           "tabulate_measured_gains"]
 
 BUNDLE_SCHEMA = 1
 
@@ -138,7 +140,21 @@ class CalibrationBundle:
             raise KeyError(
                 f"objective {objective!r} not calibrated; bundle has "
                 f"{sorted(self.objectives)}")
-        entry = self.objectives[objective]
+        # measured tier: a tabulated "<obj>_wall" table (see
+        # tabulate_measured_gains) prices plans with measured wall-clock
+        # gains instead of the analytic tables for the same objective; the
+        # plan meta records which tier actually priced it so a production
+        # solve falling back to roofline gains is visible.
+        table_key = objective
+        if f"{objective}_wall" in self.objectives:
+            table_key = f"{objective}_wall"
+        if table_key.endswith("_wall"):
+            gain_tier = "measured"
+        elif objective == "ET":
+            gain_tier = "roofline_fallback"
+        else:
+            gain_tier = "analytic"
+        entry = self.objectives[table_key]
         groups, tables = entry["groups"], entry["gains"]
 
         mckp_groups = []
@@ -173,7 +189,8 @@ class CalibrationBundle:
             ip_gap=float(res.gap),
             meta={"n_ops": len(self.sens.ops), "n_groups": len(groups),
                   "loss_sq_mean": self.sens.loss_sq_mean,
-                  "ip_method": res.method},
+                  "ip_method": res.method,
+                  "gain_tier": gain_tier, "gain_table": table_key},
         )
 
     def pareto(self, taus: Sequence[float], objective: Optional[str] = None,
@@ -256,20 +273,83 @@ class CalibrationBundle:
             return cls.from_json(f.read())
 
 
+def _calib_hash(batches) -> Optional[str]:
+    """Content hash of the calibration set (array bytes, order-sensitive).
+
+    Keys registry lookups and cache validation: two bundles for the same
+    checkpoint calibrated on different data are different artifacts."""
+    if batches is None:
+        return None
+    import hashlib
+    h = hashlib.sha256()
+    for batch in batches:
+        for key in sorted(batch):
+            v = np.asarray(batch[key])
+            h.update(key.encode("utf-8"))
+            h.update(str(v.shape).encode("utf-8"))
+            h.update(np.ascontiguousarray(v).tobytes())
+    return h.hexdigest()[:16]
+
+
+def tabulate_measured_gains(bundle: CalibrationBundle, run_factory: Callable,
+                            *, objective: str = "ET", n_iters: int = 5,
+                            n_warmup: int = 2) -> str:
+    """Measure per-group wall-clock gains (paper Sec. 2.3.1) and tabulate
+    them into ``bundle.objectives["<objective>_wall"]`` over the same groups
+    as the analytic ``objective`` tables.
+
+    Once tabulated (and persisted via ``bundle.save``), every
+    ``bundle.solve(objective=...)`` for that objective automatically prices
+    plans with the measured gains — the production tier — and stamps
+    ``plan.meta["gain_tier"] = "measured"``; bundles without the table keep
+    solving from the analytic gains with ``"roofline_fallback"`` flagged.
+
+    ``run_factory(assignment)`` must return a zero-arg callable executing one
+    end-to-end step (e.g. a compiled serving prefill) under the given
+    op->format assignment (see :class:`~repro.core.timegain.WallClockGainModel`).
+    Returns the objective key the table was stored under.
+    """
+    if objective.endswith("_wall"):
+        raise ValueError(f"objective {objective!r} is already a measured tier")
+    if objective not in bundle.objectives:
+        raise KeyError(
+            f"objective {objective!r} not calibrated; bundle has "
+            f"{sorted(bundle.objectives)}")
+    gm = WallClockGainModel(run_factory, n_iters=n_iters, n_warmup=n_warmup)
+    op_index = {op.name: op for op in bundle.sens.ops}
+    groups = bundle.objectives[objective]["groups"]
+    tables = []
+    for group in groups:
+        ops = [op_index[n] for n in group]
+        combos = enumerate_combos(len(ops), bundle.formats)
+        tables.append(np.asarray(gm.gains(ops, combos), np.float64))
+    key = f"{objective}_wall"
+    bundle.objectives[key] = {"groups": [list(g) for g in groups],
+                              "gains": tables}
+    bundle.meta.setdefault("gain_models", {})[key] = type(gm).__name__
+    return key
+
+
 def _cache_hit(bundle: CalibrationBundle, opts: AMPOptions,
-               fingerprint: str, gain_models: dict) -> bool:
+               fingerprint: str, gain_models: dict,
+               calib_hash: Optional[str] = None) -> bool:
     """A cached bundle is reusable iff it was calibrated with the same
-    formats, partition options, params content, and its gain tables come
-    from the same gain-model type per requested objective (a bundle of
-    roofline tables must not satisfy a WallClockGainModel request)."""
+    formats, partition options, params content, calibration set, and its
+    gain tables come from the same gain-model type per requested objective
+    (a bundle of roofline tables must not satisfy a WallClockGainModel
+    request)."""
     meta = bundle.meta
     recorded = meta.get("gain_models", {})
+    cached_ch = meta.get("calib_hash")
     return (bundle.formats == tuple(opts.formats)
             and bundle.ref_format == opts.ref_format
             and meta.get("max_group_size") == opts.max_group_size
             and meta.get("drop_residual") == opts.drop_residual
             and meta.get("hw") == opts.hw.name  # gain tables are hw-specific
             and meta.get("params_fingerprint") == fingerprint
+            # pre-calib_hash artifacts (or sens-injected runs) stay valid
+            and (cached_ch is None or calib_hash is None
+                 or cached_ch == calib_hash)
             and set(gain_models) <= set(bundle.objectives)
             and all(recorded.get(obj) == type(gm).__name__
                     for obj, gm in gain_models.items()))
@@ -299,13 +379,16 @@ def calibrate(model, params, calib_batches: Optional[Iterable],
         gain_models = default_gain_models(opts.hw, ref=opts.ref_format)
 
     fingerprint = _params_fingerprint(params)
+    if calib_batches is not None:
+        calib_batches = list(calib_batches)
+    calib_hash = _calib_hash(calib_batches)
     if cache and os.path.exists(cache):
         try:
             cached = CalibrationBundle.load(cache)
         except Exception:
             cached = None
         if cached is not None and _cache_hit(cached, opts, fingerprint,
-                                             gain_models):
+                                             gain_models, calib_hash):
             # solve defaults are caller convenience, not part of the artifact
             cached.default_tau = opts.tau
             cached.default_objective = opts.objective
@@ -357,6 +440,7 @@ def calibrate(model, params, calib_batches: Optional[Iterable],
               "drop_residual": opts.drop_residual,
               "hw": opts.hw.name,
               "params_fingerprint": fingerprint,
+              "calib_hash": calib_hash,
               "n_calib_batches": sens.n_batches,
               "gain_models": {obj: type(gm).__name__
                               for obj, gm in gain_models.items()},

@@ -58,24 +58,46 @@ def _plan_unknown_ops(model, params, plan: MPPlan) -> set:
     return set() if known is None else plan.unknown_ops(known)
 
 
-def _solve_from_bundle(model, params, args) -> MPPlan:
-    """Serve-time solve: load the calibration artifact, validate it against
-    this model's op namespace, and run the IP for the requested SLA."""
-    bundle = CalibrationBundle.load(args.calibration)
+def _check_bundle_ops(model, params, bundle: CalibrationBundle,
+                      src: str) -> None:
+    """Validate the artifact against this model's op namespace."""
     known = _serving_op_names(model, params)
     if known is not None:
         unknown = bundle.unknown_ops(known)
         if unknown:
             raise SystemExit(
-                f"[serve] calibration bundle has {len(unknown)} ops not in "
-                f"this model (e.g. {sorted(unknown)[:3]}); was it calibrated "
-                f"for a different arch?")
+                f"[serve] calibration bundle ({src}) has {len(unknown)} ops "
+                f"not in this model (e.g. {sorted(unknown)[:3]}); was it "
+                f"calibrated for a different arch?")
+
+
+def _solve_from_bundle(bundle: CalibrationBundle, args, src: str) -> MPPlan:
+    """Serve-time solve: run the cheap IP for the requested SLA."""
     plan = bundle.solve(tau=args.tau, objective=args.objective)
-    print(f"[serve] solved from {args.calibration}: tau {plan.tau} "
+    tier = plan.meta.get("gain_tier", "analytic")
+    print(f"[serve] solved from {src}: tau {plan.tau} "
           f"objective {plan.objective} -> {plan.n_quantized} ops quantized "
-          f"(predicted gain {plan.predicted_gain:.3e}, "
+          f"(predicted gain {plan.predicted_gain:.3e} [{tier}], "
           f"MSE {plan.predicted_loss_mse:.3e} <= {plan.budget:.3e})")
+    if tier == "roofline_fallback":
+        print("[serve] note: no measured wall-clock gain table in this "
+              "bundle — the solve used roofline gains (run "
+              "tabulate_measured_gains + re-save to upgrade)")
     return plan
+
+
+def _registry_bundle(model, params, path: str):
+    """Serve-time registry lookup: the freshest bundle compatible with the
+    arch and the *actual* restored params' fingerprint."""
+    from repro.core.pipeline import _params_fingerprint
+    from repro.core.registry import BundleRegistry
+    arch = getattr(model.cfg, "name", None)
+    fp = _params_fingerprint(params)
+    bundle = BundleRegistry(path).find(arch, fp)
+    src = f"{path}:{arch}/{fp}"
+    print(f"[serve] registry match: arch {arch} fingerprint {fp} "
+          f"(calib_hash {bundle.meta.get('calib_hash')})")
+    return bundle, src
 
 
 def main():
@@ -92,6 +114,28 @@ def main():
                          "(default: the bundle's calibration-time tau)")
     ap.add_argument("--objective", default=None, choices=("ET", "TT", "M"),
                     help="IP objective for --calibration solves")
+    ap.add_argument("--registry", default=None,
+                    help="bundle registry root: pick the freshest "
+                         "calibration bundle compatible with this arch and "
+                         "the restored checkpoint's fingerprint, instead of "
+                         "trusting a hand-passed --calibration path")
+    ap.add_argument("--adaptive-tau", type=float, default=None,
+                    help="enable load-adaptive MP (continuous mode; needs "
+                         "--calibration or --registry): serve under a tau "
+                         "ladder starting at this base, escalating to more "
+                         "aggressive plans as the queue grows and restoring "
+                         "as it drains")
+    ap.add_argument("--adaptive-levels", type=int, default=3,
+                    help="tau ladder depth (base * factor**i)")
+    ap.add_argument("--adaptive-factor", type=float, default=2.0)
+    ap.add_argument("--adaptive-every", type=int, default=2,
+                    help="controller evaluation cadence in engine ticks")
+    ap.add_argument("--adaptive-dwell", type=int, default=4,
+                    help="min ticks between plan swaps")
+    ap.add_argument("--adaptive-queue-high", type=int, default=2,
+                    help="queue-depth watermark that triggers escalation")
+    ap.add_argument("--adaptive-queue-low", type=int, default=0,
+                    help="queue-depth watermark below which to restore")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -152,15 +196,45 @@ def main():
         params = model.init(jax.random.key(0))
         print("[serve] random-init params (demo mode)")
 
-    if args.mp_plan and args.calibration:
-        raise SystemExit("--mp-plan and --calibration are mutually exclusive")
+    if sum(map(bool, (args.mp_plan, args.calibration, args.registry))) > 1:
+        raise SystemExit("--mp-plan, --calibration and --registry are "
+                         "mutually exclusive")
     if (args.tau is not None or args.objective is not None) \
-            and not args.calibration:
+            and not (args.calibration or args.registry):
         raise SystemExit("--tau/--objective select a serve-time solve and "
-                         "require --calibration")
+                         "require --calibration or --registry")
+    if args.adaptive_tau is not None:
+        if not (args.calibration or args.registry):
+            raise SystemExit("--adaptive-tau re-solves under load and needs "
+                             "--calibration or --registry")
+        if not args.continuous:
+            raise SystemExit("--adaptive-tau drives the continuous engine; "
+                             "pass --continuous")
     plan = None
+    controller = None
+    bundle = src = None
     if args.calibration:
-        plan = _solve_from_bundle(model, params, args)
+        bundle, src = CalibrationBundle.load(args.calibration), args.calibration
+    elif args.registry:
+        bundle, src = _registry_bundle(model, params, args.registry)
+    if bundle is not None:
+        _check_bundle_ops(model, params, bundle, src)
+        if args.adaptive_tau is not None:
+            from repro.serve import AdaptiveMPController
+            controller = AdaptiveMPController.from_bundle(
+                bundle, args.adaptive_tau,
+                n_levels=args.adaptive_levels, factor=args.adaptive_factor,
+                objective=args.objective or "ET",
+                every=args.adaptive_every, dwell=args.adaptive_dwell,
+                queue_high=args.adaptive_queue_high,
+                queue_low=args.adaptive_queue_low)
+            base = controller.plan
+            print(f"[serve] adaptive MP: tau ladder "
+                  f"{[f'{t:g}' for t in controller.taus]} (base plan "
+                  f"quantizes {base.n_quantized} ops, "
+                  f"tier {base.meta.get('gain_tier')})")
+        else:
+            plan = _solve_from_bundle(bundle, args, src)
     elif args.mp_plan:
         plan = MPPlan.load(args.mp_plan)
         print(f"[serve] MP plan: {plan.n_quantized} ops quantized "
@@ -211,7 +285,8 @@ def main():
                                        mesh=mesh,
                                        prefix_cache=(False
                                                      if args.no_prefix_cache
-                                                     else None))
+                                                     else None),
+                                       adaptive=controller)
         rng = np.random.default_rng(1)
         reqs = [Request(rid=i,
                         tokens=rng.integers(0, model.cfg.vocab_size,
@@ -256,6 +331,13 @@ def main():
                   f"requests | {c['prefix_hit_tokens']} prompt tokens "
                   f"skipped | {c['cow_forks']} COW forks | "
                   f"{c['preemptions']} preemptions")
+        if "adaptive" in c:
+            a = c["adaptive"]
+            print(f"[serve] adaptive MP: {a['downshifts']} downshifts / "
+                  f"{a['restores']} restores over taus {a['taus']} | "
+                  f"final tau {a['final_tau']:g} (level {a['final_level']}) "
+                  f"| swaps at steps "
+                  f"{[s['step'] for s in a['swaps']] or 'none'}")
     else:
         eng = ServeEngine(model, mp=plan, donate=False)
         prompt = {"tokens": jax.random.randint(jax.random.key(1),

@@ -19,6 +19,7 @@ from repro.train import optim
 __all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
            "make_paged_decode_step", "make_eval_step",
            "make_bucketed_prefill_step", "make_chunked_prefill_step",
+           "make_dense_chunked_prefill_step",
            "get_serving_step", "greedy_next_token", "merge_first_tokens"]
 
 
@@ -147,6 +148,27 @@ def make_chunked_prefill_step(model, mp: Optional[dict] = None):
     return prefill_step
 
 
+def make_dense_chunked_prefill_step(model, mp: Optional[dict] = None):
+    """(params, caches, tokens, start, valid) -> (logits, caches).
+
+    Chunked prefill over *dense* (non-paged) per-slot caches. Same contract
+    as :func:`make_bucketed_prefill_step`, but ``start`` may be nonzero:
+    later chunks of a long prompt resume where the previous chunk stopped,
+    attending over the earlier chunks through the slot's own ring. Windowed
+    layers need their rings widened by the chunk length
+    (``init_cache(..., chunk_extra=chunk_len)``) — a ``window``-sized ring
+    truncates chunked prefill whenever ``window`` is not chunk-aligned.
+    """
+    ctx = _serving_ctx(mp)
+
+    def prefill_step(params, caches, tokens, start, valid):
+        return model.prefill_chunk(params, tokens, caches, ctx,
+                                   start_pos=start, valid_len=valid,
+                                   chunk_ring=True)
+
+    return prefill_step
+
+
 def make_decode_step(model, mp: Optional[dict] = None):
     """(params, caches, token, pos) -> (logits, caches).
 
@@ -187,7 +209,8 @@ def get_serving_step(model, kind: str, mp=None,
     """Memoized ``jax.jit`` of a serving step for ``model``.
 
     ``kind`` is one of ``prefill`` / ``bucketed_prefill`` /
-    ``chunked_prefill`` / ``decode`` / ``paged_decode``. Steps are cached per
+    ``chunked_prefill`` / ``dense_chunked_prefill`` / ``decode`` /
+    ``paged_decode``. Steps are cached per
     (model, kind, MP assignment, paged_attn, donation, mesh layout) so every
     engine over the same model reuses one compiled program per input shape.
     ``mp`` may be an assignment dict or an ``MPPlan``.
@@ -202,6 +225,7 @@ def get_serving_step(model, kind: str, mp=None,
         "prefill": make_prefill_step,
         "bucketed_prefill": make_bucketed_prefill_step,
         "chunked_prefill": make_chunked_prefill_step,
+        "dense_chunked_prefill": make_dense_chunked_prefill_step,
         "decode": make_decode_step,
         "paged_decode": make_paged_decode_step,
     }

@@ -81,6 +81,14 @@ class LMConfig:
     flash_block: int = 1024
     dtype: str = "bfloat16"
     kv_cache_dtype: str = "bfloat16"      # fp8_e4m3 halves decode cache HBM
+    # paged KV-cache dequant multipliers (scaled fp8 KV): None | a tuple of
+    # (entry, scale) pairs applied to every layer | a per-layer tuple (len
+    # n_layers) of such pair-tuples (None entries = unit scales). Entries:
+    # "k"/"v" (attention blocks) or "ckv"/"kr" (MLA). Writes divide by the
+    # scale before the fp8 cast, reads multiply it back — see
+    # repro.quant.kv_scales.calibrate_kv_scales for producing these from a
+    # calibration pass. Paged serving only; dense rings ignore scales.
+    kv_dequant_scales: Optional[tuple] = None
     # store matmul weights in fp8 (the paper's IP-M objective realized):
     # halves weight HBM + FSDP gather bytes; dequant folds into the GEMM
     param_dtype: str = "bfloat16"
@@ -89,25 +97,75 @@ class LMConfig:
         if not self.block_types:
             object.__setattr__(self, "block_types", ("attn",) * self.n_layers)
         assert len(self.block_types) == self.n_layers
+        sc = self.kv_dequant_scales
+        if sc is not None:
+            sc = tuple(sc)
+            if self._scales_are_per_layer(sc):
+                sc = tuple(None if e is None else
+                           tuple((str(n), float(s)) for n, s in e)
+                           for e in sc)
+                if len(sc) != self.n_layers:
+                    raise ValueError(
+                        f"per-layer kv_dequant_scales has {len(sc)} entries "
+                        f"for {self.n_layers} layers")
+                if self.scan_layers and len(set(sc)) > 1:
+                    raise ValueError(
+                        "scan_layers stacks layers into shared-trace "
+                        "segments, so per-layer kv_dequant_scales must be "
+                        "uniform — pass one global pair-tuple instead")
+            else:
+                sc = tuple((str(n), float(s)) for n, s in sc)
+            object.__setattr__(self, "kv_dequant_scales", sc)
+
+    @staticmethod
+    def _scales_are_per_layer(sc: tuple) -> bool:
+        """Global form: ((name, scale), ...); per-layer form: one entry per
+        layer, each None or a pair-tuple."""
+        first = next((e for e in sc if e is not None), None)
+        if first is None:
+            return True
+        return not (len(first) == 2 and isinstance(first[0], str))
+
+    def kv_scales_for(self, i: Optional[int]) -> Optional[tuple]:
+        """Dequant-scale pairs for layer ``i`` (None = unit scales).
+        ``i=None`` (scan segments, MTP block) returns the global pairs, or
+        None under a per-layer table — per-layer + scan is rejected at
+        construction unless uniform."""
+        sc = self.kv_dequant_scales
+        if sc is None:
+            return None
+        if self._scales_are_per_layer(sc):
+            if i is None:
+                return sc[0] if self.scan_layers and sc else None
+            return sc[i]
+        return sc
 
     # ---- derived ----
     @property
     def attn_cfg(self) -> L.AttnConfig:
+        return self.attn_cfg_for(None)
+
+    def attn_cfg_for(self, i: Optional[int]) -> L.AttnConfig:
         return L.AttnConfig(self.d_model, self.n_heads, self.n_kv_heads,
                             self.d_head, qkv_bias=self.qkv_bias,
                             rope_theta=self.rope_theta,
                             window=self.sliding_window,
                             flash_min_seq=self.flash_min_seq,
-                            flash_block=self.flash_block)
+                            flash_block=self.flash_block,
+                            kv_dequant_scales=self.kv_scales_for(i))
 
     @property
     def mla_cfg(self) -> L.MLAConfig:
+        return self.mla_cfg_for(None)
+
+    def mla_cfg_for(self, i: Optional[int]) -> L.MLAConfig:
         return L.MLAConfig(self.d_model, self.n_heads, self.q_lora_rank,
                            self.kv_lora_rank, self.qk_nope_dim,
                            self.qk_rope_dim, self.v_head_dim, self.rope_theta,
                            flash_min_seq=self.flash_min_seq,
                            flash_block=self.flash_block,
-                           absorb_decode=self.mla_absorb_decode)
+                           absorb_decode=self.mla_absorb_decode,
+                           kv_dequant_scales=self.kv_scales_for(i))
 
     def layer_signature(self, i: int) -> tuple:
         return (self.block_types[i], i in self.moe_layers)
@@ -228,6 +286,8 @@ class LM:
                block_tables: Optional[jax.Array] = None,
                chunk_valid: Optional[jax.Array] = None,
                chunk_start: Optional[jax.Array] = None,
+               chunk_ring: bool = False,
+               layer_idx: Optional[int] = None,
                paged_attn: str = "fused"):
         cfg = self.cfg
         block, is_moe = sig
@@ -242,19 +302,23 @@ class LM:
                      if decode and block_tables is not None else None)
         if block == "attn":
             y, new_cache = L.attention(p["attn"], ctx, f"{scope}/attn",
-                                       cfg.attn_cfg, hn, positions,
+                                       cfg.attn_cfg_for(layer_idx), hn,
+                                       positions,
                                        cache=cache, cache_pos=cache_pos,
                                        block_tables=block_tables,
                                        chunk_valid=chunk_valid,
                                        chunk_start=chunk_start,
+                                       chunk_ring=chunk_ring,
                                        window=window, paged_attn=paged_attn)
         elif block == "mla":
             y, new_cache = L.mla_attention(p["attn"], ctx, f"{scope}/attn",
-                                           cfg.mla_cfg, hn, positions,
+                                           cfg.mla_cfg_for(layer_idx), hn,
+                                           positions,
                                            cache=cache, cache_pos=cache_pos,
                                            block_tables=block_tables,
                                            chunk_valid=chunk_valid,
                                            chunk_start=chunk_start,
+                                           chunk_ring=chunk_ring,
                                            paged_attn=paged_attn)
         elif block == "mamba":
             if decode:
@@ -271,11 +335,13 @@ class LM:
             a_cache = None if cache is None else cache.get("attn")
             m_cache = None if cache is None else cache.get("mamba")
             ya, a_new = L.attention(p["attn"], ctx, f"{scope}/attn",
-                                    cfg.attn_cfg, hn, positions,
+                                    cfg.attn_cfg_for(layer_idx), hn,
+                                    positions,
                                     cache=a_cache, cache_pos=cache_pos,
                                     block_tables=block_tables,
                                     chunk_valid=chunk_valid,
-                                    chunk_start=chunk_start, window=window,
+                                    chunk_start=chunk_start,
+                                    chunk_ring=chunk_ring, window=window,
                                     paged_attn=paged_attn)
             if decode:
                 ym, m_new = M.apply_mamba_decode(p["mamba"], ctx,
@@ -310,6 +376,7 @@ class LM:
                   block_tables: Optional[jax.Array] = None,
                   chunk_valid: Optional[jax.Array] = None,
                   chunk_start: Optional[jax.Array] = None,
+                  chunk_ring: bool = False,
                   paged_attn: str = "fused"):
         """Run all layers. caches: {"layers/i" or "segments/s": cache pytree}."""
         from repro.distributed.sharding import shard_hint
@@ -336,7 +403,7 @@ class LM:
                         window=win_i, cache=cache_i, cache_pos=cache_pos,
                         decode=decode, block_tables=block_tables,
                         chunk_valid=chunk_valid, chunk_start=chunk_start,
-                        paged_attn=paged_attn)
+                        chunk_ring=chunk_ring, paged_attn=paged_attn)
                     return (h_, aux_ + aux_i), c_new
 
                 if cfg.remat:
@@ -385,6 +452,7 @@ class LM:
                                        block_tables=block_tables,
                                        chunk_valid=chunk_valid,
                                        chunk_start=chunk_start,
+                                       chunk_ring=chunk_ring, layer_idx=i,
                                        paged_attn=paged_attn)
 
                 if cfg.remat:
@@ -494,11 +562,14 @@ class LM:
         return specs
 
     def cache_specs(self, batch: int, max_len: int,
-                    ring_window: bool = True) -> dict:
+                    ring_window: bool = True, chunk_extra: int = 0) -> dict:
         """Flat path->ParamSpec dict for the dense KV/SSM caches.
         ``ring_window=False`` keeps full ``max_len`` K/V rows for
         sliding-window layers (window enforced by mask only) — required for
-        a prefill cache that will be reshaped into paged blocks."""
+        a prefill cache that will be reshaped into paged blocks.
+        ``chunk_extra`` widens windowed rings to ``window + chunk_extra``
+        rows so dense chunked prefill never evicts in-window keys (engines
+        pass their ``chunk_len``; see :func:`repro.nn.layers.kv_cache_spec`)."""
         cfg = self.cfg
         kv_dtype = self._kv_dtype
 
@@ -506,7 +577,8 @@ class LM:
             block, _ = sig
             if block == "attn":
                 return {"attn": L.kv_cache_spec(cfg.attn_cfg, batch, max_len,
-                                                kv_dtype, ring=ring_window)}
+                                                kv_dtype, ring=ring_window,
+                                                chunk_extra=chunk_extra)}
             if block == "mla":
                 return {"attn": L.mla_cache_spec(cfg.mla_cfg, batch, max_len,
                                                  kv_dtype)}
@@ -514,7 +586,8 @@ class LM:
                 return {"mamba": M.mamba_cache_spec(cfg.ssm, batch, self.dtype)}
             if block == "hybrid":
                 return {"attn": L.kv_cache_spec(cfg.attn_cfg, batch, max_len,
-                                                kv_dtype, ring=ring_window),
+                                                kv_dtype, ring=ring_window,
+                                                chunk_extra=chunk_extra),
                         "mamba": M.mamba_cache_spec(cfg.ssm, batch, self.dtype)}
             raise ValueError(block)
 
@@ -562,9 +635,10 @@ class LM:
         return out
 
     def init_cache(self, batch: int, max_len: int, abstract: bool = False,
-                   ring_window: bool = True) -> dict:
+                   ring_window: bool = True, chunk_extra: int = 0) -> dict:
         return self._materialize_cache(
-            self.cache_specs(batch, max_len, ring_window=ring_window),
+            self.cache_specs(batch, max_len, ring_window=ring_window,
+                             chunk_extra=chunk_extra),
             abstract)
 
     def init_paged_cache(self, n_slots: int, n_blocks: int, block_size: int,
@@ -683,7 +757,8 @@ class LM:
     def prefill_chunk(self, params: dict, tokens: jax.Array, caches: dict,
                       ctx: QuantContext, *, start_pos: jax.Array,
                       valid_len: jax.Array,
-                      block_tables: Optional[jax.Array] = None):
+                      block_tables: Optional[jax.Array] = None,
+                      chunk_ring: bool = False):
         """Process one (possibly padded) prompt chunk for every cache row.
 
         The batched/bucketed twin of :meth:`prefill`: every row of
@@ -703,6 +778,10 @@ class LM:
           attention runs over the gathered logical layout, so prompts longer
           than a chunk resume exactly where the previous chunk stopped.
           None = dense bucketed single-shot prefill into the row's ring.
+        * ``chunk_ring``: dense continuation mode — attend the whole ring
+          gathered into logical order instead of only the chunk's local K/V,
+          so dense engines can split prompts into chunks too. Windowed archs
+          need rings widened by ``chunk_len`` (``init_cache(chunk_extra=)``).
 
         Returns (logits (B, 1, V) at each row's last valid position, caches).
         """
@@ -715,6 +794,7 @@ class LM:
         h, caches, _ = self._backbone(params, ctx, emb, positions,
                                       caches=caches, chunk_valid=chunk_valid,
                                       chunk_start=start,
+                                      chunk_ring=chunk_ring,
                                       block_tables=block_tables)
         idx = jnp.maximum(valid - 1, 0)          # inactive rows: garbage out
         h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)

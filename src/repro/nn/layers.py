@@ -190,13 +190,22 @@ def attn_specs(prefix: str, cfg: AttnConfig) -> dict:
 
 
 def kv_cache_spec(cfg: AttnConfig, batch: int, max_len: int,
-                  dtype=jnp.bfloat16, ring: bool = True) -> dict:
+                  dtype=jnp.bfloat16, ring: bool = True,
+                  chunk_extra: int = 0) -> dict:
     """``ring=False`` disables the sliding-window ring clamp and keeps the
     full ``max_len`` layout (positions stay contiguous from slot 0) — the
     shape ``LM.paged_insert`` needs to reshape a prefill cache into blocks;
-    the window is still enforced by the attention mask."""
+    the window is still enforced by the attention mask.
+
+    ``chunk_extra`` widens windowed rings to ``window + chunk_extra`` rows:
+    a chunked prefill writes up to a whole chunk past the window before the
+    chunk's earliest query attends, so a ring clamped exactly at ``window``
+    would overwrite keys still inside that query's window whenever
+    ``window`` is not chunk-aligned. Engines serving dense chunked prefill
+    pass their ``chunk_len`` here; decode and one-shot prefill need no
+    slack."""
     W = (max_len if (cfg.window is None or not ring)
-         else min(max_len, cfg.window))
+         else min(max_len, cfg.window + chunk_extra))
     # kv_heads shard over 'model' when divisible; otherwise head_dim picks up
     # the model axis (contraction-dim sharding -> small score all-reduce)
     return {
@@ -416,7 +425,33 @@ def paged_update_attend(cache: dict, tensors: dict, block_tables: jax.Array,
     ``scales`` (per-entry dequant multipliers) reaches the gather through
     :func:`paged_gather`; callers taking the fused return must hand the
     *same* mapping to the kernel so both read paths dequantize identically.
+    The same mapping also drives the *write* side: fresh K/V is divided by
+    its entry's scale in f32 before the storage-dtype cast, so a
+    calibrated per-layer scale maps each entry's amax into the fp8
+    representable range (read paths multiply it back). Unit scales skip the
+    divide entirely — the default path stays bit-identical.
+
+    fp8 storage saturates: values beyond the format's finite max are
+    clamped to it before the cast (e4m3fn has no inf — an overflow would
+    otherwise store NaN and poison every later attention read over that
+    block). In-range values are untouched, so sub-amax traffic stays
+    bit-identical; a calibrated scale moves the whole range in-bounds and
+    the clamp never fires.
     """
+    if scales:
+        tensors = {
+            name: (t if float(scales.get(name, 1.0)) == 1.0
+                   else t.astype(jnp.float32) / float(scales[name]))
+            for name, t in tensors.items()}
+
+    def _saturate(name, t):
+        cd = cache[name].dtype
+        if cd.itemsize == 1 and jnp.issubdtype(cd, jnp.floating):
+            fmax = float(jnp.finfo(cd).max)
+            return jnp.clip(t.astype(jnp.float32), -fmax, fmax)
+        return t
+
+    tensors = {name: _saturate(name, t) for name, t in tensors.items()}
     if chunk_valid is not None:
         new_cache = paged_write_chunk(cache, tensors, block_tables,
                                       positions, chunk_valid)
@@ -493,6 +528,26 @@ def _cache_write_chunk(cache: dict, tensors: dict, positions: jax.Array,
     return new
 
 
+def _ring_logical_gather(cache: dict, names: tuple, dtype,
+                         start: jax.Array, valid: jax.Array) -> tuple:
+    """Gather a dense ring into ascending *logical* order for chunked-prefill
+    continuation: after a chunk ending at absolute position ``end`` lands,
+    the ring holds exactly positions ``end - W .. end - 1`` (contiguous
+    writes from 0), so logical position ``p`` lives at slot ``p % W``.
+    Returns ``({name: (B, W, ...) gathered}, kp)`` with ``kp[b, j] =
+    end_b - W + j`` — entries with ``kp < 0`` (ring not yet full) gather
+    arbitrary slots and are excluded by ``_mask_from_pos``'s ``k_pos >= 0``
+    clause, contributing exact zeros; valid keys appear in the same
+    ascending order a one-shot prefill attends them."""
+    W = cache["pos"].shape[1]
+    end = start + jnp.sum(valid, axis=1).astype(jnp.int32)          # (B,)
+    kp = end[:, None] + jnp.arange(-W, 0, dtype=jnp.int32)[None]    # (B, W)
+    slot = kp % W                                     # nonneg for kp < 0 too
+    bidx = jnp.broadcast_to(jnp.arange(slot.shape[0])[:, None], slot.shape)
+    out = {name: cache[name][bidx, slot].astype(dtype) for name in names}
+    return out, kp
+
+
 def _cache_write(cache: dict, tensors: dict, positions: jax.Array,
                  cache_pos: Optional[jax.Array]) -> dict:
     """Write T new entries into the ring buffer. positions: (B, T)."""
@@ -559,6 +614,7 @@ def attention(p: dict, ctx: QuantContext, scope: str, cfg: AttnConfig,
               block_tables: Optional[jax.Array] = None,
               chunk_valid: Optional[jax.Array] = None,
               chunk_start: Optional[jax.Array] = None,
+              chunk_ring: bool = False,
               window: Union[None, int, jax.Array] = "cfg",
               cross: bool = False, paged_attn: str = "fused"):
     """Returns (y, new_cache).
@@ -579,9 +635,14 @@ def attention(p: dict, ctx: QuantContext, scope: str, cfg: AttnConfig,
       a padded chunk starting at ``chunk_start`` (B,). Paged: the chunk is
       written straight into physical blocks and attention runs over the
       gathered logical layout (so a continuation chunk sees every earlier
-      chunk's keys). Dense: masked ring write + local attention (single-shot
-      bucketed prefill; dense rings cannot serve continuation chunks of a
-      windowed arch, so engines only split prompts in paged mode).
+      chunk's keys). Dense: masked ring write + local attention by default
+      (single-shot bucketed prefill — continuation-blind);
+      ``chunk_ring=True`` instead attends the whole ring gathered into
+      logical order, so dense engines can split prompts into chunks too —
+      windowed archs additionally need their ring widened to
+      ``window + chunk_len`` (``kv_cache_spec(chunk_extra=...)``) or a
+      chunk write past an unaligned window boundary evicts keys the
+      chunk's earliest query still needs.
     * cross-attention: ``cross=True``; K/V from ``kv_x`` (encoder output) or
       from a pre-computed ``cache`` {"k","v"}; bidirectional, no RoPE.
     * ``window``: "cfg" -> use cfg.window; else override (may be traced).
@@ -645,14 +706,23 @@ def attention(p: dict, ctx: QuantContext, scope: str, cfg: AttnConfig,
             else:
                 k, v = g["k"], g["v"]
         elif cache is not None and chunk_valid is not None:
-            # dense bucketed prefill: masked ring write, local attention
-            # over the cache-dtype-rounded fresh K/V (flash-capable)
+            # dense bucketed prefill: masked ring write, then either local
+            # attention over the cache-dtype-rounded fresh K/V (single-shot
+            # buckets, flash-capable) or — for chunked continuation
+            # (chunk_ring) — attention over the whole ring gathered into
+            # logical order, so this chunk's queries see every earlier
+            # chunk's keys exactly as later cache reads will
             new_cache = _cache_write_chunk(cache, {"k": k, "v": v},
                                            positions, chunk_valid,
                                            chunk_start)
-            k = _cache_roundtrip(k, cache["k"], x.dtype)
-            v = _cache_roundtrip(v, cache["v"], x.dtype)
-            kp = positions
+            if chunk_ring:
+                g, kp = _ring_logical_gather(new_cache, ("k", "v"), x.dtype,
+                                             chunk_start, chunk_valid)
+                k, v = g["k"], g["v"]
+            else:
+                k = _cache_roundtrip(k, cache["k"], x.dtype)
+                v = _cache_roundtrip(v, cache["v"], x.dtype)
+                kp = positions
         elif cache is not None:
             new_cache = _cache_write(cache, {"k": k, "v": v}, positions, cache_pos)
             if cache_pos is not None:
@@ -811,6 +881,7 @@ def mla_attention(p: dict, ctx: QuantContext, scope: str, cfg: MLAConfig,
                   block_tables: Optional[jax.Array] = None,
                   chunk_valid: Optional[jax.Array] = None,
                   chunk_start: Optional[jax.Array] = None,
+                  chunk_ring: bool = False,
                   paged_attn: str = "fused"):
     """MLA; latent KV cache {"ckv","kr","pos"}; returns (y, new_cache).
     ``chunk_valid``/``chunk_start`` select chunked/bucketed prefill (see
@@ -840,11 +911,18 @@ def mla_attention(p: dict, ctx: QuantContext, scope: str, cfg: MLAConfig,
     new_cache = cache
     if cache is not None and block_tables is not None:
         # paged: fused absorbed decode scores the block-major latents in
-        # place; chunk continuation and the expanded/fallback paths gather
-        fused = (chunk_valid is None and cfg.absorb_decode
+        # place; chunk continuation and the expanded/fallback paths gather.
+        # Non-unit dequant scales also route to the gather path: the fused
+        # kernel's f32 dequant point cannot reproduce the gather path's
+        # bf16 rounding, and raising mid-drain (the old fail-fast in
+        # _mla_decode_absorbed_paged, kept as a backstop) would kill a
+        # serving engine that merely loaded a scaled-fp8 checkpoint.
+        kv_scales = dict(cfg.kv_dequant_scales or ())
+        unit_scales = all(float(kv_scales.get(n, 1.0)) == 1.0
+                          for n in ("ckv", "kr"))
+        fused = (chunk_valid is None and cfg.absorb_decode and unit_scales
                  and use_fused_paged(ctx, scope, paged_attn)
                  and _mesh_fused_ok(B, 1))
-        kv_scales = dict(cfg.kv_dequant_scales or ())
         new_cache, g, kp = paged_update_attend(
             cache, {"ckv": ckv, "kr": kr}, block_tables, positions,
             cache_pos, chunk_valid, x.dtype, fused=fused, scales=kv_scales)
@@ -859,9 +937,16 @@ def mla_attention(p: dict, ctx: QuantContext, scope: str, cfg: MLAConfig,
     elif cache is not None and chunk_valid is not None:
         new_cache = _cache_write_chunk(cache, {"ckv": ckv, "kr": kr},
                                        positions, chunk_valid, chunk_start)
-        ckv = _cache_roundtrip(ckv, cache["ckv"], x.dtype)
-        kr = _cache_roundtrip(kr, cache["kr"], x.dtype)
-        kp = positions
+        if chunk_ring:
+            # dense chunked continuation: attend the whole latent ring in
+            # logical order (MLA caches are full-length, W = max_len)
+            g, kp = _ring_logical_gather(new_cache, ("ckv", "kr"), x.dtype,
+                                         chunk_start, chunk_valid)
+            ckv, kr = g["ckv"], g["kr"]
+        else:
+            ckv = _cache_roundtrip(ckv, cache["ckv"], x.dtype)
+            kr = _cache_roundtrip(kr, cache["kr"], x.dtype)
+            kp = positions
     elif cache is not None:
         new_cache = _cache_write(cache, {"ckv": ckv, "kr": kr}, positions,
                                  cache_pos)

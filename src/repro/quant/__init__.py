@@ -1,9 +1,11 @@
+from repro.quant.kv_scales import FP8_E4M3_MAX, calibrate_kv_scales
 from repro.quant.formats import FORMATS, PAPER_FORMATS, Format, alpha, get_format
 from repro.quant.qops import OpInfo, QuantContext, bgemm, linear, qeinsum
 from repro.quant.qtensor import QTensor, compute_scale, dequantize, fake_quant, quantize
 
 __all__ = [
     "FORMATS", "PAPER_FORMATS", "Format", "alpha", "get_format",
+    "FP8_E4M3_MAX", "calibrate_kv_scales",
     "OpInfo", "QuantContext", "bgemm", "linear", "qeinsum",
     "QTensor", "compute_scale", "dequantize", "fake_quant", "quantize",
 ]

@@ -1,0 +1,103 @@
+"""Per-layer KV-cache dequant scale calibration (scaled fp8 KV).
+
+An fp8_e4m3 KV cache written *unscaled* clips any key/value whose magnitude
+exceeds the format max (448) and wastes the format's dynamic range when a
+layer's amax sits far below it. The serving read paths (fused kernel and
+gather fallback) already carry per-tensor ``k_scale``/``v_scale`` dequant
+multipliers; this module produces real values for them: run a calibration
+prefill with a *bf16* cache, record each layer's per-entry amax at
+cache-write time, and emit ``scale = amax / fp8_max`` so the write-side
+divide (see :func:`repro.nn.layers.paged_update_attend`) maps every entry's
+observed range onto the representable fp8 range and reads multiply it back.
+
+Usage::
+
+    scales = calibrate_kv_scales(model, params, calib_batches)
+    serving_model = LM(dataclasses.replace(model.cfg,
+                                           kv_cache_dtype="fp8_e4m3",
+                                           kv_dequant_scales=scales))
+
+The returned value is the per-layer tuple ``LMConfig.kv_dequant_scales``
+accepts (one entry per layer: pair-tuple for attention/MLA layers, None for
+SSM layers, whose state is not a paged KV cache).
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.qops import QuantContext
+
+__all__ = ["calibrate_kv_scales", "FP8_E4M3_MAX"]
+
+FP8_E4M3_MAX = 448.0
+
+
+def _layer_kv_node(node: dict):
+    """The attention-cache sub-dict of one layer's cache node, or None for
+    SSM-only layers. Hybrid layers nest {"attn": ..., "mamba": ...}."""
+    if not isinstance(node, dict):
+        return None
+    if "pos" in node:
+        return node
+    if "attn" in node and isinstance(node["attn"], dict) \
+            and "pos" in node["attn"]:
+        return node["attn"]
+    return None
+
+
+def calibrate_kv_scales(model, params, batches: Iterable, *,
+                        fp8_max: float = FP8_E4M3_MAX) -> tuple:
+    """Per-layer amax tracking at cache-write time -> dequant scales.
+
+    Runs :meth:`LM.prefill` over ``batches`` on a clone of ``model`` with a
+    bf16 cache (so the statistics are unquantized), reduces each layer's
+    cache entries ("k"/"v", or "ckv"/"kr" for MLA) to their absolute max
+    across all batches, and returns ``amax / fp8_max`` per entry. Entries
+    that never exceed zero get unit scales. Requires the unrolled
+    (non-``scan_layers``) layout — the same constraint as per-layer MP.
+    """
+    import dataclasses
+
+    cfg = model.cfg
+    if cfg.scan_layers:
+        raise ValueError(
+            "calibrate_kv_scales needs per-layer cache leaves; scan_layers "
+            "stacks them — calibrate on the unrolled twin instead")
+    bf16 = type(model)(dataclasses.replace(cfg, kv_cache_dtype="bfloat16",
+                                           kv_dequant_scales=None))
+    ctx = QuantContext()
+    amax: dict = {}                              # (layer_key, entry) -> float
+    for batch in batches:
+        tokens = jnp.asarray(batch["tokens"] if isinstance(batch, dict)
+                             else batch)
+        B, T = tokens.shape
+        caches = bf16.init_cache(B, T)
+        _, caches = bf16.prefill(params, tokens, caches, ctx)
+        for lk, node in caches.items():
+            kv = _layer_kv_node(node)
+            if kv is None:
+                continue
+            for name, leaf in kv.items():
+                if name == "pos":
+                    continue
+                m = float(jnp.max(jnp.abs(leaf.astype(jnp.float32))))
+                key = (lk, name)
+                amax[key] = max(amax.get(key, 0.0), m)
+
+    out = []
+    for i in range(cfg.n_layers):
+        lk = f"layers/{i}"
+        entries = sorted(n for (k, n) in amax if k == lk)
+        if not entries:
+            out.append(None)
+            continue
+        pairs = []
+        for name in entries:
+            m = amax[(lk, name)]
+            s = m / float(fp8_max) if m > 0.0 else 1.0
+            pairs.append((name, float(np.float32(s))))
+        out.append(tuple(pairs))
+    return tuple(out)

@@ -1,3 +1,4 @@
+from repro.serve.adaptive import AdaptiveMPController
 from repro.serve.cache_pool import (CachePool, PagedCachePool,
                                     dense_slot_bytes, paged_block_bytes,
                                     paged_slot_bytes)
@@ -7,7 +8,8 @@ from repro.serve.parallel import (make_serving_layout, shard_cache_tree,
                                   shard_serving_params)
 from repro.serve.scheduler import Request, RequestResult, Scheduler
 
-__all__ = ["CachePool", "ContinuousBatchingEngine", "GenResult",
+__all__ = ["AdaptiveMPController", "CachePool",
+           "ContinuousBatchingEngine", "GenResult",
            "PagedCachePool", "Request", "RequestResult", "Scheduler",
            "ServeEngine", "ServeSummary", "dense_slot_bytes",
            "make_serving_layout", "paged_block_bytes", "paged_slot_bytes",

@@ -1,0 +1,163 @@
+"""Load-adaptive mixed precision: close the solver <-> scheduler loop.
+
+The paper's pipeline solves one MP plan offline for a fixed loss-MSE budget
+``tau`` and serves it forever. This module makes the budget *load-adaptive*:
+an :class:`AdaptiveMPController` consumes the continuous engine's live
+counters (queue depth, blocked admissions, block occupancy, decode-stall
+p99) every ``every`` engine ticks and walks a ladder of pre-solved plans —
+escalating to a more aggressive quantization (larger ``tau``: looser MSE
+constraint, bigger gained time, cheaper steps) when the queue grows, and
+restoring toward the base plan as it drains.
+
+Stability machinery, in controller rather than engine code so it is
+unit-testable in isolation:
+
+* **hysteresis bands** — escalation triggers at the *high* watermarks,
+  restoration only once every signal is below the *low* watermarks; the gap
+  between them absorbs load noise so the controller cannot chatter between
+  two levels on a flat workload;
+* **min-dwell** — after any swap, no further swap for ``dwell`` ticks, a
+  hard upper bound on swap frequency regardless of watermark tuning;
+* **step-boundary application** — ``observe`` is *pure decision*: it
+  returns the new plan (or None) and the engine applies it between compiled
+  steps through the ``get_serving_step`` memo, whose key includes the MP
+  assignment. A swap is therefore a dispatch switch to an already- (or
+  lazily-) compiled program, never a mid-step recompile, and with the
+  controller disabled (or never firing) greedy tokens under the fixed base
+  plan are bit-identical to a plain engine.
+
+Each ladder level's plan is solved once from the calibration bundle
+(:meth:`CalibrationBundle.solve` is pure NumPy) and memoized; the solve uses
+the bundle's measured wall-clock gain table when one is persisted
+(``gain_tier == "measured"``), falling back to the roofline model otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+__all__ = ["AdaptiveMPController"]
+
+
+@dataclasses.dataclass
+class AdaptiveMPController:
+    """Walks a tau ladder over a calibration bundle under load feedback.
+
+    ``taus`` must be ascending: index 0 is the base (least aggressive)
+    plan, the last entry the most aggressive fallback. ``observe`` is
+    called once per engine tick with cumulative counters; it evaluates only
+    every ``every`` ticks, never swaps within ``dwell`` ticks of the last
+    swap, and moves at most one ladder level per evaluation (so a load
+    spike ramps through the intermediate plans instead of jumping to the
+    floor).
+
+    Watermarks: escalate when ``queue_depth >= queue_high`` or ``occupancy
+    >= occ_high`` or any admission was blocked since the last evaluation or
+    ``stall_p99 >= stall_high_s``; restore when ``queue_depth <=
+    queue_low`` *and* ``occupancy <= occ_low`` *and* nothing was blocked
+    *and* ``stall_p99 < stall_high_s``. Between the bands the level holds.
+    """
+
+    bundle: object                       # CalibrationBundle
+    taus: Sequence[float]
+    objective: str = "ET"
+    every: int = 4                       # evaluation cadence, engine ticks
+    dwell: int = 16                      # min ticks between swaps
+    queue_high: int = 4
+    queue_low: int = 0
+    occ_high: float = 0.90
+    occ_low: float = 0.50
+    stall_high_s: float = float("inf")
+
+    def __post_init__(self):
+        self.taus = tuple(float(t) for t in self.taus)
+        if not self.taus:
+            raise ValueError("need at least one tau level")
+        if list(self.taus) != sorted(self.taus):
+            raise ValueError(f"taus must ascend (base plan first): "
+                             f"{self.taus}")
+        if self.every < 1 or self.dwell < 0:
+            raise ValueError((self.every, self.dwell))
+        if not (self.queue_low <= self.queue_high
+                and self.occ_low <= self.occ_high):
+            raise ValueError("hysteresis bands must satisfy low <= high")
+        self.level = 0
+        self.downshifts = 0              # swaps toward more aggressive
+        self.restores = 0                # swaps back toward the base plan
+        self.history: list = []          # (tick, level, tau) per swap
+        self._plans: dict = {}
+        self._last_eval: Optional[int] = None
+        self._last_swap: Optional[int] = None
+        self._blocked_seen = 0
+
+    @classmethod
+    def from_bundle(cls, bundle, base_tau: float, *, n_levels: int = 3,
+                    factor: float = 2.0, **kw) -> "AdaptiveMPController":
+        """Geometric tau ladder: ``base_tau * factor**i`` for i < n_levels.
+        Doubling tau quadruples the MSE budget (budget = tau^2 * E[g^2]),
+        which in practice unlocks the next block of quantizable ops."""
+        assert n_levels >= 1 and factor > 1.0, (n_levels, factor)
+        taus = [base_tau * factor ** i for i in range(n_levels)]
+        return cls(bundle=bundle, taus=taus, **kw)
+
+    # ------------------------------------------------------------------
+    @property
+    def tau(self) -> float:
+        return self.taus[self.level]
+
+    def plan_for(self, level: int):
+        """The (memoized) solved plan for a ladder level."""
+        if level not in self._plans:
+            self._plans[level] = self.bundle.solve(
+                tau=self.taus[level], objective=self.objective)
+        return self._plans[level]
+
+    @property
+    def plan(self):
+        return self.plan_for(self.level)
+
+    # ------------------------------------------------------------------
+    def observe(self, now: int, *, queue_depth: int, blocked: int,
+                occupancy: float, stall_p99: float = 0.0):
+        """One engine tick's counters in; a plan to swap to out (or None).
+
+        ``now`` is the engine's deterministic step clock; ``blocked`` is the
+        scheduler's *cumulative* blocked-admission count (the controller
+        diffs it across evaluations, so skipped ticks lose no signal);
+        ``occupancy`` is the fraction of KV capacity in use. Re-observing
+        the same tick is a no-op — the engine consults exactly once per
+        tick, at the step boundary before admission."""
+        if self._last_eval is not None and now < self._last_eval:
+            # the engine's step clock restarted (a new serve() drain): the
+            # cadence/dwell anchors reset; the ladder level carries over
+            self._last_eval = None
+            self._last_swap = None
+            self._blocked_seen = 0
+        if blocked < self._blocked_seen:    # fresh Scheduler, fresh counter
+            self._blocked_seen = 0
+        if self._last_eval is not None and now - self._last_eval < self.every:
+            return None
+        self._last_eval = now
+        blocked_delta = blocked - self._blocked_seen
+        self._blocked_seen = blocked
+        if self._last_swap is not None and now - self._last_swap < self.dwell:
+            return None
+        hot = (queue_depth >= self.queue_high
+               or occupancy >= self.occ_high
+               or blocked_delta > 0
+               or stall_p99 >= self.stall_high_s)
+        cool = (queue_depth <= self.queue_low
+                and occupancy <= self.occ_low
+                and blocked_delta == 0
+                and stall_p99 < self.stall_high_s)
+        if hot and self.level < len(self.taus) - 1:
+            self.level += 1
+            self.downshifts += 1
+        elif cool and self.level > 0:
+            self.level -= 1
+            self.restores += 1
+        else:
+            return None
+        self._last_swap = now
+        self.history.append((now, self.level, self.tau))
+        return self.plan

@@ -103,15 +103,20 @@ class CachePool:
     previous occupant can never leak into a new request.
     """
 
-    def __init__(self, model, n_slots: int, max_len: int, mesh_layout=None):
+    def __init__(self, model, n_slots: int, max_len: int, mesh_layout=None,
+                 chunk_extra: int = 0):
         assert n_slots >= 1 and max_len >= 1, (n_slots, max_len)
         self.n_slots = n_slots
         self.max_len = max_len
-        self.caches = model.init_cache(n_slots, max_len)
+        # chunk_extra widens windowed rings by the prefill chunk length so
+        # dense chunked prefill never truncates a chunk that straddles the
+        # window boundary (see kv_cache_spec); 0 keeps the legacy shapes
+        kw = {"chunk_extra": chunk_extra} if chunk_extra else {}
+        self.caches = model.init_cache(n_slots, max_len, **kw)
         if mesh_layout is not None:
             from repro.serve.parallel import shard_cache_tree
             self.caches = shard_cache_tree(
-                model, self.caches, model.cache_specs(n_slots, max_len),
+                model, self.caches, model.cache_specs(n_slots, max_len, **kw),
                 mesh_layout.mesh)
         self._free = list(range(n_slots - 1, -1, -1))  # pop() yields slot 0 first
 
@@ -146,6 +151,13 @@ class CachePool:
         generic cache-injection API and covered by the pool tests."""
         self.caches = _scatter_slot(self.caches, request_cache,
                                     jnp.asarray(slot, jnp.int32))
+
+    # uniform pool interface: dense slots carry no cross-drain state
+    def reset_counters(self) -> None:
+        pass
+
+    def invalidate_prefix_index(self) -> None:
+        pass
 
 
 class PagedCachePool:
@@ -266,6 +278,39 @@ class PagedCachePool:
         self.prefix_hit_tokens = 0
         self.cow_forks = 0
         self.reclaimed_cached_blocks = 0
+
+    # ---- cross-drain lifecycle ----------------------------------------
+    def reset_counters(self) -> None:
+        """Zero the per-drain telemetry tallies. The engine persists one
+        pool across ``serve()`` drains (so the prefix index survives between
+        calls); each drain's counters start fresh here."""
+        self.prefix_hit_requests = 0
+        self.prefix_hit_blocks = 0
+        self.prefix_hit_tokens = 0
+        self.cow_forks = 0
+        self.reclaimed_cached_blocks = 0
+
+    def invalidate_prefix_index(self) -> None:
+        """Forget every indexed prefix block. Cached (refcount-0) blocks
+        return to the free lists; blocks still referenced by live slots stay
+        mapped but are de-indexed, so they rejoin the free list on release
+        instead of the cached LRU. Live slots' digest chains are dropped too
+        — no block written before this call can ever satisfy a future hit.
+
+        Called on an adaptive MP plan swap: quantized K/V bytes are a
+        function of the *plan* (activation scales and cache formats differ),
+        so content indexed under the old plan must not be claimed by
+        requests admitted under the new one."""
+        for blk in list(self._block_digest):
+            d, _ = self._block_digest[blk]
+            self._deindex(blk)
+            if blk in self._cached_by_shard[d]:
+                del self._cached_by_shard[d][blk]
+                self._free_blocks_by_shard[d].append(blk)
+        for idx in self._index_by_shard:
+            idx.clear()
+        for slot in self._slot_digests:
+            self._slot_digests[slot] = []
 
     # ---- geometry -----------------------------------------------------
     @staticmethod

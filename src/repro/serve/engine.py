@@ -281,6 +281,26 @@ class ContinuousBatchingEngine:
     tokens at or before it, a cache hit is bit-exact: greedy tokens with
     sharing on equal sharing off.
 
+    ``adaptive`` (an :class:`~repro.serve.adaptive.AdaptiveMPController`)
+    closes the solver<->scheduler loop: once per tick, at the step boundary
+    before admission, the engine feeds the controller its live counters
+    (queue depth, cumulative blocked admissions, KV occupancy, decode-stall
+    p99) and — when the controller's hysteresis says so — swaps every
+    serving step to the plan for the new tau level via the
+    ``get_serving_step`` memo (the MP assignment is part of the memo key:
+    a swap is a dispatch switch, not a recompile) and invalidates the
+    prefix index (quantized K/V bytes are plan-dependent). With no
+    controller, or one that never fires, greedy tokens are bit-identical
+    to a plain fixed-plan engine. ``ServeSummary.counters["adaptive"]``
+    records the downshift/restore tallies and every swap's step/tau.
+
+    ``chunk_len`` in *dense* mode switches prefill to the ring-aware
+    chunked step over rings widened by ``chunk_len``
+    (``init_cache(chunk_extra=...)``): a windowed ring sized exactly
+    ``window`` truncates a chunk that straddles the window boundary when
+    ``window`` is not chunk-aligned, so the widened ring keeps the current
+    chunk plus a full window of context resident.
+
     ``preemption`` (paged only): when admission is gated on resources and
     the best arrived waiter has strictly higher ``Request.priority`` than a
     live request, the lowest-priority/latest-admitted slot is evicted back
@@ -297,13 +317,24 @@ class ContinuousBatchingEngine:
                  chunk_len: Optional[int] = None, chunk_budget: int = 1,
                  min_bucket: int = 8, paged_attn: Optional[str] = None,
                  mesh=None, prefix_cache: Optional[bool] = None,
-                 preemption: bool = True, prefill_cobatch: bool = True):
+                 preemption: bool = True, prefill_cobatch: bool = True,
+                 adaptive=None):
         if getattr(model, "cache_needs_enc_len", False):
             raise NotImplementedError(
                 "continuous batching currently serves decoder-only LMs")
         self.model = model
         self.n_slots = n_slots
         self.max_len = max_len
+        # load-adaptive MP: the controller owns the plan ladder; the engine
+        # consults it once per tick (step boundary) and swaps the serving
+        # steps through the get_serving_step memo on its say-so
+        self.adaptive = adaptive
+        if adaptive is not None:
+            if mp is not None:
+                raise ValueError(
+                    "pass the base plan through the controller (its level-0 "
+                    "tau), not both mp= and adaptive=")
+            mp = adaptive.plan
         self.mp = as_assignment(mp)
         if not paged and n_blocks is not None:
             raise ValueError("n_blocks only applies to paged mode; drop it "
@@ -318,11 +349,6 @@ class ContinuousBatchingEngine:
                              f"{paged_attn!r}")
         self.paged_attn = paged_attn
         if chunk_len is not None:
-            if not paged:
-                raise ValueError(
-                    "chunked prefill writes paged KV blocks; dense mode "
-                    "buckets whole prompts (drop chunk_len or use "
-                    "paged=True)")
             assert chunk_len >= 1, chunk_len
             ssm = getattr(model.cfg, "ssm", None)
             if ssm is not None and chunk_len % ssm.chunk != 0:
@@ -378,13 +404,23 @@ class ContinuousBatchingEngine:
             n_blocks=n_blocks, paged=paged)
         if self.mesh_layout is not None and paged:
             self.n_blocks = self.mesh_layout.n_blocks
+        # dense mode with chunk_len uses the ring-aware chunked step over
+        # rings widened by chunk_len (chunk_extra), so a chunk straddling a
+        # window boundary is never truncated
+        self._prefill_kind = ("chunked_prefill" if paged else
+                              ("dense_chunked_prefill" if chunk_len is not None
+                               else "bucketed_prefill"))
+        self._donate = donate
         self.prefill_chunk_step = get_serving_step(
-            model, "chunked_prefill" if paged else "bucketed_prefill",
+            model, self._prefill_kind,
             mp=self.mp, mesh_layout=self.mesh_layout)
         self.decode_step = get_serving_step(
             model, "paged_decode" if paged else "decode", mp=self.mp,
             paged_attn=paged_attn if paged else None, donate=donate,
             mesh_layout=self.mesh_layout)
+        # one pool per engine, persisted across serve() drains (the paged
+        # prefix index survives between calls); built lazily by _make_pool
+        self._pool = None
         # compile-economy bookkeeping (persists across serve() calls, like
         # the jit compile cache it mirrors)
         self.prefill_compile_keys: set = set()
@@ -415,13 +451,44 @@ class ContinuousBatchingEngine:
 
     # ------------------------------------------------------------------
     def _make_pool(self):
+        """The engine's one pool, persisted across ``serve()`` drains so
+        the paged prefix index (and its cached blocks) carries over: a
+        prompt prefix indexed by one drain is a bit-exact cache hit in the
+        next. Rebuilt only when a previous drain leaked slots (it errored
+        mid-flight) — a clean drain frees every slot on the way out."""
+        pool = self._pool
+        if pool is not None and pool.n_free_slots == self.n_slots:
+            pool.reset_counters()
+            return pool
         if self.paged:
-            return PagedCachePool(self.model, self.n_slots, self.max_len,
+            pool = PagedCachePool(self.model, self.n_slots, self.max_len,
                                   block_size=self.block_size,
                                   n_blocks=self.n_blocks,
                                   mesh_layout=self.mesh_layout)
-        return CachePool(self.model, self.n_slots, self.max_len,
-                         mesh_layout=self.mesh_layout)
+        else:
+            pool = CachePool(self.model, self.n_slots, self.max_len,
+                             mesh_layout=self.mesh_layout,
+                             chunk_extra=self.chunk_len or 0)
+        self._pool = pool
+        return pool
+
+    def _swap_plan(self, plan) -> None:
+        """Apply a new MP plan at a step boundary: repoint the serving
+        steps at the new assignment through the ``get_serving_step`` memo
+        (the plan is part of the memo key, so a previously-seen plan is a
+        dispatch switch, not a recompile) and invalidate the prefix index —
+        quantized K/V bytes are plan-dependent, so blocks written under the
+        old plan must not satisfy hits under the new one."""
+        self.mp = as_assignment(plan)
+        self.prefill_chunk_step = get_serving_step(
+            self.model, self._prefill_kind, mp=self.mp,
+            mesh_layout=self.mesh_layout)
+        self.decode_step = get_serving_step(
+            self.model, "paged_decode" if self.paged else "decode",
+            mp=self.mp, paged_attn=self.paged_attn if self.paged else None,
+            donate=self._donate, mesh_layout=self.mesh_layout)
+        if self._pool is not None:
+            self._pool.invalidate_prefix_index()
 
     def _digests(self, pool, st):
         """Chained prefix digests of the request's *effective* prompt
@@ -666,6 +733,31 @@ class ContinuousBatchingEngine:
         prefill_tokens = 0
         stall_s_run = 0.0
         stall_s: list = []            # per-decode-step injected prefill time
+        adaptive_swaps: list = []     # plan swaps applied this drain
+
+        def consult_adaptive():
+            """Feed the controller this tick's counters; apply any swap.
+            Runs exactly once per tick at the step boundary (before
+            admission), so a swap can never land mid-step."""
+            if self.paged:
+                cap = pool.n_blocks - pool.n_shards
+                occ = pool.blocks_in_use / max(cap, 1)
+            else:
+                occ = 1.0 - pool.n_free_slots / self.n_slots
+            if stall_s:
+                srt = np.sort(np.asarray(stall_s[-256:], np.float64))
+                p99 = float(srt[min(len(srt) - 1, int(0.99 * len(srt)))])
+            else:
+                p99 = 0.0
+            newplan = self.adaptive.observe(
+                now, queue_depth=sched.queue_depth,
+                blocked=sched.blocked_admissions,
+                occupancy=occ, stall_p99=p99)
+            if newplan is not None:
+                self._swap_plan(newplan)
+                adaptive_swaps.append({"step": int(now),
+                                       "level": self.adaptive.level,
+                                       "tau": self.adaptive.tau})
 
         # ---- host-side delivery plumbing (shared by both modes) ----
         q: "queue.Queue" = queue.Queue(maxsize=max_in_flight)
@@ -793,6 +885,8 @@ class ContinuousBatchingEngine:
                 apply_control(now)
                 if not sched.has_work():
                     break
+                if self.adaptive is not None:
+                    consult_adaptive()
                 self._admit(params, pool, sched, now,
                             evict if self.preemption else None)
                 peak_queue = max(peak_queue, sched.queue_depth)
@@ -977,6 +1071,15 @@ class ContinuousBatchingEngine:
             "n_cancelled": sum(1 for st in retired
                                if st.result_status != "ok"),
         }
+        if self.adaptive is not None:
+            counters["adaptive"] = {
+                "taus": list(self.adaptive.taus),
+                "final_level": self.adaptive.level,
+                "final_tau": self.adaptive.tau,
+                "downshifts": self.adaptive.downshifts,
+                "restores": self.adaptive.restores,
+                "swaps": list(adaptive_swaps),
+            }
         if stall_s:
             arr = np.sort(np.asarray(stall_s, np.float64))
             counters["decode_stall_p50_s"] = float(arr[len(arr) // 2])

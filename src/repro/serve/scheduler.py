@@ -82,6 +82,7 @@ class RequestState:                  # never field-compare numpy token arrays
     out_tokens: list = dataclasses.field(default_factory=list)
     ttft_s: float = 0.0
     admitted_step: int = -1
+    first_token_step: int = -1        # engine clock when token 0 landed
     finished_step: int = -1
     result_status: str = "ok"         # "ok" | "cancelled" | "timeout"
     # preemption/resume: after an eviction the request re-prefills prompt +
@@ -124,6 +125,10 @@ class RequestResult:
     admitted_step: int
     finished_step: int
     status: str = "ok"                # "ok" | "cancelled" | "timeout"
+    # engine clock tick at which the first token was produced; with arrival
+    # this gives a deterministic step-clock TTFT (first_token_step -
+    # arrival), the unit the adaptive-tau SLA benchmarks price
+    first_token_step: int = -1
 
 
 class Scheduler:
@@ -277,6 +282,8 @@ class Scheduler:
         st.status = RUNNING
         st.last_token = first_token
         st.out_tokens.append(first_token)
+        if st.first_token_step < 0:   # a resumed request keeps its stamp
+            st.first_token_step = now
         st.next_pos = st.effective_prompt_len
         self.running[slot] = st
         return st
@@ -321,6 +328,7 @@ class Scheduler:
             admitted_step=st.admitted_step,
             finished_step=st.finished_step,
             status=st.result_status,
+            first_token_step=st.first_token_step,
         )
 
     def finish(self, st: RequestState, now: int) -> RequestResult:

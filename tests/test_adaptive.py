@@ -1,0 +1,587 @@
+"""Load-adaptive mixed precision (solver <-> scheduler loop): controller
+hysteresis/dwell/cadence properties, the bundle registry (round-trip,
+fingerprint and calib-hash rejection, freshest-wins), the measured
+wall-clock gain tier, engine-level plan-swap parity (a never-firing
+controller and a mid-stream swap to the *same* plan are both bit-identical
+to a fixed-plan engine), cross-drain prefix-index persistence +
+swap-invalidation, scaled fp8 KV calibration with its loss-MSE accuracy
+gate, and the dense chunked-prefill sliding-window ring regression."""
+import copy
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mpconfig import MPPlan
+from repro.core.pipeline import (AMPOptions, CalibrationBundle, calibrate,
+                                 tabulate_measured_gains,
+                                 _params_fingerprint)
+from repro.core.registry import BundleRegistry, _safe
+from repro.models.registry import get_model
+from repro.quant.kv_scales import FP8_E4M3_MAX, calibrate_kv_scales
+from repro.quant.qops import QuantContext
+from repro.serve import (AdaptiveMPController, ContinuousBatchingEngine,
+                         Request, ServeEngine)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - exercised on minimal images
+    HAS_HYPOTHESIS = False
+
+MP_ASSIGNMENT = {
+    "layers/0/attn/q_proj": "fp8_e4m3",
+    "layers/1/mlp/down_proj": "fp8_e4m3",
+    "lm_head": "fp8_e4m3",
+}
+
+
+class FakeBundle:
+    """Counts solves; the controller never inspects the plan it returns."""
+
+    def __init__(self, plans=None):
+        self.plans = plans           # optional tau -> assignment dict
+        self.solved = []
+
+    def solve(self, tau=None, objective=None, **kw):
+        self.solved.append((tau, objective))
+        if self.plans is not None:
+            return dict(self.plans[tau])
+        return {"tau": tau, "objective": objective}
+
+
+def _ctrl(**kw):
+    base = dict(bundle=FakeBundle(), taus=(0.01, 0.02, 0.04), every=1,
+                dwell=0, queue_high=4, queue_low=0)
+    base.update(kw)
+    return AdaptiveMPController(**base)
+
+
+HOT = dict(queue_depth=99, blocked=0, occupancy=1.0)
+COOL = dict(queue_depth=0, blocked=0, occupancy=0.0)
+HOLD = dict(queue_depth=2, blocked=0, occupancy=0.7)  # between the bands
+
+
+# ---------------------------------------------------------------------------
+# controller properties
+# ---------------------------------------------------------------------------
+
+
+def test_controller_validation():
+    with pytest.raises(ValueError, match="ascend"):
+        _ctrl(taus=(0.02, 0.01))
+    with pytest.raises(ValueError, match="at least one"):
+        _ctrl(taus=())
+    with pytest.raises(ValueError):
+        _ctrl(every=0)
+    with pytest.raises(ValueError):
+        _ctrl(dwell=-1)
+    with pytest.raises(ValueError, match="low <= high"):
+        _ctrl(queue_high=1, queue_low=2)
+    with pytest.raises(ValueError, match="low <= high"):
+        _ctrl(occ_high=0.3, occ_low=0.5)
+    # equal taus are a legal ladder (a swap to the same plan is a no-op
+    # plan-wise but still exercises the full swap machinery)
+    _ctrl(taus=(0.01, 0.01))
+
+
+def test_from_bundle_geometric_ladder():
+    c = AdaptiveMPController.from_bundle(FakeBundle(), 0.01, n_levels=3,
+                                         factor=2.0)
+    np.testing.assert_allclose(c.taus, (0.01, 0.02, 0.04))
+    assert c.level == 0 and c.tau == 0.01
+    with pytest.raises(AssertionError):
+        AdaptiveMPController.from_bundle(FakeBundle(), 0.01, factor=1.0)
+
+
+def test_escalate_restore_and_hold():
+    c = _ctrl()
+    assert c.observe(0, **HOT) is not None
+    assert (c.level, c.downshifts, c.restores) == (1, 1, 0)
+    assert c.observe(1, **HOLD) is None         # between bands: hold
+    assert c.level == 1
+    assert c.observe(2, **COOL) is not None
+    assert (c.level, c.downshifts, c.restores) == (0, 1, 1)
+    # at the base plan a cool signal has nowhere to go
+    assert c.observe(3, **COOL) is None
+    assert c.restores == 1
+
+
+def test_one_level_per_evaluation():
+    c = _ctrl()
+    for t in range(3):
+        c.observe(t, **HOT)
+    assert c.level == 2                          # 0 -> 1 -> 2, never a jump
+    assert [lvl for _, lvl, _ in c.history] == [1, 2]
+
+
+def test_cadence_skips_ticks_but_keeps_blocked_signal():
+    c = _ctrl(every=4)
+    assert c.observe(0, **COOL) is None          # evaluates; nothing to do
+    # ticks 1..3 are off-cadence: no evaluation even under a hot signal
+    for t in (1, 2, 3):
+        assert c.observe(t, **HOT) is None
+    assert c.level == 0
+    # a blocked admission during the skipped ticks is NOT lost: the
+    # controller diffs the cumulative counter at the next evaluation
+    assert c.observe(4, queue_depth=0, blocked=2, occupancy=0.0) is not None
+    assert c.level == 1
+
+
+def test_reobserving_same_tick_is_noop():
+    c = _ctrl()
+    assert c.observe(0, **HOT) is not None
+    assert c.observe(0, **HOT) is None
+    assert c.observe(0, **HOT) is None
+    assert (c.level, c.downshifts) == (1, 1)
+
+
+def test_dwell_blocks_oscillation():
+    c = _ctrl(dwell=5)
+    sig = [HOT, COOL]
+    for t in range(30):                          # adversarial flip-flop load
+        c.observe(t, **sig[t % 2])
+    ticks = [t for t, _, _ in c.history]
+    assert ticks, "controller never swapped under extreme signals"
+    assert all(b - a >= 5 for a, b in zip(ticks, ticks[1:]))
+
+
+def test_monotone_in_queue_depth():
+    levels = []
+    for depth in range(8):
+        c = _ctrl(queue_high=4)
+        c.observe(0, queue_depth=depth, blocked=0, occupancy=0.7)
+        levels.append(c.level)
+    assert levels == sorted(levels)
+    assert levels[0] == 0 and levels[-1] == 1
+
+
+def test_clock_restart_resets_anchors_keeps_level():
+    """A new serve() drain restarts the engine step clock at 0; the
+    controller must keep serving the level it reached but drop its
+    cadence/dwell anchors and the cumulative blocked-counter baseline."""
+    c = _ctrl(every=4, dwell=8)
+    c.observe(0, queue_depth=0, blocked=0, occupancy=0.0)
+    c.observe(4, **HOT)
+    assert c.level == 1                          # swap at tick 4
+    # clock restart: evaluates immediately (no stale `now - last_eval`
+    # wedge), the dwell anchor from tick 4 is dropped, and a cumulative
+    # blocked counter *below* the one already seen (fresh Scheduler) must
+    # not underflow — it reads as a fresh delta of 1, i.e. hot
+    assert c.observe(0, queue_depth=0, blocked=1, occupancy=0.0) is not None
+    assert c.level == 2
+    assert c._last_eval == 0
+    c2 = _ctrl(every=1, dwell=0)
+    c2.observe(10, **HOT)
+    assert c2.level == 1
+    assert c2.observe(0, **COOL) is not None     # restart, then restores
+    assert c2.level == 0
+
+
+def test_plans_memoized_per_level():
+    c = _ctrl()
+    p1 = c.plan_for(1)
+    assert c.plan_for(1) is p1
+    assert len(c.bundle.solved) == 1
+    c.plan_for(0)
+    assert len(c.bundle.solved) == 2
+    assert c.bundle.solved[0][0] == pytest.approx(0.02)
+
+
+if HAS_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=60)
+    @given(st.lists(st.tuples(st.integers(0, 10), st.integers(0, 3),
+                              st.floats(0.0, 1.0)),
+                    min_size=1, max_size=80))
+    def test_controller_never_oscillates_within_dwell(signals):
+        """Random load traces: swaps stay >= dwell apart, levels stay in
+        range, and every swap moves exactly one ladder level."""
+        c = _ctrl(every=2, dwell=5)
+        blocked = 0
+        for t, (q, dblk, occ) in enumerate(signals):
+            blocked += dblk
+            c.observe(t, queue_depth=q, blocked=blocked, occupancy=occ)
+        ticks = [t for t, _, _ in c.history]
+        assert all(b - a >= 5 for a, b in zip(ticks, ticks[1:]))
+        prev = 0
+        for _, lvl, tau in c.history:
+            assert 0 <= lvl < len(c.taus)
+            assert abs(lvl - prev) == 1
+            assert tau == pytest.approx(c.taus[lvl])
+            prev = lvl
+
+
+# ---------------------------------------------------------------------------
+# bundle registry + measured gain tier (real calibration)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def calib():
+    m = get_model("llama3_1b", smoke=True, n_layers=2)
+    params = m.init(jax.random.key(0))
+    batches = [{"tokens": jax.random.randint(jax.random.key(i), (2, 32),
+                                             0, 512),
+                "labels": jax.random.randint(jax.random.key(i + 50), (2, 32),
+                                             0, 512)}
+               for i in range(2)]
+    bundle = calibrate(m, params, batches,
+                       AMPOptions(tau=0.01, objective="ET"))
+    return m, params, batches, bundle
+
+
+def _plans_equal(a: MPPlan, b: MPPlan) -> bool:
+    return dataclasses.asdict(a) == dataclasses.asdict(b)
+
+
+def test_registry_roundtrip_and_freshest_wins(tmp_path, calib):
+    m, params, _, bundle = calib
+    reg = BundleRegistry(str(tmp_path / "reg"))
+    p1 = reg.put(bundle)
+    assert os.path.exists(p1)
+    arch = bundle.meta["arch"]
+    fp = bundle.meta["params_fingerprint"]
+    assert arch is not None and fp == _params_fingerprint(params)
+    got = reg.find(arch, fp)
+    assert _plans_equal(got.solve(tau=0.02), bundle.solve(tau=0.02))
+    # second artifact for the same key: the newer mtime wins
+    bundle.meta["marker"] = "newer"
+    p2 = reg.put(bundle)
+    old = os.path.getmtime(p2) - 100
+    os.utime(p1, (old, old))
+    assert reg.find(arch, fp).meta.get("marker") == "newer"
+    ents = reg.entries()
+    assert len(ents) == 2                        # two artifacts, one key
+    assert {(a, f) for a, f, _ in ents} == {(_safe(arch), _safe(fp))}
+
+
+def test_registry_rejects_wrong_fingerprint_and_calib_hash(tmp_path, calib):
+    _, _, _, bundle = calib
+    reg = BundleRegistry(str(tmp_path / "reg"))
+    reg.put(bundle)
+    arch = bundle.meta["arch"]
+    fp = bundle.meta["params_fingerprint"]
+    with pytest.raises(LookupError) as ei:
+        reg.find(arch, "deadbeef00000000")
+    assert _safe(fp) in str(ei.value)            # names what it does hold
+    with pytest.raises(LookupError, match="calib_hash"):
+        reg.find(arch, fp, calib_hash="0" * 16)
+    # matching hash and no-hash both accept
+    assert bundle.meta["calib_hash"] is not None
+    reg.find(arch, fp, calib_hash=bundle.meta["calib_hash"])
+    reg.find(arch, fp, calib_hash=None)
+
+
+def test_registry_put_requires_identity_meta(tmp_path, calib):
+    _, _, _, bundle = calib
+    stripped = dataclasses.replace(bundle, meta={})
+    with pytest.raises(ValueError):
+        BundleRegistry(str(tmp_path / "reg")).put(stripped)
+
+
+def test_measured_gain_tier_supersedes_roofline(tmp_path, calib):
+    _, _, _, bundle = calib
+    # work on a private copy: tabulation mutates the bundle in place
+    path = str(tmp_path / "b.npz")
+    bundle.save(path)
+    b = CalibrationBundle.load(path)
+    assert b.solve(tau=0.02, objective="ET").meta["gain_tier"] == \
+        "roofline_fallback"
+    assert b.solve(tau=0.02, objective="TT").meta["gain_tier"] == "analytic"
+    key = tabulate_measured_gains(b, lambda assignment: (lambda: None),
+                                  objective="ET", n_iters=1, n_warmup=0)
+    assert key == "ET_wall" and "ET_wall" in b.objectives
+    plan = b.solve(tau=0.02, objective="ET")
+    assert plan.meta["gain_tier"] == "measured"
+    assert plan.meta["gain_table"] == "ET_wall"
+    assert plan.objective == "ET"                # caller-facing name
+    # TT keeps pricing from its analytic table
+    assert b.solve(tau=0.02, objective="TT").meta["gain_tier"] == "analytic"
+    # the measured table survives persistence
+    path2 = str(tmp_path / "b2.npz")
+    b.save(path2)
+    b2 = CalibrationBundle.load(path2)
+    assert b2.solve(tau=0.02, objective="ET").meta["gain_tier"] == "measured"
+    with pytest.raises(ValueError, match="already a measured tier"):
+        tabulate_measured_gains(b2, lambda a: (lambda: None),
+                                objective="ET_wall")
+
+
+# ---------------------------------------------------------------------------
+# engine-level swap parity and prefix-index lifecycle
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def model():
+    return get_model("llama3_1b", smoke=True)
+
+
+@pytest.fixture(scope="module")
+def params(model):
+    return model.init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.default_rng(42)
+    return [rng.integers(0, 500, size=12).astype(np.int32) for _ in range(4)]
+
+
+def _serve(eng, params, prompts, max_new=5, arrivals=None):
+    reqs = [Request(rid=i, tokens=p, max_new_tokens=max_new,
+                    arrival=0 if arrivals is None else arrivals[i])
+            for i, p in enumerate(prompts)]
+    return eng.serve(params, reqs)
+
+
+def test_engine_rejects_mp_plus_adaptive(model):
+    ctrl = _ctrl(bundle=FakeBundle(plans={0.01: {}, 0.02: {}, 0.04: {}}))
+    with pytest.raises(ValueError, match="not both"):
+        ContinuousBatchingEngine(model, mp=MP_ASSIGNMENT, adaptive=ctrl)
+
+
+def test_never_firing_controller_bit_identical(model, params, prompts):
+    """A controller that cannot swap (single-level ladder) must serve
+    greedy tokens bit-identical to a plain fixed-plan engine."""
+    fixed = ContinuousBatchingEngine(model, n_slots=2, max_len=32,
+                                     mp=MP_ASSIGNMENT)
+    ref = _serve(fixed, params, prompts)
+    ctrl = AdaptiveMPController(
+        bundle=FakeBundle(plans={0.01: MP_ASSIGNMENT}), taus=(0.01,),
+        every=1, dwell=0, queue_high=1)
+    eng = ContinuousBatchingEngine(model, n_slots=2, max_len=32,
+                                   adaptive=ctrl)
+    assert eng.mp == MP_ASSIGNMENT               # base plan from level 0
+    summ = _serve(eng, params, prompts)
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(summ.results[i].tokens,
+                                      ref.results[i].tokens)
+    c = summ.counters["adaptive"]
+    assert c["swaps"] == [] and c["downshifts"] == 0 and c["restores"] == 0
+    assert c["final_level"] == 0
+    np.testing.assert_allclose(c["taus"], [0.01])
+
+
+def test_midstream_swap_to_same_plan_bit_identical(model, params, prompts):
+    """Two ladder levels solving to the *same* assignment: the swap runs
+    the full machinery (step re-memo + prefix invalidation) mid-drain yet
+    tokens stay bit-identical to never swapping."""
+    fixed = ContinuousBatchingEngine(model, n_slots=2, max_len=32,
+                                     mp=MP_ASSIGNMENT)
+    arrivals = [0, 0, 4, 4]
+    ref = _serve(fixed, params, prompts, arrivals=arrivals)
+    ctrl = AdaptiveMPController(
+        bundle=FakeBundle(plans={0.01: MP_ASSIGNMENT,
+                                 0.02: MP_ASSIGNMENT}),
+        taus=(0.01, 0.02), every=1, dwell=2, queue_high=2)
+    eng = ContinuousBatchingEngine(model, n_slots=2, max_len=32,
+                                   adaptive=ctrl)
+    summ = _serve(eng, params, prompts, arrivals=arrivals)
+    c = summ.counters["adaptive"]
+    assert c["downshifts"] >= 1, "load never tripped the controller"
+    # swaps land at distinct step boundaries, >= dwell apart, in order
+    steps = [s["step"] for s in c["swaps"]]
+    assert steps == sorted(steps) and len(set(steps)) == len(steps)
+    assert all(b - a >= 2 for a, b in zip(steps, steps[1:]))
+    assert all(0 <= s < summ.n_steps for s in steps)
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(summ.results[i].tokens,
+                                      ref.results[i].tokens)
+
+
+def test_adaptive_downshift_restore_cycle(model, params, prompts):
+    """A burst deep enough to trip the high watermark, then a drain long
+    enough to cool below the low one: the controller must complete at
+    least one downshift->restore cycle and every request must finish."""
+    base, aggr = {}, dict(MP_ASSIGNMENT)
+    ctrl = AdaptiveMPController(
+        bundle=FakeBundle(plans={0.01: base, 0.04: aggr}),
+        taus=(0.01, 0.04), every=1, dwell=1, queue_high=3, queue_low=0,
+        occ_high=0.9, occ_low=0.5)
+    eng = ContinuousBatchingEngine(model, n_slots=2, max_len=32,
+                                   block_size=4, n_blocks=64, adaptive=ctrl)
+    ps = prompts * 2                             # 8 requests, 2 slots
+    summ = _serve(eng, params, ps, max_new=4)
+    c = summ.counters["adaptive"]
+    assert c["downshifts"] >= 1 and c["restores"] >= 1
+    assert c["final_level"] == 0                 # drained back to base
+    assert len(summ.results) == len(ps)
+    for i in range(len(ps)):
+        assert summ.results[i].tokens.shape[0] == 4   # every token delivered
+        assert summ.results[i].first_token_step >= 0
+    assert ctrl.level == 0 and not eng.mp        # back on the base (bf16) plan
+
+
+def test_prefix_index_survives_drains_and_swap_invalidates(model, params,
+                                                           prompts):
+    """One engine, two drains of the same prompts: the second drain hits
+    the prefix index populated by the first and still matches one-shot
+    tokens. A plan swap between drains empties the index (quantized K/V
+    bytes are plan-dependent), so the next drain rebuilds from scratch."""
+    ref = {}
+    one = ServeEngine(model, donate=False)
+    for i, p in enumerate(prompts):
+        r = one.generate(params, {"tokens": jnp.asarray(p)[None]},
+                         max_new_tokens=5)
+        ref[i] = np.asarray(r.tokens)[0]
+    eng = ContinuousBatchingEngine(model, n_slots=2, max_len=32,
+                                   block_size=4, n_blocks=64,
+                                   prefix_cache=True)
+    s1 = _serve(eng, params, prompts)
+    assert s1.counters["prefix_hit_tokens"] == 0
+    s2 = _serve(eng, params, prompts)
+    assert s2.counters["prefix_hit_requests"] > 0
+    assert s2.counters["prefix_hit_tokens"] > 0
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(s1.results[i].tokens, ref[i])
+        np.testing.assert_array_equal(s2.results[i].tokens, ref[i])
+    # swap (even to the same plan) must invalidate the persisted index
+    eng._swap_plan(eng.mp)
+    s3 = _serve(eng, params, prompts)
+    assert s3.counters["prefix_hit_tokens"] == 0
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(s3.results[i].tokens, ref[i])
+    # and the index repopulates after the invalidation
+    s4 = _serve(eng, params, prompts)
+    assert s4.counters["prefix_hit_tokens"] > 0
+
+
+# ---------------------------------------------------------------------------
+# scaled fp8 KV: calibration + loss-MSE accuracy gate
+# ---------------------------------------------------------------------------
+
+
+def test_calibrate_kv_scales_shape_and_values(model, params):
+    batches = [{"tokens": jax.random.randint(jax.random.key(3), (2, 16),
+                                             0, 512)}]
+    scales = calibrate_kv_scales(model, params, batches)
+    assert len(scales) == model.cfg.n_layers
+    for entry in scales:
+        assert entry is not None
+        names = [n for n, _ in entry]
+        assert names == sorted(names) and set(names) == {"k", "v"}
+        assert all(s > 0 for _, s in entry)
+    # the per-layer tuple drops straight into LMConfig
+    cfg = dataclasses.replace(model.cfg, kv_cache_dtype="fp8_e4m3",
+                              kv_dequant_scales=scales)
+    assert cfg.kv_scales_for(0) == scales[0]
+
+
+def test_calibrate_kv_scales_rejects_scan(model, params):
+    scan = get_model("llama3_1b", smoke=True, scan_layers=True)
+    with pytest.raises(ValueError, match="scan"):
+        calibrate_kv_scales(scan, scan.init(jax.random.key(0)),
+                            [{"tokens": jnp.zeros((1, 8), jnp.int32)}])
+
+
+def _paged_decode_loss(model, params, toks, label_tok):
+    """Per-row decode-step loss through the *paged* read path (dense rings
+    ignore dequant scales): prefill fills blocks, one decode step reads
+    them back, loss = -log p(label)."""
+    ctx = QuantContext()
+    B, T = toks.shape
+    bs = 4
+    caches = model.init_paged_cache(B, 32, bs)
+    n_pages = -(-(T + 1) // bs)
+    bt = np.asarray([[1 + b * n_pages + pg for pg in range(n_pages)]
+                     for b in range(B)], np.int32)
+    lens = jnp.full((B,), T, jnp.int32)
+    _, caches = model.prefill_chunk(
+        params, toks, caches, ctx,
+        start_pos=jnp.zeros((B,), jnp.int32), valid_len=lens,
+        block_tables=jnp.asarray(bt))
+    tok = jnp.full((B, 1), label_tok, jnp.int32)
+    logits, _ = model.decode_step(params, tok, lens, caches, ctx,
+                                  block_tables=jnp.asarray(bt),
+                                  paged_attn="gather")
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -np.asarray(logp[:, 0, label_tok], np.float64)
+
+
+def test_scaled_fp8_kv_accuracy_gate(model, params):
+    """The paper's sensitivity metric (loss-MSE vs the bf16-cache
+    reference) gates scaled fp8 KV: with V amplitudes pushed past the fp8
+    max, the unscaled cache saturates at 448 while calibrated scales map
+    the range in-bounds — the scaled loss-MSE must beat unscaled."""
+    big = copy.deepcopy(jax.tree_util.tree_map(np.asarray, params))
+    for i in range(model.cfg.n_layers):
+        node = big["layers"][str(i)]["attn"]["v_proj"]
+        node["w"] = np.asarray(node["w"], np.float32) * 400.0
+    big = jax.tree_util.tree_map(
+        lambda x: jnp.asarray(x, jnp.bfloat16)
+        if np.asarray(x).dtype == np.float32 else jnp.asarray(x), big)
+    toks = jax.random.randint(jax.random.key(7), (2, 12), 0, 512)
+
+    scales = calibrate_kv_scales(model, big, [{"tokens": toks}])
+    v_scales = [dict(e)["v"] for e in scales]
+    assert max(v_scales) > 1.0, "amplified V never left the fp8 range"
+
+    def variant(kv_dtype, sc):
+        cfg = dataclasses.replace(model.cfg, kv_cache_dtype=kv_dtype,
+                                  kv_dequant_scales=sc)
+        return type(model)(cfg)
+
+    label = 3
+    ref = _paged_decode_loss(variant("bfloat16", None), big, toks, label)
+    unscaled = _paged_decode_loss(variant("fp8_e4m3", None), big, toks,
+                                  label)
+    scaled = _paged_decode_loss(variant("fp8_e4m3", scales), big, toks,
+                                label)
+    assert np.all(np.isfinite(unscaled)), \
+        "unscaled fp8 write must saturate, not NaN-poison the cache"
+    mse_unscaled = float(np.mean((unscaled - ref) ** 2))
+    mse_scaled = float(np.mean((scaled - ref) ** 2))
+    assert mse_scaled < mse_unscaled
+    assert np.max(np.abs(scaled - ref)) < np.max(np.abs(unscaled - ref))
+
+
+def test_mla_nonunit_scales_route_to_gather(model):
+    """The fused absorbed-MLA predicate treats non-unit dequant scales as
+    a gather condition: a serving engine holding a scaled-fp8 MLA
+    checkpoint must drain (fused request silently downgraded), matching
+    the explicit gather engine token-for-token."""
+    mla = get_model("deepseek_v3_671b", smoke=True, moe_layers=(),
+                    mtp_depth=0, mla_absorb_decode=True,
+                    kv_cache_dtype="fp8_e4m3",
+                    kv_dequant_scales=(("ckv", 0.5), ("kr", 0.5)))
+    p = mla.init(jax.random.key(2))
+    rng = np.random.default_rng(5)
+    ps = [rng.integers(0, 200, size=n).astype(np.int32) for n in (11, 6)]
+    outs = {}
+    for pa in ("fused", "gather"):
+        eng = ContinuousBatchingEngine(mla, n_slots=2, max_len=24,
+                                       block_size=4, paged_attn=pa)
+        summ = _serve(eng, p, ps, max_new=4)
+        outs[pa] = {i: summ.results[i].tokens for i in range(len(ps))}
+    for i in range(len(ps)):
+        np.testing.assert_array_equal(outs["fused"][i], outs["gather"][i])
+
+
+# ---------------------------------------------------------------------------
+# dense chunked prefill: sliding-window ring widening regression
+# ---------------------------------------------------------------------------
+
+
+def test_dense_chunked_prefill_unaligned_window(model):
+    """The documented failing shape: window=12, chunk_len=8, prompt=24.
+    The third chunk's window straddles a chunk boundary; an unwidened ring
+    (size == window) would have overwritten positions the window still
+    needs. Dense chunked tokens must match the one-shot engine."""
+    wm = get_model("llama3_1b", smoke=True, sliding_window=12)
+    wp = wm.init(jax.random.key(1))
+    rng = np.random.default_rng(9)
+    ps = [rng.integers(0, 500, size=24).astype(np.int32) for _ in range(2)]
+    one = ServeEngine(wm, donate=False)
+    ref = {i: np.asarray(one.generate(wp, {"tokens": jnp.asarray(p)[None]},
+                                      max_new_tokens=4).tokens)[0]
+           for i, p in enumerate(ps)}
+    eng = ContinuousBatchingEngine(wm, n_slots=2, max_len=40, paged=False,
+                                   chunk_len=8)
+    summ = _serve(eng, wp, ps, max_new=4)
+    for i in range(len(ps)):
+        np.testing.assert_array_equal(summ.results[i].tokens, ref[i])
