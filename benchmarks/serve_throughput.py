@@ -36,6 +36,14 @@ engine. Both arms' per-request TTFTs land under the ``adaptive`` key of
 ``BENCH_serve.json`` (TTFT is CPU-*modeled* in reference step units — see
 the leg's docstring).
 
+Since the fault-tolerant serving work, a guardrail-overhead leg
+(``guardrail_overhead_economics``) prices the tau-anchored numerical
+guardrail's periodic high-precision shadow step: interleaved (off, on)
+drain pairs must keep the best-pair wall-throughput ratio >= 0.98 (<= 2%
+overhead), greedy tokens bit-identical, and an honest plan must never
+breach. The payload lands under the ``guardrail`` key of
+``BENCH_serve.json``.
+
 The one-shot baseline must wait for the whole batch to arrive before
 prefilling (batch-formation latency), so its effective TTFT for early
 requests includes the queueing wait; the continuous engine admits each
@@ -58,7 +66,7 @@ import numpy as np
 from benchmarks.common import bench_bundle, bench_model, emit
 from repro.hw.profiles import get_profile
 from repro.serve import (AdaptiveMPController, ContinuousBatchingEngine,
-                         Request, ServeEngine)
+                         NumericalGuardrail, Request, ServeEngine)
 
 
 def _requests(data, n, prompt_len, new_tokens, arrival_every):
@@ -141,6 +149,10 @@ def main():
                          "ladder only exists at small taus)")
     ap.add_argument("--adaptive-levels", type=int, default=3)
     ap.add_argument("--adaptive-factor", type=float, default=10.0)
+    ap.add_argument("--guardrail-every", type=int, default=16,
+                    help="shadow-step cadence of the guardrail-overhead "
+                         "leg (one high-precision decode step per N real "
+                         "ones; the leg gates on <= 2% wall overhead)")
     ap.add_argument("--burst-gap", type=int, default=40,
                     help="engine ticks between the two arrival bursts of "
                          "the adaptive leg (sized so the queue fully "
@@ -202,10 +214,13 @@ def main():
     chunked_prefill_economics(model, params, data, args)
     shared = shared_prefix_economics(model, params, data, args)
     adaptive = adaptive_tau_economics(model, params, data, args)
+    guardrail = guardrail_overhead_economics(model, params, plan, reqs,
+                                             args, max_len)
     mesh = mesh_leg_economics(args)
     pipeline_overlap_economics(model, params, reqs, args, max_len,
                                mesh_payload=mesh, shared_prefix_payload=shared,
-                               adaptive_payload=adaptive)
+                               adaptive_payload=adaptive,
+                               guardrail_payload=guardrail)
 
 
 def shared_prefix_economics(model, params, data, args):
@@ -446,9 +461,78 @@ def adaptive_tau_economics(model, params, data, args):
     }
 
 
+def guardrail_overhead_economics(model, params, plan, reqs, args, max_len):
+    """Cost of the tau-anchored numerical guardrail: the same MP drain with
+    the shadow step on (one high-precision decode step + a scalar logit-MSE
+    readback every ``--guardrail-every`` real steps) vs off. The shadow runs
+    over the same inputs before the real step and its cache writes are
+    discarded, so greedy tokens must be bit-identical between the two runs
+    — the guardrail is parity-free by construction, it only costs wall
+    time, and the amortized cost model is ~1/every of decode compute.
+
+    Drains run as interleaved (off, on) pairs and the gate asserts on the
+    best per-pair wall ratio with a 2% floor (the same matched-pair shape
+    as the pipelining gate: back-to-back pairs cancel machine-load drift).
+    An honest plan (budget = its own predicted loss MSE) must never breach:
+    the leg also fails if any shadow check fired a restore."""
+    eng = ContinuousBatchingEngine(model, n_slots=args.n_slots,
+                                   max_len=max_len, mp=plan,
+                                   block_size=args.block_size)
+    fresh = lambda: NumericalGuardrail(every=args.guardrail_every, margin=4.0)
+    eng.serve(params, [reqs[0]])              # warmup (compile)
+    eng.guardrail = fresh()
+    eng.serve(params, reqs)                   # warm the shadow-step compile
+
+    def run(grail):
+        eng.guardrail = grail
+        return eng.serve(params, reqs)
+
+    pairs = [(run(None), run(fresh())) for _ in range(3)]
+    for rid in pairs[0][0].results:
+        for off, on in pairs:
+            if not np.array_equal(off.results[rid].tokens,
+                                  on.results[rid].tokens):
+                raise SystemExit(
+                    f"guardrail parity violation: rid {rid} greedy tokens "
+                    f"differ with the shadow step on — the guardrail must "
+                    f"be observation-only")
+    wall = lambda o: o.counters["wall_tokens_per_s"]
+    ratio = max(wall(on) / wall(off) for off, on in pairs)
+    on_best = max((on for _, on in pairs), key=wall)
+    g = on_best.counters["guardrail"]
+    if not g["checks"]:
+        raise SystemExit(
+            f"guardrail leg: no shadow check ran over {on_best.n_steps} "
+            f"decode steps at cadence {args.guardrail_every} — the leg "
+            f"measured nothing")
+    if g["breaches"] or g["restored_at"] is not None:
+        raise SystemExit(
+            f"guardrail false positive: an honest plan (budget = its own "
+            f"predicted loss MSE) breached at MSE {g['last_mse']}")
+    emit("serve_guardrail_overhead_ratio", ratio,
+         f"wall tokens/s with shadow every {args.guardrail_every} steps / "
+         f"without ({g['checks']} checks, 0 breaches)")
+    print(f"# guardrail leg: best matched-pair wall ratio {ratio:.3f} at "
+          f"cadence {args.guardrail_every} ({g['checks']} shadow checks, "
+          f"last MSE {g['last_mse']:.3g}, 0 breaches), tokens bit-identical")
+    if ratio < 0.98:
+        raise SystemExit(
+            f"guardrail overhead regression: in every matched (off, on) "
+            f"pair the shadow step cost more than 2% wall throughput "
+            f"(best ratio {ratio:.3f} at cadence {args.guardrail_every})")
+    return {
+        "every": args.guardrail_every,
+        "checks": g["checks"],
+        "last_mse": g["last_mse"],
+        "best_pair_ratio": ratio,
+        "wall_tokens_per_s": {"off": [wall(off) for off, _ in pairs],
+                              "on": [wall(on) for _, on in pairs]},
+    }
+
+
 def pipeline_overlap_economics(model, params, reqs, args, max_len,
                                mesh_payload=None, shared_prefix_payload=None,
-                               adaptive_payload=None):
+                               adaptive_payload=None, guardrail_payload=None):
     """Lockstep (sync) vs pipelined drain on the same request stream: the
     pipelined producer dispatches steps ahead of the host and must block
     strictly less per decode step than the lockstep loop, whose every step
@@ -537,6 +621,8 @@ def pipeline_overlap_economics(model, params, reqs, args, max_len,
         payload["shared_prefix"] = shared_prefix_payload
     if adaptive_payload is not None:
         payload["adaptive"] = adaptive_payload
+    if guardrail_payload is not None:
+        payload["guardrail"] = guardrail_payload
     with open(args.json, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"# host/device overlap counters written to {args.json}")

@@ -10,6 +10,8 @@ monolithic rings).
         [--paged-attn fused|gather] [--dump-tokens toks.json] \
         [--shared-prefix-len 16] [--no-prefix-cache] \
         [--priorities 0,1] [--expect-preemptions] \
+        [--inject-faults 'nan_page@4;alloc_failure@6' --max-retries 2 \
+         --expect-retried 1 --expect-failed 0] \
         [--mesh data=2,model=2]   # needs data*model devices, e.g.
                                   # XLA_FLAGS=--xla_force_host_platform_device_count=8
 
@@ -39,6 +41,14 @@ continuous engine's greedy tokens exactly match the one-shot reference
 no decode slot ever stalled more than ``--chunk-budget`` chunk steps.
 This is the contract the CI serve-smoke job enforces (including at the
 seed-era divergence-report shape: 3 requests x 16-token prompts).
+
+``--inject-faults`` arms the deterministic fault harness (NaN-poisoned KV
+pages, allocation failures, step exceptions, ...): the drain must still
+complete, 'retried' requests must match the one-shot reference bit for
+bit (re-prefill containment), and 'failed' requests must return an exact
+reference prefix. The CI fault-serve-smoke job diffs ``--dump-tokens``
+between a faulted and a fault-free run — they must be identical as long
+as every fault was contained within the retry budget.
 """
 import argparse
 
@@ -117,6 +127,23 @@ def main():
                     help="exit non-zero unless the adaptive drain both "
                          "downshifted (escalated) and restored at least "
                          "once (CI bursty run)")
+    ap.add_argument("--inject-faults", default=None,
+                    help="deterministic fault schedule, e.g. "
+                         "'nan_page@4;alloc_failure@6' (kind@step[,k=v...]; "
+                         "specs ';'-separated — see repro.serve.FaultSpec). "
+                         "Fault-affected requests relax the parity contract: "
+                         "'retried' results must still match the one-shot "
+                         "reference bit for bit, 'failed' results must be an "
+                         "exact prefix of it")
+    ap.add_argument("--max-retries", type=int, default=1,
+                    help="bounded per-request retries after a contained "
+                         "fault before the request is marked failed")
+    ap.add_argument("--expect-retried", type=int, default=None,
+                    help="exit non-zero unless at least this many requests "
+                         "finished with status 'retried' (CI fault-smoke)")
+    ap.add_argument("--expect-failed", type=int, default=None,
+                    help="exit non-zero unless exactly this many requests "
+                         "finished with status 'failed'")
     ap.add_argument("--no-mp", action="store_true",
                     help="skip bundle calibration / MP plan (bf16 only; "
                          "fast path for CI smoke)")
@@ -176,6 +203,10 @@ def main():
 
     outs = {}
     for tag, mp, ctrl in configs:
+        injector = None
+        if args.inject_faults:
+            from repro.serve import FaultInjector
+            injector = FaultInjector.parse(args.inject_faults)
         eng = ContinuousBatchingEngine(model, n_slots=args.n_slots,
                                        max_len=max_len, mp=mp,
                                        paged=not args.dense_slots,
@@ -188,8 +219,12 @@ def main():
                                        prefix_cache=(False
                                                      if args.no_prefix_cache
                                                      else None),
-                                       adaptive=ctrl)
+                                       adaptive=ctrl,
+                                       faults=injector,
+                                       max_retries=args.max_retries)
+        eng.faults = None   # warmup must not consume the fault schedule
         eng.serve(params, [reqs[0]], sync=args.sync)   # warmup (compile)
+        eng.faults = injector
         out = eng.serve(params, reqs, sync=args.sync)
         outs[tag] = out
         ttfts = sorted(r.ttft_s for r in out.results.values())
@@ -229,10 +264,39 @@ def main():
                   f"(level {a['final_level']}), swaps at steps "
                   f"{[sw['step'] for sw in a['swaps']] or 'none'}")
 
+        f = c.get("faults")
+        if f and (f["seen"] or f["injected"]):
+            print(f"{'':8s} faults: injected "
+                  f"{dict(sorted(f['injected'].items())) or 'none'}, "
+                  f"{f['contained']} contained / {f['retries']} retries / "
+                  f"{f['failed']} failed, {f['quarantined_blocks']} blocks "
+                  f"quarantined" + (", degraded fused->gather"
+                                    if f["degraded_paged_attn"] else ""))
+
         # contract checks: completion + exact greedy parity vs one-shot
+        # (the drain must deliver a result for EVERY request even under
+        # injected faults — failed ones carry their partial tokens)
         missing = [r.rid for r in reqs if r.rid not in out.results]
         if missing:
             raise SystemExit(f"{tag}: requests never completed: {missing}")
+        statuses = {r.rid: out.results[r.rid].status for r in reqs}
+        n_retried = sum(1 for s in statuses.values() if s == "retried")
+        n_failed = sum(1 for s in statuses.values() if s == "failed")
+        if injector is not None:
+            if not injector.fired:
+                raise SystemExit(f"{tag}: --inject-faults given but no "
+                                 f"fault ever fired (schedule beyond the "
+                                 f"drain?)")
+            bad = {r: s for r, s in statuses.items()
+                   if s not in ("ok", "retried", "failed")}
+            if bad:
+                raise SystemExit(f"{tag}: unexpected result statuses {bad}")
+        if args.expect_retried is not None and n_retried < args.expect_retried:
+            raise SystemExit(f"{tag}: --expect-retried {args.expect_retried} "
+                             f"but only {n_retried} requests were retried")
+        if args.expect_failed is not None and n_failed != args.expect_failed:
+            raise SystemExit(f"{tag}: --expect-failed {args.expect_failed} "
+                             f"but {n_failed} requests failed")
         swapped = bool(out.counters.get("adaptive", {}).get("swaps"))
         if ctrl is not None and not swapped:
             # control arm: a controller that never fires must be
@@ -276,11 +340,24 @@ def main():
                 max_new_tokens=args.new_tokens)
             ref_toks = np.asarray(ref.tokens)
             for j, r in enumerate(group):
-                if not np.array_equal(out.results[r.rid].tokens, ref_toks[j]):
+                got = np.asarray(out.results[r.rid].tokens)
+                if statuses[r.rid] == "failed":
+                    # retry budget exhausted: the engine still returns the
+                    # last-known-good tokens, an exact reference prefix
+                    if not np.array_equal(got, ref_toks[j][:len(got)]):
+                        raise SystemExit(
+                            f"{tag}: failed rid {r.rid} returned tokens "
+                            f"that are not a prefix of the fault-free "
+                            f"reference — containment leaked bad values")
+                    continue
+                # ok AND retried results must be bit-identical: a retried
+                # request re-prefills its prompt + tokens-so-far, so a
+                # contained fault never changes what the user receives
+                if not np.array_equal(got, ref_toks[j]):
                     raise SystemExit(
-                        f"{tag}: rid {r.rid} diverged from the one-shot "
-                        f"reference — chunked/paged/continuous decode is "
-                        f"broken")
+                        f"{tag}: rid {r.rid} ({statuses[r.rid]}) diverged "
+                        f"from the one-shot reference — chunked/paged/"
+                        f"continuous decode is broken")
         # the stall bound the chunk arbitration exists to enforce
         if args.chunk_len is not None \
                 and c["max_decode_stall_run"] > args.chunk_budget:

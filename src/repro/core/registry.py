@@ -111,6 +111,12 @@ class BundleRegistry:
             try:
                 bundle = CalibrationBundle.load(path)
             except Exception as e:
+                # a corrupted artifact (truncated npz, bad JSON, partial
+                # write) must not take the whole registry down: warn loudly
+                # at skip time and fall through to the next-freshest
+                # candidate, keeping the detail for the final LookupError
+                print(f"[registry] warning: skipping corrupted bundle "
+                      f"{path}: {e}")
                 rejected.append(f"{path}: unreadable ({e})")
                 continue
             meta = bundle.meta

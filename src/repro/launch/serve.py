@@ -136,6 +136,20 @@ def main():
                     help="queue-depth watermark that triggers escalation")
     ap.add_argument("--adaptive-queue-low", type=int, default=0,
                     help="queue-depth watermark below which to restore")
+    ap.add_argument("--inject-faults", default=None,
+                    help="deterministic fault schedule for the continuous "
+                         "engine, e.g. 'nan_page@3,alloc_fail@5:slot=1' "
+                         "(kind@step[:k=v,...]); see repro.serve.FaultSpec")
+    ap.add_argument("--max-retries", type=int, default=1,
+                    help="bounded per-request retries after a contained "
+                         "fault before the request is marked failed")
+    ap.add_argument("--guardrail-every", type=int, default=None,
+                    help="enable the tau-anchored numerical guardrail: run a "
+                         "high-precision shadow step every N decode steps and "
+                         "compare logit MSE against the active plan's "
+                         "loss-MSE budget (continuous mode with an MP plan)")
+    ap.add_argument("--guardrail-margin", type=float, default=4.0,
+                    help="breach when shadow MSE > margin * budget")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -210,6 +224,9 @@ def main():
         if not args.continuous:
             raise SystemExit("--adaptive-tau drives the continuous engine; "
                              "pass --continuous")
+    if (args.inject_faults or args.guardrail_every) and not args.continuous:
+        raise SystemExit("--inject-faults/--guardrail-every drive the "
+                         "continuous engine; pass --continuous")
     plan = None
     controller = None
     bundle = src = None
@@ -274,6 +291,20 @@ def main():
                   f"profile at p95 live demand x1.25 headroom")
         elif n_blocks is not None:
             n_blocks = int(n_blocks)
+        injector = None
+        if args.inject_faults:
+            from repro.serve import FaultInjector
+            injector = FaultInjector.parse(args.inject_faults)
+            print(f"[serve] fault injection: {len(injector.specs)} scheduled "
+                  f"({args.inject_faults})")
+        guardrail = None
+        if args.guardrail_every:
+            from repro.serve import NumericalGuardrail
+            guardrail = NumericalGuardrail(every=args.guardrail_every,
+                                           margin=args.guardrail_margin)
+            print(f"[serve] guardrail: shadow step every "
+                  f"{args.guardrail_every} decode steps, breach at "
+                  f"{args.guardrail_margin:g}x the plan's loss-MSE budget")
         eng = ContinuousBatchingEngine(model, n_slots=args.n_slots,
                                        max_len=max_len, mp=plan,
                                        paged=not args.dense_slots,
@@ -286,7 +317,10 @@ def main():
                                        prefix_cache=(False
                                                      if args.no_prefix_cache
                                                      else None),
-                                       adaptive=controller)
+                                       adaptive=controller,
+                                       faults=injector,
+                                       max_retries=args.max_retries,
+                                       guardrail=guardrail)
         rng = np.random.default_rng(1)
         reqs = [Request(rid=i,
                         tokens=rng.integers(0, model.cfg.vocab_size,
@@ -294,7 +328,11 @@ def main():
                         max_new_tokens=args.new_tokens,
                         arrival=i * args.arrival_every)
                 for i in range(args.requests)]
+        # compile warm-up must not consume the fault schedule or trip
+        # the guardrail's one-shot breach state
+        eng.faults, eng.guardrail = None, None
         eng.serve(params, reqs[:1], sync=args.sync_engine)  # compile
+        eng.faults, eng.guardrail = injector, guardrail
         out = eng.serve(params, reqs, sync=args.sync_engine)
         ttfts = sorted(r.ttft_s for r in out.results.values())
         p50 = f"{ttfts[len(ttfts)//2]*1e3:.2f} ms" if ttfts else "n/a"
@@ -338,6 +376,32 @@ def main():
                   f"final tau {a['final_tau']:g} (level {a['final_level']}) "
                   f"| swaps at steps "
                   f"{[s['step'] for s in a['swaps']] or 'none'}")
+        f = c.get("faults")
+        if f and (f["seen"] or f["injected"]):
+            inj_desc = ", ".join(f"{k}x{v}" for k, v in
+                                 sorted(f["injected"].items())) or "none"
+            print(f"[serve] faults: injected {inj_desc} | "
+                  f"{f['contained']} contained / {f['retries']} retries / "
+                  f"{f['failed']} failed | "
+                  f"{f['quarantined_blocks']} blocks quarantined | "
+                  f"kernel faults {f['kernel_faults']}"
+                  + (" | degraded fused->gather"
+                     if f["degraded_paged_attn"] else ""))
+        g = c.get("guardrail")
+        if g:
+            print(f"[serve] guardrail: {g['checks']} shadow checks | "
+                  f"{g['breaches']} breaches | last MSE "
+                  f"{g['last_mse'] if g['last_mse'] is not None else 'n/a'}"
+                  + (f" | restored base plan at step {g['restored_at']}"
+                     if g["restored_at"] is not None else ""))
+        n_failed = sum(1 for r in out.results.values()
+                       if r.status == "failed")
+        n_retried = sum(1 for r in out.results.values()
+                        if r.status == "retried")
+        if n_failed or n_retried:
+            print(f"[serve] degraded results: {n_retried} retried "
+                  f"(bit-identical after re-prefill) | {n_failed} failed "
+                  f"(partial tokens returned)")
     else:
         eng = ServeEngine(model, mp=plan, donate=False)
         prompt = {"tokens": jax.random.randint(jax.random.key(1),

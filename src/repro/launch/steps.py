@@ -270,6 +270,30 @@ def greedy_next_token(logits):
 
 
 @jax.jit
+def nonfinite_rows(logits):
+    """(B, T, V) logits -> (B,) bool: row's last-step logits hold a NaN/inf.
+
+    The serving engines' numerical tripwire: one tiny reduction jitted over
+    the step's *output* (like :func:`greedy_next_token`, so it cannot
+    perturb the step's numerics), whose result rides the same batched
+    device_get as the token vector — flagging a poisoned KV page or a
+    saturated projection costs no extra readback."""
+    return jnp.logical_not(
+        jnp.all(jnp.isfinite(logits[:, -1]), axis=-1))
+
+
+@jax.jit
+def shadow_logit_mse(logits, ref_logits, row):
+    """fp32 mean-squared error between one row's last-step logits under the
+    active plan and under the high-precision shadow step — the measured
+    quantity the tau-anchored guardrail compares against the plan's
+    loss-MSE budget (see ``serve/adaptive.py``)."""
+    a = logits[row, -1].astype(jnp.float32)
+    b = ref_logits[row, -1].astype(jnp.float32)
+    return jnp.mean(jnp.square(a - b))
+
+
+@jax.jit
 def merge_first_tokens(cur_tok, new_tok, mask):
     """Scatter freshly-prefilled rows' first tokens into the device-resident
     decode input: rows where ``mask`` is set take ``new_tok``, others keep

@@ -36,7 +36,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence
 
-__all__ = ["AdaptiveMPController"]
+__all__ = ["AdaptiveMPController", "NumericalGuardrail"]
 
 
 @dataclasses.dataclass
@@ -84,6 +84,7 @@ class AdaptiveMPController:
         self.level = 0
         self.downshifts = 0              # swaps toward more aggressive
         self.restores = 0                # swaps back toward the base plan
+        self.guardrail_restores = 0      # forced restores (numerical breach)
         self.history: list = []          # (tick, level, tau) per swap
         self._plans: dict = {}
         self._last_eval: Optional[int] = None
@@ -161,3 +162,85 @@ class AdaptiveMPController:
         self._last_swap = now
         self.history.append((now, self.level, self.tau))
         return self.plan
+
+    def force_restore(self, now: int):
+        """Guardrail override: jump straight back to the level-0 base plan,
+        bypassing cadence, dwell and the one-level-per-evaluation walk — a
+        measured numerical breach outranks load smoothing. Returns the base
+        plan (the engine applies it at the step boundary like any other
+        swap). Idempotent at level 0."""
+        if self.level != 0:
+            self.level = 0
+            self.restores += 1
+            self.history.append((now, self.level, self.tau))
+        self.guardrail_restores += 1
+        self._last_swap = now
+        return self.plan
+
+
+@dataclasses.dataclass
+class NumericalGuardrail:
+    """Tau-anchored runtime check of the solver's loss-MSE bound.
+
+    The IP solver guarantees *predicted* loss-MSE <= ``budget = tau^2 *
+    E[g^2]`` (the paper's eq. 23 constraint) — on the calibration set. This
+    guardrail closes the loop at serve time: every ``every`` decode steps
+    the engine runs one extra *high-precision shadow step* over the same
+    inputs (same caches, same tokens; its cache writes are discarded),
+    measures the fp32 logit-MSE between the active plan's logits and the
+    shadow's for one sampled live row, and compares it against ``margin *
+    budget``. ``margin`` absorbs the gap between the calibration-set
+    loss-MSE the budget bounds and the single-row logit-MSE actually
+    measured (the paper's linearization ``d = s_l * alpha_f`` ties the two
+    scales); breaches beyond ``max_breaches`` force a restore to the base
+    plan — through :meth:`AdaptiveMPController.force_restore` when a
+    controller is attached, or by dropping to the unquantized plan
+    otherwise.
+
+    Cost model: one extra decode step plus one blocking scalar readback per
+    ``every`` steps — amortized overhead ~``1/every``, gated < 2% in the
+    ``serve_throughput`` benchmark leg. Once restored (quantization off)
+    the shadow equals the active step, so the engine stops checking and the
+    overhead drops to zero.
+    """
+
+    every: int = 16                  # shadow cadence, decode steps
+    margin: float = 4.0              # budget multiplier before a breach
+    max_breaches: int = 1            # breaches tolerated before restoring
+    budget: Optional[float] = None   # explicit loss-MSE budget override
+
+    def __post_init__(self):
+        if self.every < 1 or self.margin <= 0 or self.max_breaches < 1:
+            raise ValueError((self.every, self.margin, self.max_breaches))
+        self.checks = 0
+        self.breaches = 0
+        self.last_mse: Optional[float] = None
+        self.restored_at: Optional[int] = None
+        self.history: list = []      # (tick, mse, budget) per breach
+
+    def budget_for(self, plan) -> Optional[float]:
+        """The loss-MSE budget to hold ``plan`` to: the explicit override,
+        else the plan's own solved ``budget`` (tau^2 E[g^2]), else its
+        ``predicted_loss_mse``. None (no budget derivable — e.g. a raw
+        assignment dict) disables breach detection but still records MSE."""
+        if self.budget is not None:
+            return self.budget
+        for attr in ("budget", "predicted_loss_mse"):
+            v = getattr(plan, attr, None)
+            if v is not None:
+                return float(v)
+        return None
+
+    def observe_mse(self, now: int, mse: float,
+                    budget: Optional[float]) -> bool:
+        """Record one shadow measurement; True means *restore now*."""
+        self.checks += 1
+        self.last_mse = float(mse)
+        if budget is None or not (mse > self.margin * budget):
+            return False
+        self.breaches += 1
+        self.history.append((int(now), float(mse), float(budget)))
+        if self.breaches >= self.max_breaches and self.restored_at is None:
+            self.restored_at = int(now)
+            return True
+        return False

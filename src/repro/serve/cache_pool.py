@@ -278,17 +278,29 @@ class PagedCachePool:
         self.prefix_hit_tokens = 0
         self.cow_forks = 0
         self.reclaimed_cached_blocks = 0
+        # ---- fault containment: poisoned-block quarantine ----
+        # quarantined blocks are permanently out of circulation: never on a
+        # free list, never cached, never indexed — capacity shrinks by one
+        # block each, which later allocations feel as organic pressure
+        self._quarantined_by_shard = [set() for _ in range(self.n_shards)]
+        # blocks awaiting quarantine: still referenced by a borrower the
+        # fork-off couldn't relocate (pool dry); _release routes them into
+        # quarantine the moment the last reference drops
+        self._quarantine_pending: set = set()
+        self.quarantined_blocks = 0          # per-drain tally
 
     # ---- cross-drain lifecycle ----------------------------------------
     def reset_counters(self) -> None:
         """Zero the per-drain telemetry tallies. The engine persists one
         pool across ``serve()`` drains (so the prefix index survives between
-        calls); each drain's counters start fresh here."""
+        calls); each drain's counters start fresh here. Quarantined blocks
+        stay quarantined — only the drain tally resets."""
         self.prefix_hit_requests = 0
         self.prefix_hit_blocks = 0
         self.prefix_hit_tokens = 0
         self.cow_forks = 0
         self.reclaimed_cached_blocks = 0
+        self.quarantined_blocks = 0
 
     def invalidate_prefix_index(self) -> None:
         """Forget every indexed prefix block. Cached (refcount-0) blocks
@@ -397,8 +409,13 @@ class PagedCachePool:
         return sum(len(c) for c in self._cached_by_shard)
 
     @property
+    def n_quarantined_blocks(self) -> int:
+        return sum(len(q) for q in self._quarantined_by_shard)
+
+    @property
     def blocks_in_use(self) -> int:
-        return (self.n_blocks - self.n_shards) - self.n_free_blocks
+        return ((self.n_blocks - self.n_shards - self.n_quarantined_blocks)
+                - self.n_free_blocks)
 
     @property
     def _reserved(self) -> int:
@@ -407,8 +424,10 @@ class PagedCachePool:
     @property
     def allocatable_blocks(self) -> int:
         """Largest single-request reservation the pool can ever satisfy —
-        one shard's capacity minus its trash block."""
-        return self.blocks_per_shard - 1
+        one shard's capacity minus its trash block and any quarantined
+        blocks (quarantine permanently shrinks capacity)."""
+        return (self.blocks_per_shard - 1
+                - min(len(q) for q in self._quarantined_by_shard))
 
     def _shard_of(self, slot: int) -> int:
         return slot // self.slots_per_shard if self.n_shards > 1 else 0
@@ -555,7 +574,12 @@ class PagedCachePool:
         assert self._ref[blk] >= 0, (blk, self._ref[blk])
         if self._ref[blk] == 0:
             del self._ref[blk]
-            if blk in self._block_digest:
+            if blk in self._quarantine_pending:
+                # a poisoned block whose last borrower just let go: it goes
+                # straight to quarantine, never back into circulation
+                self._quarantine_pending.discard(blk)
+                self._quarantine(d, blk)
+            elif blk in self._block_digest:
                 # indexed content stays resident (LRU reclaim on pressure)
                 self._cached_by_shard[d][blk] = None
             else:
@@ -612,6 +636,185 @@ class PagedCachePool:
                 idx[h] = blk
                 self._block_digest[blk] = (d, h)
         self._slot_registered[slot] = max(done, end)
+
+    # ---- fault containment: quarantine + reconcile --------------------
+    def _quarantine(self, d: int, blk: int) -> None:
+        """Retire ``blk`` from circulation permanently. Caller guarantees
+        the refcount is zero (no table maps it)."""
+        if blk in self._block_digest:
+            self._deindex(blk)
+        self._quarantined_by_shard[d].add(blk)
+        self.quarantined_blocks += 1
+
+    def _alloc_block_unreserved(self, d: int):
+        """Pop a block from shard ``d`` without charging any slot's
+        reservation — the quarantine fork-off path: the copy a borrower
+        needs was never part of its admission-time budget. Returns None
+        (instead of raising) when the shard is dry: the caller degrades
+        gracefully. May leave ``reserved > free + cached``; a later
+        ``_alloc_block`` then raises, which the engine contains as an
+        allocation fault — quarantine pressure surfaces as backpressure,
+        never as a crash."""
+        if self._free_blocks_by_shard[d]:
+            blk = self._free_blocks_by_shard[d].pop()
+        elif self._cached_by_shard[d]:
+            blk, _ = self._cached_by_shard[d].popitem(last=False)
+            self._deindex(blk)
+            self.reclaimed_cached_blocks += 1
+        else:
+            return None
+        self._ref[blk] = 1
+        return blk
+
+    def _fork_off(self, slot: int, page: int) -> bool:
+        """Copy ``slot``'s (borrowed) ``page`` onto a private block so the
+        quarantined source loses this reader. The copy may itself carry
+        poisoned bytes — if it does, the borrower's own tripwire fires and
+        containment recurses; what quarantine guarantees is that the *block*
+        can never be re-allocated or prefix-matched again. False when the
+        pool is dry (the borrower keeps the pending-quarantine page)."""
+        d = self._shard_of(slot)
+        src = int(self.block_tables[slot, page])
+        dst = self._alloc_block_unreserved(d)
+        if dst is None:
+            return False
+        self._slot_blocks[slot].append(dst)
+        self._copy_block_device(src, dst)
+        self.block_tables[slot, page] = dst
+        self._slot_blocks[slot].remove(src)
+        self._release(d, src)
+        borrowed = self._slot_borrowed.get(slot)
+        if borrowed is not None:
+            borrowed.discard(page)
+        return True
+
+    def quarantine_slot(self, slot: int) -> int:
+        """Poisoned-page containment for a faulted slot: every block its
+        table maps is (1) de-indexed — no future prefix hit can walk through
+        it; (2) stripped of other live borrowers via device-side fork-off
+        copies; (3) dropped from this slot's table and retired to the
+        quarantine set, from which no allocation path (free list, cached
+        LRU) can ever produce it again. Conservative by design: detection
+        is a non-finite *logit* row, which does not localize the poisoned
+        page, so the whole mapping is suspect. Returns the number of blocks
+        newly quarantined (borrowed blocks whose fork-off failed quarantine
+        later, on their last release). Call before ``free_slot``."""
+        d = self._shard_of(slot)
+        before = self.quarantined_blocks
+        borrowed = self._slot_borrowed.get(slot, set())
+        for page in range(self.max_blocks):
+            blk = int(self.block_tables[slot, page])
+            if blk < 0:
+                continue
+            if blk in self._block_digest:
+                self._deindex(blk)
+            self._quarantine_pending.add(blk)
+            for t in range(self.n_slots):
+                if t == slot:
+                    continue
+                for p in np.nonzero(self.block_tables[t] == blk)[0]:
+                    self._fork_off(t, int(p))
+            self.block_tables[slot, page] = -1
+            self._slot_blocks[slot].remove(blk)
+            borrowed.discard(page)
+            self._release(d, blk)
+        return self.quarantined_blocks - before
+
+    def poison_block(self, blk: int) -> None:
+        """Overwrite physical block ``blk`` with NaN in every block-major
+        floating-point cache leaf — the fault injector's NaN-page primitive
+        (device-side, one jitted scatter). Test harness only."""
+        # n_blocks is baked into the closure's leaf filter, so pools with
+        # different geometries must not share a compiled poisoner
+        key = (id(self.model), id(self.layout), "poison", self.n_blocks)
+        entry = _COW_JIT_CACHE.get(key)
+        if entry is None:
+            nb = self.n_blocks
+
+            def _poison(caches, b):
+                def upd(x):
+                    if (x.ndim >= 2 and x.shape[0] == nb
+                            and jnp.issubdtype(x.dtype, jnp.floating)):
+                        return x.at[b].set(jnp.nan)
+                    return x
+                return jax.tree.map(upd, caches)
+
+            kw = {}
+            if self.layout is not None:
+                kw["out_shardings"] = jax.tree.map(lambda x: x.sharding,
+                                                   self.caches)
+            entry = (self.model, self.layout, jax.jit(_poison, **kw))
+            _COW_JIT_CACHE[key] = entry
+        self.caches = entry[2](self.caches, jnp.asarray(blk, jnp.int32))
+
+    def check_consistency(self) -> dict:
+        """Cross-check the allocator's books against the block tables (the
+        single source of truth for what is mapped): table multiset ==
+        refcounts, and free/cached/quarantined sets disjoint from mapped
+        blocks. Returns a report dict with ``ok`` plus the mismatches."""
+        from collections import Counter
+        mat = Counter(int(b) for row in self.block_tables
+                      for b in row if b >= 0)
+        free = set()
+        for lst in self._free_blocks_by_shard:
+            free.update(lst)
+        cached = set()
+        for c in self._cached_by_shard:
+            cached.update(c)
+        quarantined = set()
+        for q in self._quarantined_by_shard:
+            quarantined.update(q)
+        mapped = set(mat)
+        report = {
+            "tables_vs_ref": mat == Counter(self._ref),
+            "free_mapped": sorted(free & mapped),
+            "cached_mapped": sorted(cached & mapped),
+            "quarantined_mapped": sorted(quarantined & mapped),
+            "quarantined_free": sorted(quarantined & (free | cached)),
+        }
+        report["ok"] = (report["tables_vs_ref"]
+                        and not report["free_mapped"]
+                        and not report["cached_mapped"]
+                        and not report["quarantined_mapped"]
+                        and not report["quarantined_free"])
+        return report
+
+    def reconcile(self) -> dict:
+        """Repair the allocator's books after an error bail-out: recompute
+        every refcount from the block tables and route orphaned blocks
+        (referenced by no table) back to the cached LRU / free list — or to
+        quarantine if poisoned. Run by the engine on the consumer-error
+        shutdown path, after every slot has been released, so a drain that
+        re-raises a callback error still leaves the persistent pool in a
+        state the next drain can safely reuse. Returns what changed."""
+        from collections import Counter
+        mat = Counter(int(b) for row in self.block_tables
+                      for b in row if b >= 0)
+        fixed = 0
+        for blk, want in mat.items():
+            if self._ref.get(blk) != want:
+                self._ref[blk] = want
+                fixed += 1
+        orphans = 0
+        for blk in [b for b in self._ref if b not in mat]:
+            del self._ref[blk]
+            d = self._shard_of_block(blk)
+            self._cached_by_shard[d].pop(blk, None)
+            if blk in self._free_blocks_by_shard[d]:
+                continue
+            if blk in self._quarantine_pending:
+                self._quarantine_pending.discard(blk)
+                self._quarantine(d, blk)
+            elif blk in self._block_digest:
+                self._cached_by_shard[d][blk] = None
+            else:
+                self._free_blocks_by_shard[d].append(blk)
+            orphans += 1
+        return {"ref_fixed": fixed, "orphans_rerouted": orphans,
+                "consistent": self.check_consistency()["ok"]}
+
+    def _shard_of_block(self, blk: int) -> int:
+        return blk // self.blocks_per_shard if self.n_shards > 1 else 0
 
     def _cow_fork(self, slot: int, page: int) -> None:
         """Copy-on-write: ``slot`` is about to write into shared ``page`` —

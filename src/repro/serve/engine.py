@@ -61,12 +61,27 @@ import numpy as np
 
 from repro.core.mpconfig import as_assignment
 from repro.launch.steps import (get_serving_step, greedy_next_token,
-                                merge_first_tokens)
+                                merge_first_tokens, nonfinite_rows,
+                                shadow_logit_mse)
 from repro.serve.cache_pool import (CachePool, PagedCachePool,
                                     dense_slot_bytes, paged_block_bytes,
                                     paged_slot_bytes)
+from repro.serve.faults import InjectedFault, poison_logit_rows
 from repro.serve.scheduler import (DONE, PREFILLING, RUNNING, WAITING,
                                    Request, Scheduler)
+
+
+class _ImpossibleRequest(Exception):
+    """Raised by the paged admission gate when a request's worst-case block
+    need exceeds what the pool can ever satisfy. The engine decides whether
+    that is a configuration error (pristine pool: fail fast with ValueError,
+    as before) or graceful degradation (quarantine shrank capacity under a
+    request that used to fit: retire it as ``failed``)."""
+
+    def __init__(self, st, need: int):
+        super().__init__(need)
+        self.st = st
+        self.need = need
 
 __all__ = ["ServeEngine", "ContinuousBatchingEngine", "GenResult",
            "ServeSummary", "prefill_bucket"]
@@ -318,7 +333,8 @@ class ContinuousBatchingEngine:
                  min_bucket: int = 8, paged_attn: Optional[str] = None,
                  mesh=None, prefix_cache: Optional[bool] = None,
                  preemption: bool = True, prefill_cobatch: bool = True,
-                 adaptive=None):
+                 adaptive=None, faults=None, max_retries: int = 1,
+                 guardrail=None, kernel_fault_limit: int = 2):
         if getattr(model, "cache_needs_enc_len", False):
             raise NotImplementedError(
                 "continuous batching currently serves decoder-only LMs")
@@ -336,6 +352,19 @@ class ContinuousBatchingEngine:
                     "tau), not both mp= and adaptive=")
             mp = adaptive.plan
         self.mp = as_assignment(mp)
+        # the plan *object* (not just the assignment): the tau-anchored
+        # guardrail reads its solved loss-MSE budget (tau^2 E[g^2])
+        self._mp_plan = mp
+        # fault tolerance: injector hooks (tests/CI), bounded per-request
+        # retry budget through the resume machinery, the tau-anchored
+        # numerical guardrail, and the kernel-fault count past which fused
+        # paged attention degrades to the gather reference path
+        self.faults = faults
+        self.max_retries = int(max_retries)
+        self.guardrail = guardrail
+        self.kernel_fault_limit = int(kernel_fault_limit)
+        assert self.max_retries >= 0, max_retries
+        assert self.kernel_fault_limit >= 1, kernel_fault_limit
         if not paged and n_blocks is not None:
             raise ValueError("n_blocks only applies to paged mode; drop it "
                              "or remove paged=False")
@@ -480,6 +509,7 @@ class ContinuousBatchingEngine:
         quantized K/V bytes are plan-dependent, so blocks written under the
         old plan must not satisfy hits under the new one."""
         self.mp = as_assignment(plan)
+        self._mp_plan = plan
         self.prefill_chunk_step = get_serving_step(
             self.model, self._prefill_kind, mp=self.mp,
             mesh_layout=self.mesh_layout)
@@ -501,7 +531,7 @@ class ContinuousBatchingEngine:
         return st.digests
 
     def _admit(self, params, pool, sched: Scheduler, now: int,
-               evict=None) -> None:
+               evict=None, on_impossible=None) -> None:
         """Claim slots for admissible requests and emit prefill work items;
         no device work happens here — the step loop drives the chunks.
 
@@ -510,7 +540,13 @@ class ContinuousBatchingEngine:
         request, the scheduler's victim is evicted (freeing its slot +
         blocks; its prefix blocks stay cached) and admission retries —
         bounded by the live-slot count, since every round removes one
-        victim and equal priority never preempts."""
+        victim and equal priority never preempts.
+
+        ``on_impossible`` handles a request whose worst-case block need no
+        pool state can ever cover: when block quarantine shrank capacity
+        under a request that fit the pristine pool, the serve loop retires
+        it as ``failed`` instead of crashing the drain; a request that
+        never fit stays the fail-fast ValueError it always was."""
         gate = None
         if self.paged:
             def gate(r):
@@ -519,16 +555,25 @@ class ContinuousBatchingEngine:
                 mnew = st.remaining_new_tokens
                 need = pool.blocks_for_request(plen, mnew)
                 if need > pool.allocatable_blocks:
-                    # would block the queue forever — fail fast instead
-                    raise ValueError(
-                        f"request {r.rid} needs {need} KV blocks but the "
-                        f"pool has only {pool.allocatable_blocks}; raise "
-                        f"--n-blocks or shrink the request")
+                    # would block the queue forever — surface it instead
+                    raise _ImpossibleRequest(st, need)
                 return pool.can_admit(plen, mnew,
                                       digests=self._digests(pool, st))
         while True:
             while pool.n_free_slots:
-                st = sched.pop_admissible(now, gate)
+                try:
+                    st = sched.pop_admissible(now, gate)
+                except _ImpossibleRequest as exc:
+                    if (on_impossible is not None
+                            and pool.n_quarantined_blocks > 0
+                            and exc.need <= pool.blocks_per_shard - 1):
+                        on_impossible(exc.st)
+                        continue
+                    raise ValueError(
+                        f"request {exc.st.request.rid} needs {exc.need} KV "
+                        f"blocks but the pool has only "
+                        f"{pool.allocatable_blocks}; raise --n-blocks or "
+                        f"shrink the request") from None
                 if st is None:
                     break
                 req = st.request
@@ -586,13 +631,17 @@ class ContinuousBatchingEngine:
         valid = 0). Chunk order is priority, then shortest remaining
         prefill.
 
-        Returns ``(dt, nxt_dev, finished, n_tokens)``: the step's dispatch
-        wall time, the (n_slots,) *device* greedy-token vector (no host
-        readback — delivery is the caller's job), the list of ``(slot,
-        state)`` pairs whose prompt completed this tick (their next token
-        is row ``slot`` of ``nxt_dev``; its ``out_tokens`` entry holds a
-        ``None`` placeholder until the value lands on the host), and the
-        real prompt tokens processed."""
+        Returns ``(dt, nxt_dev, flag_dev, finished, n_tokens,
+        alloc_failed)``: the step's dispatch wall time, the (n_slots,)
+        *device* greedy-token vector (no host readback — delivery is the
+        caller's job) plus its non-finite tripwire flag vector, the list of
+        ``(slot, state)`` pairs whose prompt completed this tick (their
+        next token is row ``slot`` of ``nxt_dev``; its ``out_tokens`` entry
+        holds a ``None`` placeholder until the value lands on the host),
+        the real prompt tokens processed, and the states whose page
+        allocation failed this tick (dropped from the step; the caller
+        contains them). ``nxt_dev`` is None when every candidate's
+        allocation failed — no step ran."""
         cands = []
         for slot, st in sched.prefilling.items():
             start = st.prefill_pos
@@ -607,6 +656,25 @@ class ContinuousBatchingEngine:
         cands.sort(key=lambda c: (-c[1].request.priority,
                                   c[1].effective_prompt_len - c[1].prefill_pos,
                                   c[0]))
+        # materialize each candidate's pages first (a borrowed page in the
+        # write range is COW-forked here): a per-slot allocation failure —
+        # injected, or organic under quarantine pressure — drops only that
+        # slot from the step, never the whole tick
+        alloc_failed = []
+        if self.paged:
+            ok = []
+            for slot, st, start, take in cands:
+                try:
+                    if self.faults is not None:
+                        self.faults.on_alloc(slot)
+                    pool.ensure_range(slot, start, start + take)
+                except (InjectedFault, RuntimeError):
+                    alloc_failed.append(st)
+                    continue
+                ok.append((slot, st, start, take))
+            cands = ok
+            if not cands:
+                return 0.0, None, None, [], 0, alloc_failed
         if self.prefill_cobatch:
             # co-batch across buckets: pad every slot's chunk to the
             # largest bucket and run one step (per-row start/valid mask the
@@ -633,10 +701,6 @@ class ContinuousBatchingEngine:
                                           np.int32)[start:start + take]
             start_v[slot] = start
             valid_v[slot] = take
-            if self.paged:
-                # materialize the chunk's pages; a borrowed (shared) page
-                # in the write range is copy-on-write forked here
-                pool.ensure_range(slot, start, start + take)
         t0 = time.perf_counter()
         if self.paged:
             logits, pool.caches = self.prefill_chunk_step(
@@ -647,6 +711,7 @@ class ContinuousBatchingEngine:
                 params, pool.caches, jnp.asarray(tok), jnp.asarray(start_v),
                 jnp.asarray(valid_v))
         nxt_dev = greedy_next_token(logits)
+        flag_dev = nonfinite_rows(logits)
         dt = time.perf_counter() - t0
         if self.paged and self.prefix_cache:
             # index the blocks this chunk filled (after dispatch: any
@@ -661,7 +726,7 @@ class ContinuousBatchingEngine:
             if st.prefill_pos == st.effective_prompt_len:
                 st = sched.finish_prefill(slot, None, now)
                 finished.append((slot, st))
-        return dt, nxt_dev, finished, n_prefill_tokens
+        return dt, nxt_dev, flag_dev, finished, n_prefill_tokens, alloc_failed
 
     def serve(self, params, requests: Sequence[Request], *,
               sync: bool = False,
@@ -734,6 +799,16 @@ class ContinuousBatchingEngine:
         stall_s_run = 0.0
         stall_s: list = []            # per-decode-step injected prefill time
         adaptive_swaps: list = []     # plan swaps applied this drain
+        # ---- fault tolerance bookkeeping ----
+        inj = self.faults
+        grail = self.guardrail
+        faults_seen: dict = {}        # containment events by fault kind
+        faults_contained = faults_failed = fault_retries = 0
+        kernel_faults = 0             # step exceptions + hung steps
+        degraded = False              # fused paged attention -> gather
+        poison_watch: set = set()     # slots with an injected NaN in flight
+        last_fault_error: Optional[BaseException] = None
+        guardrail_swaps: list = []    # forced restores (numerical breach)
 
         def consult_adaptive():
             """Feed the controller this tick's counters; apply any swap.
@@ -763,20 +838,43 @@ class ContinuousBatchingEngine:
         q: "queue.Queue" = queue.Queue(maxsize=max_in_flight)
         consumer_err: list = []
 
-        def deliver(arr, deliveries):
+        def deliver(arr, flags, deliveries):
             """Fill each (state, idx, slot) placeholder from a host token
-            vector and fire the streaming callback."""
+            vector, check its non-finite tripwire flag, and fire the
+            streaming callback."""
             t_now = time.perf_counter()
             for st, idx, slot in deliveries:
-                st.out_tokens[idx] = int(arr[slot])
+                tok = int(arr[slot])
+                st.out_tokens[idx] = tok
+                if (flags is not None and bool(flags[slot])
+                        and st.fault_idx is None):
+                    # device-side tripwire: the logit row that produced this
+                    # token held NaN/inf. Stamp the first poisoned index;
+                    # the producer contains the request at the next tick
+                    # boundary (tokens before idx stay good).
+                    st.fault_idx = idx
+                    st.fault_kind = "nonfinite_logits"
                 if idx == 0:
                     # honest TTFT, stamped at *delivery*: wall time from
                     # admission until the first token value landed on the
                     # host — under async that includes any pipeline lag,
                     # which is exactly what a streaming client experiences
                     st.ttft_s = t_now - st.wall_admitted
-                if on_token is not None and not consumer_err:
-                    on_token(st.request.rid, idx, st.out_tokens[idx])
+                if inj is not None:
+                    try:
+                        inj.on_deliver(st.request.rid, slot)
+                    except InjectedFault:
+                        # injected consumer error: contained per-request —
+                        # the pinned user-callback contract (cancel all and
+                        # re-raise) applies to *user* exceptions only
+                        if st.fault_idx is None:
+                            st.fault_idx = idx
+                            st.fault_kind = "consumer_error"
+                        continue
+                suppressed = (st.fault_idx is not None
+                              and idx >= st.fault_idx)
+                if on_token is not None and not consumer_err and not suppressed:
+                    on_token(st.request.rid, idx, tok)
 
         def consume():
             nonlocal n_readbacks
@@ -795,12 +893,12 @@ class ContinuousBatchingEngine:
                         stop = True
                         break
                     batch.append(more)
-                arrs = jax.device_get([tok for tok, _ in batch])
+                arrs = jax.device_get([(tok, flg) for tok, flg, _ in batch])
                 n_readbacks += 1
                 readback_sizes.append(len(batch))
-                for (_, dl), arr in zip(batch, arrs):
+                for (_, _, dl), (arr, flg) in zip(batch, arrs):
                     try:
-                        deliver(arr, dl)
+                        deliver(arr, flg, dl)
                     except BaseException as e:  # noqa: BLE001
                         # keep draining so the producer never deadlocks on a
                         # full queue; re-raised from serve() after the join
@@ -820,18 +918,26 @@ class ContinuousBatchingEngine:
                                         name="serve-consumer", daemon=True)
             consumer.start()
 
-        def emit(nxt_dev, deliveries):
+        def emit(nxt_dev, flag_dev, deliveries):
             nonlocal host_blocked_s, n_readbacks, inflight_peak
             if sync:
                 t0 = time.perf_counter()
                 arr = np.asarray(nxt_dev)   # blocks on the device step
+                flg = None if flag_dev is None else np.asarray(flag_dev)
                 host_blocked_s += time.perf_counter() - t0
                 n_readbacks += 1
                 readback_sizes.append(1)
-                deliver(arr, deliveries)
+                try:
+                    deliver(arr, flg, deliveries)
+                except BaseException as e:  # noqa: BLE001 — user on_token
+                    # same graceful shutdown as async mode: record the
+                    # error, finish the drain (slots freed, pool books
+                    # settled and reconciled), re-raise after
+                    consumer_err.append(e)
             else:
                 t0 = time.perf_counter()
-                q.put((nxt_dev, deliveries))  # blocks only at max_in_flight
+                # blocks only at max_in_flight
+                q.put((nxt_dev, flag_dev, deliveries))
                 host_blocked_s += time.perf_counter() - t0
                 inflight_peak = max(inflight_peak, q.qsize())
 
@@ -850,6 +956,116 @@ class ContinuousBatchingEngine:
             pool.free_slot(st.slot)
             sched.preempt(st, now)
             return True
+
+        # ---- fault containment ----
+        def flush_placeholders(st):
+            """Wait out the consumer's in-flight deliveries for one state:
+            retry resumes from prompt + tokens-so-far, so every committed
+            placeholder must hold a real value before truncation. False on
+            shutdown (consumer error) — nothing more will land."""
+            while any(t is None for t in st.out_tokens):
+                if consumer_err:
+                    return False
+                if sync:
+                    # sync delivers inline; a residual None means the emit
+                    # that would have filled it never ran — unreachable
+                    # outside shutdown, but never spin on it
+                    return False
+                time.sleep(2e-4)
+            return True
+
+        def maybe_degrade():
+            """Past ``kernel_fault_limit`` step faults, fall back from the
+            fused paged-attention kernel to the gather reference path: a
+            dispatch switch through the ``get_serving_step`` memo (the key
+            includes ``paged_attn``), never a mid-drain recompile — and the
+            parity matrix pins fused/gather greedy tokens bit-identical, so
+            the degraded drain's tokens don't change."""
+            nonlocal degraded
+            if (not degraded and self.paged and self.paged_attn == "fused"
+                    and kernel_faults >= self.kernel_fault_limit):
+                degraded = True
+                self.paged_attn = "gather"
+                self.decode_step = get_serving_step(
+                    self.model, "paged_decode", mp=self.mp,
+                    paged_attn="gather", donate=self._donate,
+                    mesh_layout=self.mesh_layout)
+
+        def contain(st, kind=None, quarantine=None):
+            """Contain one faulted request: settle its in-flight
+            deliveries, truncate its tokens to the last-known-good prefix,
+            quarantine its KV pages when the fault may have poisoned them,
+            and either requeue it for a bounded retry (re-prefilling prompt
+            + surviving tokens through the bit-exact resume path, so a
+            retried request that completes matches a fault-free run) or
+            retire it ``failed`` with the partial tokens."""
+            nonlocal faults_contained, faults_failed, fault_retries
+            if st.status == WAITING:
+                return              # already contained this sweep
+            kind = kind or st.fault_kind or "fault"
+            if not flush_placeholders(st):
+                return              # shutting down; apply_control retires
+            was_done = st.status == DONE
+            if was_done and st.result_status not in ("ok", "retried"):
+                return              # cancelled/timed out: terminal
+            faults_seen[kind] = faults_seen.get(kind, 0) + 1
+            if st.fault_idx is not None:
+                # drop the poisoned suffix (placeholders included — flush
+                # guaranteed values landed, truncation regrows the step debt
+                # through remaining_new_tokens)
+                del st.out_tokens[st.fault_idx:]
+            if quarantine is None:
+                quarantine = kind in ("nonfinite_logits", "nan_page")
+            if st.status in (PREFILLING, RUNNING):
+                if st.slot in poison_watch:
+                    # an injected NaN is in flight for this slot: whatever
+                    # fault got here first (alloc failure, step exception),
+                    # its pages are poisoned — releasing them to the free
+                    # list would leak the NaN into reallocated requests
+                    quarantine = True
+                poison_watch.discard(st.slot)
+                if self.paged and quarantine:
+                    # the slot's pages may hold NaN/inf: pull every one out
+                    # of circulation (de-indexed, COW-forked away from any
+                    # borrower, never returned to the free list)
+                    pool.quarantine_slot(st.slot)
+                pool.free_slot(st.slot)
+            retry = (st.n_retries < self.max_retries
+                     and kind != "consumer_error")
+            if retry:
+                if was_done:
+                    # the flag landed after deadline retirement: un-retire
+                    # and redo the poisoned tail
+                    retired.remove(st)
+                sched.requeue_for_retry(st, now)
+                fault_retries += 1
+                faults_contained += 1
+            else:
+                faults_failed += 1
+                st.fault_kind = kind
+                if was_done:
+                    st.result_status = "failed"
+                else:
+                    retired.append(sched.retire(st, now, "failed"))
+
+        def apply_faults():
+            """Producer-side containment sweep, run at tick boundaries:
+            contain every request the consumer's tripwire (or an injected
+            delivery fault) has stamped since the last sweep."""
+            hit = [st for st in sched.states.values()
+                   if st.fault_idx is not None and st.status != WAITING]
+            for st in hit:
+                contain(st)
+
+        def impossible(st):
+            """Quarantine shrank the pool below this request's worst-case
+            block need: fail it gracefully instead of crashing the drain."""
+            nonlocal faults_failed
+            faults_seen["impossible_request"] = (
+                faults_seen.get("impossible_request", 0) + 1)
+            faults_failed += 1
+            sched.remove_waiting(st.request.rid)
+            retired.append(sched.retire(st, now, "failed"))
 
         # ---- control plane: cancellation / timeouts / shutdown ----
         def cancel_live(st, status, now):
@@ -881,14 +1097,29 @@ class ContinuousBatchingEngine:
 
         t_start = time.perf_counter()
         try:
-            while sched.has_work():
+            while True:
+                if not sched.has_work():
+                    # drain-end pipeline flush: a tripwire flag still in
+                    # flight can re-queue a retry — settle every in-flight
+                    # delivery, sweep once more, and only then stop
+                    for st in list(retired):
+                        flush_placeholders(st)
+                    apply_faults()
+                    if not sched.has_work():
+                        break
                 apply_control(now)
                 if not sched.has_work():
-                    break
+                    continue
+                if inj is not None:
+                    inj.tick(now)
+                apply_faults()
+                if not sched.has_work():
+                    continue
                 if self.adaptive is not None:
                     consult_adaptive()
                 self._admit(params, pool, sched, now,
-                            evict if self.preemption else None)
+                            evict if self.preemption else None,
+                            on_impossible=impossible)
                 peak_queue = max(peak_queue, sched.queue_depth)
                 # prefill phase — TTFT-aware arbitration: prefill freely
                 # while nothing is decoding, else at most chunk_budget chunk
@@ -898,8 +1129,31 @@ class ContinuousBatchingEngine:
                                             or chunks_this_tick
                                             < self.chunk_budget):
                     was_decoding = bool(sched.running)
-                    dt, nxt_dev, finished, n_tok = self._prefill_tick(
-                        params, pool, sched, now)
+                    try:
+                        if (inj is not None
+                                and inj.on_step("prefill") == "hung"):
+                            kernel_faults += 1
+                            maybe_degrade()
+                        (dt, nxt_dev, flag_dev, finished, n_tok,
+                         alloc_failed) = self._prefill_tick(
+                            params, pool, sched, now)
+                    except InjectedFault as e:
+                        # step blew up before any cache write: contain every
+                        # prefilling slot (bounded retry re-prefills from
+                        # scratch, so no page can be half-written)
+                        last_fault_error = e
+                        kernel_faults += 1
+                        maybe_degrade()
+                        for st in list(sched.prefilling.values()):
+                            contain(st, kind="step_exception",
+                                    quarantine=False)
+                        chunks_this_tick += 1
+                        continue
+                    for st in alloc_failed:
+                        contain(st, kind="alloc_failure", quarantine=False)
+                    if nxt_dev is None:     # every candidate's alloc failed
+                        chunks_this_tick += 1
+                        continue
                     prefill_chunks += 1
                     prefill_tokens += n_tok
                     chunks_this_tick += 1
@@ -923,7 +1177,7 @@ class ContinuousBatchingEngine:
                                 (st, len(st.out_tokens) - 1, slot))
                         cur_tok = merge_first_tokens(cur_tok, nxt_dev,
                                                      jnp.asarray(mask))
-                        emit(nxt_dev, deliveries)
+                        emit(nxt_dev, flag_dev, deliveries)
                         for slot, st in finished:
                             if st.done:          # max_new_tokens == 1
                                 retired.append(sched.retire(st, now))
@@ -931,16 +1185,29 @@ class ContinuousBatchingEngine:
                     # a finished 1-token request frees its slot immediately:
                     # let a queued request claim it this same tick
                     self._admit(params, pool, sched, now,
-                                evict if self.preemption else None)
+                                evict if self.preemption else None,
+                                on_impossible=impossible)
                 if sched.running:
                     # fresh array every tick: jnp.asarray may be zero-copy
                     # on CPU, and an in-flight step from a previous tick
                     # could still alias a reused buffer we'd be zeroing
                     pos_host = np.zeros((self.n_slots,), np.int32)
+                    alloc_bad = []
                     for slot, st in sched.running.items():
                         pos_host[slot] = st.next_pos
                         if self.paged:
-                            pool.ensure_block(slot, st.next_pos)
+                            try:
+                                if inj is not None:
+                                    inj.on_alloc(slot)
+                                pool.ensure_block(slot, st.next_pos)
+                            except (InjectedFault, RuntimeError) as e:
+                                last_fault_error = e
+                                alloc_bad.append(st)
+                    for st in alloc_bad:
+                        contain(st, kind="alloc_failure", quarantine=False)
+                    if not sched.running:   # everyone's page alloc failed
+                        now += 1
+                        continue
                     # live tokens after this step: everything written so far
                     # (next_pos) plus the write this step performs
                     live_now = sum(st.next_pos + 1
@@ -956,33 +1223,132 @@ class ContinuousBatchingEngine:
                             1 for s in range(self.n_slots)
                             if pages.get(s, 0) < pool.max_blocks)
                         attn_pages_gather += self.n_slots * pool.max_blocks
-                    t0 = time.perf_counter()
-                    if t_first_decode is None:
-                        t_first_decode = t0
+                    bt = None
                     if self.paged:
                         # decode sees block tables only for *running* rows:
                         # a slot mid-prefill owns real blocks, and the
                         # vacant-row garbage write must go to the trash
                         # block, not into K/V its earlier chunks wrote
-                        bt = pool.block_tables.copy()
+                        bt_host = pool.block_tables.copy()
                         for s in range(self.n_slots):
                             if s not in sched.running:
-                                bt[s] = -1
-                        logits, pool.caches = self.decode_step(
-                            params, pool.caches, cur_tok,
-                            jnp.asarray(pos_host), jnp.asarray(bt))
-                    else:
-                        logits, pool.caches = self.decode_step(
-                            params, pool.caches, cur_tok,
-                            jnp.asarray(pos_host))
+                                bt_host[s] = -1
+                        bt = jnp.asarray(bt_host)
+                    # injected numeric poisons for this step: a NaN'd KV
+                    # page is written *before* dispatch (the step reads it
+                    # back through attention), a NaN'd logit row is applied
+                    # to the step's output below
+                    nan_rows = None
+                    if inj is not None:
+                        for spec in inj.take_poisons():
+                            slots = sorted(sched.running)
+                            slot = (spec.slot if spec.slot in sched.running
+                                    else slots[0])
+                            if spec.kind == "nan_page" and self.paged:
+                                row = pool.block_tables[slot]
+                                live = [int(b) for b in row
+                                        if int(b) >= 0
+                                        and int(b) % pool.blocks_per_shard]
+                                if live:
+                                    blk = live[min(spec.page, len(live) - 1)]
+                                    pool.poison_block(blk)
+                                    poison_watch.add(slot)
+                            else:   # nan_logits (nan_page degrades to it
+                                    # in dense mode — no pages to poison)
+                                if nan_rows is None:
+                                    nan_rows = np.zeros((self.n_slots,),
+                                                        bool)
+                                nan_rows[slot] = True
+                                poison_watch.add(slot)
+                    shadow = None
+                    if (grail is not None and self.mp
+                            and grail.restored_at is None
+                            and n_steps % grail.every == 0):
+                        # tau-anchored shadow: one high-precision decode
+                        # step over the same inputs before the real step
+                        # touches them (donate=False — its cache writes are
+                        # discarded), MSE'd below against the active plan's
+                        # logits for one sampled live row
+                        rows = sorted(sched.running)
+                        grail_row = rows[(n_steps // grail.every)
+                                         % len(rows)]
+                        ref_step = get_serving_step(
+                            self.model,
+                            "paged_decode" if self.paged else "decode",
+                            mp=None,
+                            paged_attn=(self.paged_attn if self.paged
+                                        else None),
+                            donate=False, mesh_layout=self.mesh_layout)
+                        if self.paged:
+                            s_logits, _ = ref_step(
+                                params, pool.caches, cur_tok,
+                                jnp.asarray(pos_host), bt)
+                        else:
+                            s_logits, _ = ref_step(
+                                params, pool.caches, cur_tok,
+                                jnp.asarray(pos_host))
+                        shadow = (s_logits, grail_row)
+                    t0 = time.perf_counter()
+                    if t_first_decode is None:
+                        t_first_decode = t0
+                    try:
+                        if (inj is not None
+                                and inj.on_step("decode") == "hung"):
+                            kernel_faults += 1
+                            maybe_degrade()
+                        if self.paged:
+                            logits, pool.caches = self.decode_step(
+                                params, pool.caches, cur_tok,
+                                jnp.asarray(pos_host), bt)
+                        else:
+                            logits, pool.caches = self.decode_step(
+                                params, pool.caches, cur_tok,
+                                jnp.asarray(pos_host))
+                    except InjectedFault as e:
+                        # the step never dispatched — caches are intact;
+                        # contain every running request (bounded retry
+                        # re-prefills prompt + tokens-so-far)
+                        last_fault_error = e
+                        kernel_faults += 1
+                        maybe_degrade()
+                        for st in list(sched.running.values()):
+                            contain(st, kind="step_exception",
+                                    quarantine=False)
+                        now += 1
+                        continue
+                    if shadow is not None:
+                        s_logits, grail_row = shadow
+                        # fp32 logit MSE for the sampled row — one blocking
+                        # scalar readback per `every` steps. A NaN MSE (a
+                        # poison fault, not a quantization breach) never
+                        # trips the comparison.
+                        mse = float(shadow_logit_mse(logits, s_logits,
+                                                     grail_row))
+                        budget = grail.budget_for(self._mp_plan)
+                        if grail.observe_mse(now, mse, budget):
+                            # measured loss-MSE breached margin * budget —
+                            # eq. 23's tau constraint, enforced live: force
+                            # a restore to the base plan at this boundary
+                            if self.adaptive is not None:
+                                self._swap_plan(
+                                    self.adaptive.force_restore(now))
+                            else:
+                                self._swap_plan(None)
+                            guardrail_swaps.append(
+                                {"step": int(now), "mse": mse,
+                                 "budget": budget})
+                    if nan_rows is not None and nan_rows.any():
+                        logits = poison_logit_rows(logits,
+                                                   jnp.asarray(nan_rows))
                     nxt_dev = greedy_next_token(logits)
+                    flag_dev = nonfinite_rows(logits)
                     cur_tok = nxt_dev[:, None]
                     deliveries = []
                     for slot in list(sched.running):
                         st = sched.running[slot]
                         deliveries.append((st, len(st.out_tokens), slot))
                         sched.record_token(slot, None)
-                    emit(nxt_dev, deliveries)
+                    emit(nxt_dev, flag_dev, deliveries)
                     decode_s += time.perf_counter() - t0
                     n_steps += 1
                     stall_s.append(stall_s_run)
@@ -994,6 +1360,17 @@ class ContinuousBatchingEngine:
                     for slot in list(sched.running):
                         st = sched.running[slot]
                         if st.done:
+                            if slot in poison_watch:
+                                # an injected NaN targeted this row: settle
+                                # its deliveries now so the tripwire flag
+                                # cannot lose the race against deadline
+                                # retirement (which frees the very pages
+                                # quarantine must capture)
+                                poison_watch.discard(slot)
+                                flush_placeholders(st)
+                                if st.fault_idx is not None:
+                                    contain(st)
+                                    continue
                             retired.append(sched.retire(st, now))
                             pool.free_slot(slot)
                     now += 1
@@ -1017,6 +1394,12 @@ class ContinuousBatchingEngine:
         t_drain_end = time.perf_counter()
         total_s = t_drain_end - t_start
         if consumer_err:
+            if self.paged:
+                # a callback error aborts mid-flight: slots were freed by
+                # the shutdown cancellations, but a delivery that died
+                # half-way can leave refcounts ahead of the tables — settle
+                # the books so the pool is reusable after the re-raise
+                pool.reconcile()
             raise consumer_err[0]
         if not sync and t_first_decode is not None:
             # async decode_s: the producer only measured dispatch time, so
@@ -1069,8 +1452,36 @@ class ContinuousBatchingEngine:
                                     if readback_sizes else 0.0),
             "steps_in_flight_peak": inflight_peak,
             "n_cancelled": sum(1 for st in retired
-                               if st.result_status != "ok"),
+                               if st.result_status in ("cancelled",
+                                                       "timeout")),
+            "n_failed": sum(1 for st in retired
+                            if st.result_status == "failed"),
+            "n_retried": sum(1 for st in retired
+                             if st.result_status == "retried"),
         }
+        counters["faults"] = {
+            "injected": dict(inj.fired) if inj is not None else {},
+            "seen": dict(faults_seen),
+            "contained": faults_contained,
+            "retries": fault_retries,
+            "failed": faults_failed,
+            "kernel_faults": kernel_faults,
+            "degraded_paged_attn": degraded,
+            "quarantined_blocks": (pool.quarantined_blocks
+                                   if self.paged else 0),
+            "last_error": (repr(last_fault_error)
+                           if last_fault_error is not None else None),
+        }
+        if grail is not None:
+            counters["guardrail"] = {
+                "every": grail.every,
+                "margin": grail.margin,
+                "checks": grail.checks,
+                "breaches": grail.breaches,
+                "last_mse": grail.last_mse,
+                "restored_at": grail.restored_at,
+                "swaps": list(guardrail_swaps),
+            }
         if self.adaptive is not None:
             counters["adaptive"] = {
                 "taus": list(self.adaptive.taus),

@@ -1,0 +1,241 @@
+"""Deterministic fault injection for the continuous serving stack.
+
+The paper's contract is a *bound* (predicted loss-MSE <= tau), but bounds
+are only as good as the runtime's ability to notice when reality violates
+them. This module is the test side of that story: a seedable, fully
+deterministic harness that injects every failure mode the engine's
+hardening must contain, so each one is reproducible in unit tests and CI.
+
+Fault classes (``FaultSpec.kind``):
+
+``step_exception``
+    The compiled step (decode or prefill, per ``phase``) raises before
+    dispatch. Donation is off in the continuous engine, so the pool's
+    caches are untouched; every affected request retries via the
+    preemption/resume machinery.
+``nan_page``
+    NaN-poison the physical KV block behind ``(slot, page)`` of the live
+    block table — the "corrupted shared page" scenario. Attention over the
+    poisoned page turns the row's logits non-finite, which the engine's
+    device-side tripwire flags on the next batched readback.
+``nan_logits``
+    NaN-poison one decode row's logits *after* the step — a saturating
+    output-projection stand-in. Caught by the same tripwire.
+``alloc_failure``
+    ``ensure_block`` / ``ensure_range`` raises for the targeted slot —
+    what a quarantine-shrunken pool does organically when reservations
+    outrun surviving capacity.
+``consumer_error`` / ``consumer_stall``
+    The delivery path (consumer thread / sync deliver) raises or sleeps —
+    a client that went away or stopped reading its stream.
+``hung_step``
+    The injector sleeps ``hang_s`` before the step dispatches, simulating
+    a hung device step. Counted as a kernel fault; repeated kernel faults
+    trigger the engine's fused -> gather paged-attention degradation.
+
+Injection points are host-side hooks the engine/pool already pass through
+(tick boundary, step dispatch, allocation, delivery), so the injector adds
+zero device work when idle and the fault schedule is anchored to the
+engine's deterministic step clock — ``step=k`` fires at the first
+opportunity at or after clock tick ``k``, exactly once per spec.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["FAULT_KINDS", "FaultSpec", "FaultInjector", "InjectedFault",
+           "poison_logit_rows"]
+
+FAULT_KINDS = ("step_exception", "nan_page", "nan_logits", "alloc_failure",
+               "consumer_error", "consumer_stall", "hung_step")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by injector hooks; carries the spec that fired."""
+
+    def __init__(self, msg: str, spec: "FaultSpec" = None):
+        super().__init__(msg)
+        self.spec = spec
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One scheduled fault. ``step`` is the engine's deterministic clock
+    tick at (or after) which the fault arms; each spec fires exactly once.
+    ``slot`` targets a decode row where that makes sense (``nan_page``,
+    ``nan_logits``, ``alloc_failure``, ``consumer_error``); -1 matches any.
+    ``page`` is the logical page ``nan_page`` poisons. ``phase`` scopes
+    ``step_exception``/``hung_step`` to ``"decode"`` or ``"prefill"``."""
+    kind: str
+    step: int = 0
+    slot: int = -1
+    page: int = 0
+    phase: str = "decode"
+    hang_s: float = 0.01
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"one of {FAULT_KINDS}")
+        if self.phase not in ("decode", "prefill"):
+            raise ValueError(f"phase must be decode|prefill: {self.phase!r}")
+        if self.kind == "nan_page" and self.slot < 0:
+            self.slot = 0            # a page poke needs a concrete target
+
+
+class FaultInjector:
+    """A deterministic schedule of :class:`FaultSpec` entries, consulted by
+    the engine at its host-side hook points. ``fired`` tallies what actually
+    triggered (kind -> count) so tests and CI can assert the schedule bit.
+    """
+
+    def __init__(self, specs: Sequence[FaultSpec]):
+        self.specs = [s if isinstance(s, FaultSpec) else FaultSpec(**s)
+                      for s in specs]
+        self._pending = list(self.specs)
+        self.fired: dict = {}
+        self.now = -1
+        # delivery hooks run on the consumer thread, the rest on the
+        # producer: one lock keeps the pending list race-free
+        self._lock = threading.Lock()
+
+    # ---- schedule construction ---------------------------------------
+    @classmethod
+    def parse(cls, spec_str: str) -> "FaultInjector":
+        """Build an injector from a CLI spec string::
+
+            kind@step=3,slot=0,page=1;kind2@step=5,...
+
+        Fields default as in :class:`FaultSpec`; values parse as int when
+        they look like one, float otherwise (``hang_s``), str for ``phase``.
+        """
+        specs = []
+        for part in spec_str.split(";"):
+            part = part.strip()
+            if not part:
+                continue
+            kind, _, rest = part.partition("@")
+            kw = {}
+            if rest:
+                for field in rest.split(","):
+                    k, eq, v = field.partition("=")
+                    k = k.strip()
+                    if not eq:
+                        # bare-number shorthand: 'nan_page@3' == step=3
+                        kw["step"] = int(k)
+                    elif k in ("phase",):
+                        kw[k] = v.strip()
+                    elif k in ("hang_s",):
+                        kw[k] = float(v)
+                    else:
+                        kw[k] = int(v)
+            specs.append(FaultSpec(kind=kind.strip(), **kw))
+        if not specs:
+            raise ValueError(f"empty fault spec {spec_str!r}")
+        return cls(specs)
+
+    @classmethod
+    def random(cls, seed: int, n_faults: int, *, max_step: int = 20,
+               n_slots: int = 4, max_pages: int = 4,
+               kinds: Sequence[str] = FAULT_KINDS) -> "FaultInjector":
+        """A seeded random schedule for property tests: ``n_faults`` specs
+        with kinds, steps, slots and pages drawn from a private PRNG —
+        same seed, same schedule, byte for byte."""
+        import random as _random
+        rng = _random.Random(seed)
+        specs = []
+        for _ in range(n_faults):
+            kind = rng.choice(list(kinds))
+            specs.append(FaultSpec(
+                kind=kind,
+                step=rng.randrange(max_step),
+                slot=rng.randrange(n_slots),
+                page=rng.randrange(max_pages),
+                phase=rng.choice(["decode", "prefill"]),
+                hang_s=0.001))
+        return cls(specs)
+
+    # ---- engine hooks -------------------------------------------------
+    def tick(self, now: int) -> None:
+        self.now = now
+
+    def _take(self, kind: str, *, phase: Optional[str] = None,
+              slot: Optional[int] = None) -> Optional[FaultSpec]:
+        """Pop the first pending spec of ``kind`` armed for the current
+        clock (``spec.step <= now``) matching the phase/slot filters."""
+        with self._lock:
+            for sp in self._pending:
+                if sp.kind != kind or sp.step > self.now:
+                    continue
+                if phase is not None and sp.phase != phase:
+                    continue
+                if slot is not None and sp.slot >= 0 and sp.slot != slot:
+                    continue
+                self._pending.remove(sp)
+                self.fired[kind] = self.fired.get(kind, 0) + 1
+                return sp
+        return None
+
+    def on_step(self, phase: str) -> Optional[str]:
+        """Before a step dispatches. Raises :class:`InjectedFault` for an
+        armed ``step_exception``; sleeps and returns ``"hung"`` for an
+        armed ``hung_step``; returns None otherwise."""
+        sp = self._take("hung_step", phase=phase)
+        if sp is not None:
+            time.sleep(sp.hang_s)
+            return "hung"
+        sp = self._take("step_exception", phase=phase)
+        if sp is not None:
+            raise InjectedFault(
+                f"injected {phase} step exception at tick {self.now}", sp)
+        return None
+
+    def on_alloc(self, slot: int) -> None:
+        """Before ``ensure_block``/``ensure_range`` for ``slot``."""
+        sp = self._take("alloc_failure", slot=slot)
+        if sp is not None:
+            raise InjectedFault(
+                f"injected allocation failure for slot {slot} at tick "
+                f"{self.now}", sp)
+
+    def take_poisons(self) -> list:
+        """Every armed ``nan_page``/``nan_logits`` spec, popped. The engine
+        applies them device-side at the tick boundary (pages) or to the
+        step's output logits (rows)."""
+        out = []
+        while True:
+            sp = self._take("nan_page") or self._take("nan_logits")
+            if sp is None:
+                return out
+            out.append(sp)
+
+    def on_deliver(self, rid: int, slot: int) -> None:
+        """In the delivery path, before the streaming callback. Sleeps for
+        an armed ``consumer_stall``; raises for ``consumer_error``."""
+        sp = self._take("consumer_stall", slot=slot)
+        if sp is not None:
+            time.sleep(sp.hang_s)
+        sp = self._take("consumer_error", slot=slot)
+        if sp is not None:
+            raise InjectedFault(
+                f"injected consumer error for rid {rid} at tick "
+                f"{self.now}", sp)
+
+    @property
+    def exhausted(self) -> bool:
+        return not self._pending
+
+
+@jax.jit
+def poison_logit_rows(logits, mask):
+    """NaN out the rows of ``logits`` (B, T, V) where ``mask`` (B,) is set —
+    the injector's logit-poison primitive, applied after the step so the
+    step's own numerics (and every other row) are untouched."""
+    return jnp.where(mask[:, None, None], jnp.nan,
+                     logits.astype(logits.dtype))

@@ -84,13 +84,23 @@ class RequestState:                  # never field-compare numpy token arrays
     admitted_step: int = -1
     first_token_step: int = -1        # engine clock when token 0 landed
     finished_step: int = -1
-    result_status: str = "ok"         # "ok" | "cancelled" | "timeout"
+    # "ok" | "cancelled" | "timeout" | "retried" (completed after >= 1
+    # fault retry) | "failed" (retry budget exhausted; tokens are the
+    # last-known-good prefix)
+    result_status: str = "ok"
     # preemption/resume: after an eviction the request re-prefills prompt +
     # everything it had generated (its *effective* prompt) and keeps
     # decoding where it left off
     resume_tokens: Optional[np.ndarray] = None
     n_preempted: int = 0
     digests: Optional[list] = None    # engine-cached prefix chain digests
+    # fault containment: the consumer's tripwire stamps the index of the
+    # first token produced from non-finite logits (tokens before it are
+    # good); the engine truncates there and retries via resume. fault_kind
+    # labels the cause for the counters.
+    fault_idx: Optional[int] = None
+    fault_kind: Optional[str] = None
+    n_retries: int = 0
     _seq: int = -1                    # submission order (queue tiebreak)
 
     @property
@@ -124,11 +134,17 @@ class RequestResult:
     ttft_s: float
     admitted_step: int
     finished_step: int
-    status: str = "ok"                # "ok" | "cancelled" | "timeout"
+    # "ok" | "cancelled" | "timeout" | "retried" | "failed" — "retried"
+    # means the request completed (all max_new_tokens, bit-identical to a
+    # fault-free run) after >= 1 fault-containment retry; "failed" means
+    # the retry budget ran out and ``tokens`` holds the last-known-good
+    # prefix produced before the fault
+    status: str = "ok"
     # engine clock tick at which the first token was produced; with arrival
     # this gives a deterministic step-clock TTFT (first_token_step -
     # arrival), the unit the adaptive-tau SLA benchmarks price
     first_token_step: int = -1
+    retries: int = 0                  # fault-containment retries consumed
 
 
 class Scheduler:
@@ -242,6 +258,37 @@ class Scheduler:
         self._enqueue(st)                 # original seq: FCFS slot preserved
         return st
 
+    # ---- fault containment ----
+    def requeue_for_retry(self, st: RequestState, now: int) -> RequestState:
+        """Bounded-retry resume after fault containment: like
+        :meth:`preempt`, but the engine has already waited out in-flight
+        deliveries, truncated the poisoned token tail (``fault_idx``) and
+        released the slot — all that remains here is rebuilding the
+        effective prompt from the surviving last-known-good prefix and
+        re-queueing. Because resume is bit-exact, a retried request that
+        completes is bit-identical to a fault-free run."""
+        assert st.status != WAITING, st.status
+        if self.prefilling.get(st.slot) is st:
+            del self.prefilling[st.slot]
+        if self.running.get(st.slot) is st:
+            del self.running[st.slot]
+        assert all(t is not None for t in st.out_tokens), (
+            f"rid {st.request.rid}: retried with undelivered tokens")
+        st.resume_tokens = np.concatenate([
+            np.asarray(st.request.tokens, np.int32),
+            np.asarray(st.out_tokens, np.int32)]) if st.out_tokens else None
+        st.digests = None
+        st.status = WAITING
+        st.slot = -1
+        st.prefill_pos = 0
+        if not st.out_tokens:             # first token itself was poisoned
+            st.first_token_step = -1
+        st.fault_idx = None
+        st.fault_kind = None
+        st.n_retries += 1
+        self._enqueue(st)
+        return st
+
     # ---- chunked prefill lifecycle ----
     def start_prefill(self, st: RequestState, slot: int, now: int,
                       start_at: int = 0) -> None:
@@ -310,6 +357,8 @@ class Scheduler:
             del self.prefilling[st.slot]
         st.status = DONE
         st.finished_step = now
+        if status == "ok" and st.n_retries > 0:
+            status = "retried"    # completed, but only after containment
         st.result_status = status
         return st
 
@@ -329,6 +378,7 @@ class Scheduler:
             finished_step=st.finished_step,
             status=st.result_status,
             first_token_step=st.first_token_step,
+            retries=st.n_retries,
         )
 
     def finish(self, st: RequestState, now: int) -> RequestResult:

@@ -276,6 +276,34 @@ def test_registry_rejects_wrong_fingerprint_and_calib_hash(tmp_path, calib):
     reg.find(arch, fp, calib_hash=None)
 
 
+def test_registry_skips_corrupted_bundle(tmp_path, calib, capsys):
+    """A truncated/zeroed artifact must not take the registry down: find()
+    warns at skip time and falls through to the next-freshest compatible
+    bundle; only when nothing valid remains does it raise, naming the
+    corrupted files."""
+    _, _, _, bundle = calib
+    reg = BundleRegistry(str(tmp_path / "reg"))
+    p1 = reg.put(bundle)
+    p2 = reg.put(bundle)                        # freshest candidate
+    old = os.path.getmtime(p2) - 100
+    os.utime(p1, (old, old))
+    with open(p2, "r+b") as f:                  # truncate mid-archive
+        f.truncate(os.path.getsize(p2) // 2)
+    arch = bundle.meta["arch"]
+    fp = bundle.meta["params_fingerprint"]
+    got = reg.find(arch, fp)
+    out = capsys.readouterr().out
+    assert "skipping corrupted bundle" in out and p2 in out
+    assert _plans_equal(got.solve(tau=0.02), bundle.solve(tau=0.02))
+    with open(p2, "wb"):                        # zero-byte artifact
+        pass
+    reg.find(arch, fp)
+    with open(p1, "wb"):                        # nothing valid left
+        pass
+    with pytest.raises(LookupError, match="unreadable"):
+        reg.find(arch, fp)
+
+
 def test_registry_put_requires_identity_meta(tmp_path, calib):
     _, _, _, bundle = calib
     stripped = dataclasses.replace(bundle, meta={})

@@ -368,10 +368,14 @@ def test_shutdown_drains_partial_results(model, params, prompts):
         assert len(r.tokens) >= 1            # prefill had already landed
 
 
-def test_on_token_error_cancels_and_reraises(model, params, prompts):
+@pytest.mark.parametrize("sync", [False, True])
+def test_on_token_error_cancels_and_reraises(model, params, prompts, sync):
     """An exception from the streaming callback acts as an implicit
-    shutdown: in-flight transfers drain (no producer deadlock), the error
-    re-raises from serve(), and the engine stays reusable."""
+    shutdown in *both* modes: in-flight transfers drain (no producer
+    deadlock), the error re-raises from serve(), the pool's books are
+    reconciled (every materialized block's refcount equals the number of
+    tables referencing it), and the engine stays reusable."""
+    from collections import Counter
     eng = ContinuousBatchingEngine(model, n_slots=2, max_len=32)
 
     def on_token(rid, idx, tok):
@@ -381,7 +385,14 @@ def test_on_token_error_cancels_and_reraises(model, params, prompts):
     reqs = [Request(rid=i, tokens=p, max_new_tokens=6)
             for i, p in enumerate(prompts[:2])]
     with pytest.raises(RuntimeError, match="client went away"):
-        eng.serve(params, reqs, on_token=on_token)
+        eng.serve(params, reqs, sync=sync, on_token=on_token)
+    # books settled by the error-drain reconcile: no stranded refcounts
+    pool = eng._pool
+    rep = pool.check_consistency()
+    assert rep["ok"], rep
+    mat = [int(x) for s in range(pool.n_slots)
+           for x in pool.block_tables[s] if x >= 0]
+    assert Counter(mat) == pool._ref
     # engine is not poisoned: a fresh drain on the same engine is exact
     ref = _oneshot_reference(model, params, prompts[:2], max_new=6)
     summ = eng.serve(params, reqs)
